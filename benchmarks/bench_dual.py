@@ -1,0 +1,79 @@
+"""Figures 4.1–4.3: primal-vs-dual step sizes, coordinates-vs-features noise,
+momentum + geometric averaging ablations (Chapter 4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_fn import gram, make_params
+from repro.core.solvers.base import Gram
+from repro.core.solvers.sdd import solve_sdd
+from repro.core.solvers.sgd import solve_sgd
+from repro.data.pipeline import regression_dataset
+
+from .common import Report
+
+
+def _setup(n=2000, seed=0):
+    data = regression_dataset("pol", seed=seed)
+    x, y = data["x"][:n], data["y"][:n]
+    p = make_params("matern32", lengthscale=2.0, signal=1.0, noise=0.1, d=x.shape[1])
+    op = Gram(x=x, params=p)
+    kmat = gram(p, x) + p.noise * jnp.eye(n)
+    v_star = jnp.linalg.solve(kmat, y)
+    return op, y, v_star, kmat, p
+
+
+def _knorm(w, kmat):
+    return float(jnp.sqrt(jnp.maximum(w @ (kmat @ w), 0.0)))
+
+
+def run(report: Report, full: bool = False):
+    op, y, v_star, kmat, p = _setup(4000 if full else 1500)
+    n = op.n
+
+    # --- Fig 4.1: primal vs dual stability vs (normalised) step size -----------
+    def primal_gd(steps, beta_n):
+        beta = beta_n / n
+        v = jnp.zeros_like(y)
+        for _ in range(steps):
+            g = op.mv_k(op.mv(v) - y)  # K(Kv + σ²v − y): primal gradient
+            v = v - beta * g
+        return v
+
+    def dual_gd(steps, beta_n):
+        beta = beta_n / n
+        a = jnp.zeros_like(y)
+        for _ in range(steps):
+            a = a - beta * (op.mv(a) - y)  # dual gradient (Eq. 4.14)
+        return a
+
+    for beta_n in (0.1, 1.0, 10.0, 50.0):
+        vp = primal_gd(150, beta_n)
+        vd = dual_gd(150, beta_n)
+        report.add("dual(F4.1)", f"primal β·n={beta_n}", "pol",
+                   k_err=_knorm(vp - v_star, kmat) if jnp.isfinite(vp).all() else float("inf"))
+        report.add("dual(F4.1)", f"dual   β·n={beta_n}", "pol",
+                   k_err=_knorm(vd - v_star, kmat) if jnp.isfinite(vd).all() else float("inf"))
+
+    # --- Fig 4.2: random features (additive noise) vs random coordinates -------
+    res_coord = solve_sdd(op, y, key=jax.random.PRNGKey(0), num_steps=10_000,
+                          batch_size=256, step_size_times_n=5.0)
+    res_feat = solve_sgd(op, y, key=jax.random.PRNGKey(0), num_steps=10_000,
+                         batch_size=256, num_features=100, step_size_times_n=0.5)
+    report.add("dual(F4.2)", "rand-coordinates", "pol",
+               k_err=_knorm(res_coord.solution - v_star, kmat),
+               rel_resid=float(res_coord.rel_residual.max()))
+    report.add("dual(F4.2)", "rand-features(SGD)", "pol",
+               k_err=_knorm(res_feat.solution - v_star, kmat),
+               rel_resid=float(res_feat.rel_residual.max()))
+
+    # --- Fig 4.3: momentum / averaging ablation ---------------------------------
+    for mom, avg, label in [(0.0, 1.0, "no-momentum"), (0.9, 1.0, "nesterov"),
+                            (0.9, None, "nesterov+geom-avg")]:
+        r = solve_sdd(op, y, key=jax.random.PRNGKey(1), num_steps=6_000,
+                      batch_size=256, step_size_times_n=5.0, momentum=mom,
+                      averaging=avg)
+        report.add("dual(F4.3)", label, "pol",
+                   k_err=_knorm(r.solution - v_star, kmat))

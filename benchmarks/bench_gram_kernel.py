@@ -1,0 +1,41 @@
+"""Pallas Gram-matvec kernel: block-shape sweep (VMEM footprint × arithmetic
+intensity trade) + correctness-vs-ref at each point. Runs in interpret mode on
+CPU, so the numbers reported are the *analytic* VMEM/intensity terms that drive
+TPU block choice; wall-clock ranking comes from real hardware."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_fn import make_params
+from repro.kernels.ops import gram_matvec
+from repro.kernels.ref import gram_matvec_ref
+
+from .common import Report, timed
+
+
+def _vmem_bytes(bm, bn, d, s):
+    # x tile + z tile + v tile + k tile + accumulator (fp32)
+    return 4 * (bm * d + bn * d + bn * s + bm * bn + bm * s)
+
+
+def run(report: Report, full: bool = False):
+    n, d, s = (2048, 8, 16) if not full else (8192, 8, 32)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n, s))
+    p = make_params("matern32", lengthscale=1.0, signal=1.0, d=d, noise=0.1)
+    ref = gram_matvec_ref(x / p.lengthscale, x / p.lengthscale, v,
+                          kind="matern32", signal=1.0, jitter=0.1)
+    for block in (128, 256, 512):
+        out, dt = timed(gram_matvec, p, x, v, jitter=0.1, block=block, interpret=True)
+        err = float(np.abs(np.asarray(out - ref)).max())
+        vmem = _vmem_bytes(block, block, d, s)
+        intensity = (2 * block * d + 2 * block * s) and (
+            (2.0 * block * block * (d + s + 8)) / (4.0 * (2 * block * d + 2 * block * s))
+        )
+        report.add("gram-kernel", f"block={block}", f"n={n}",
+                   max_err=err, vmem_kb=round(vmem / 1024, 1),
+                   flops_per_byte=round(intensity, 1),
+                   fits_vmem=vmem < 16 * 2**20)

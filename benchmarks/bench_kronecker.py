@@ -1,0 +1,64 @@
+"""Chapter 6: latent Kronecker efficiency — measured FLOP ratio vs the §6.2.6
+break-even formula, and LKGP vs standard iterative GP resource use."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_fn import make_params
+from repro.core.kronecker import (
+    break_even_density, lkgp_matvec_flops, lkgp_posterior, make_lkgp,
+)
+from repro.data.pipeline import grid_curves
+
+from .common import Report, timed
+
+
+def run(report: Report, full: bool = False):
+    # --- break-even accuracy (Table/formula §6.2.6) ---------------------------
+    for n1, n2 in [(64, 32), (128, 50), (256, 100)]:
+        rho_star = break_even_density(n1, n2)
+        lk, direct = lkgp_matvec_flops(n1, n2, rho_star)
+        report.add("kronecker(§6.2.6)", "break-even", f"{n1}x{n2}",
+                   rho_star=round(rho_star, 4), flop_ratio=round(lk / direct, 3))
+        for mult in (0.5, 2.0):
+            rho = min(1.0, rho_star * mult)
+            lk, direct = lkgp_matvec_flops(n1, n2, rho)
+            report.add("kronecker(§6.2.6)", f"rho={mult}·rho*", f"{n1}x{n2}",
+                       flop_ratio=round(lk / direct, 3))
+
+    # --- LKGP vs dense-matvec iterative GP on a masked grid --------------------
+    size = (96, 40) if not full else (512, 50)
+    data = grid_curves(n_configs=size[0], n_steps=size[1], density=0.7, seed=0)
+    mask = np.asarray(data["mask"])
+    n_obs = int(mask.sum())
+    p1 = make_params("matern52", lengthscale=1.0, signal=1.0, d=4)
+    p2 = make_params("matern52", lengthscale=1.0, signal=1.0, d=1)
+    gp = make_lkgp(p1, p2, data["grid1"], data["grid2"], data["mask"], 1e-2)
+    y_obs = data["curves"].reshape(-1)[jnp.asarray(np.nonzero(mask.reshape(-1))[0])]
+    (mean, samples), dt_lk = timed(lkgp_posterior, gp, y_obs - y_obs.mean(),
+                                   jax.random.PRNGKey(0), num_samples=8,
+                                   max_iters=200)
+    report.add("kronecker(§6.3)", "LKGP", f"{size[0]}x{size[1]}",
+               n_obs=n_obs, seconds=round(dt_lk, 2),
+               density=round(n_obs / (size[0] * size[1]), 3),
+               rho_star=round(break_even_density(*size), 3))
+
+    # standard iterative GP on the same observations (dense matvec on n_obs)
+    from repro.core.pathwise import posterior_functions
+    from repro.core.solvers.cg import solve_cg
+
+    grid_x = np.repeat(np.asarray(data["grid1"]), size[1], axis=0)
+    grid_t = np.tile(np.asarray(data["grid2"]), (size[0], 1))
+    x_all = jnp.asarray(np.concatenate([grid_x, grid_t], axis=1))
+    x_obs = x_all[jnp.asarray(np.nonzero(mask.reshape(-1))[0])]
+    p_flat = make_params("matern52", lengthscale=1.0, signal=1.0, noise=1e-1, d=5)
+    pf, dt_std = timed(posterior_functions, p_flat, x_obs, y_obs - y_obs.mean(),
+                       jax.random.PRNGKey(1), num_samples=8, num_features=1024,
+                       solver=solve_cg, max_iters=200)
+    report.add("kronecker(§6.3)", "standard-iterGP", f"{size[0]}x{size[1]}",
+               n_obs=n_obs, seconds=round(dt_std, 2),
+               lkgp_speedup=round(dt_std / max(dt_lk, 1e-9), 2))

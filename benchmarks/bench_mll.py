@@ -1,0 +1,61 @@
+"""Chapter 5 (Fig 5.1 + early stopping): pathwise gradient estimator + warm
+starting — total inner-solver iterations and wall time per MLL optimisation."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.gp import exact_mll
+from repro.core.kernels_fn import make_params
+from repro.core.mll import optimize_mll
+from repro.data.pipeline import regression_dataset
+
+from .common import Report
+
+
+def run(report: Report, full: bool = False):
+    data = regression_dataset("elevators", seed=0)
+    n = 4000 if full else 1200
+    x, y = data["x"][:n], data["y"][:n]
+    d = x.shape[1]
+    p0 = make_params("matern32", lengthscale=2.0, signal=0.5, noise=0.5, d=d)
+    kw = dict(num_steps=12, lr=0.08, num_probes=8, max_iters=600, tol=1e-3)
+
+    rows = {}
+    for est in ("hutchinson", "pathwise"):
+        for warm in (False, True):
+            t0 = time.time()
+            st = optimize_mll(p0, x, y, jax.random.PRNGKey(0), warm_start=warm,
+                              estimator=est, **kw)
+            dt = time.time() - t0
+            mll = float(exact_mll(st.params, x, y)) / n
+            label = f"{est}{'+warm' if warm else ''}"
+            rows[label] = st.total_solver_iters
+            report.add("mll(F5.1)", label, "elevators",
+                       solver_iters=st.total_solver_iters, seconds=round(dt, 1),
+                       mll_per_n=round(mll, 4))
+    base = rows.get("hutchinson", 1)
+    best = rows.get("pathwise+warm", base)
+    report.add("mll(F5.1)", "speedup", "elevators",
+               iteration_reduction=round(base / max(best, 1), 2))
+
+    # §5.4 early stopping: residual after a fixed budget, warm vs cold
+    from repro.core.solvers.base import Gram
+    from repro.core.solvers.cg import solve_cg
+
+    p = make_params("matern32", lengthscale=1.5, signal=1.0, noise=0.2, d=d)
+    op = Gram(x=x, params=p)
+    cold = solve_cg(op, y, max_iters=20, tol=0.0)
+    # warm start from a cheap preliminary solve at slightly different θ
+    import dataclasses
+    p_near = dataclasses.replace(p, log_lengthscale=p.log_lengthscale + 0.05)
+    prelim = solve_cg(Gram(x=x, params=p_near), y, max_iters=60, tol=0.0)
+    warm = solve_cg(op, y, prelim.solution, max_iters=20, tol=0.0)
+    report.add("mll-earlystop(§5.4)", "cold-20it", "elevators",
+               rel_resid=float(cold.rel_residual.max()))
+    report.add("mll-earlystop(§5.4)", "warm-20it", "elevators",
+               rel_resid=float(warm.rel_residual.max()),
+               reduction=round(float(cold.rel_residual.max())
+                               / max(float(warm.rel_residual.max()), 1e-12), 1))

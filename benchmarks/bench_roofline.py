@@ -1,0 +1,32 @@
+"""§Roofline: render the dry-run JSONL (launch/dryrun.py --out) as the roofline
+table — per (arch × shape × mesh): three terms, dominant bottleneck, MFU."""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import Report
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun.jsonl")
+
+
+def run(report: Report, full: bool = False, path: str = DEFAULT_PATH):
+    if not os.path.exists(path):
+        report.add("roofline", "missing", "-",
+                   note=f"run `python -m repro.launch.dryrun --all --both-meshes --out {path}` first")
+        return
+    for line in open(path):
+        r = json.loads(line)
+        tag = f"{r['arch']}×{r['shape']}"
+        if r["status"] != "ok":
+            report.add("roofline", r["mesh"], tag, status=r["status"])
+            continue
+        rf = r["roofline"]
+        report.add(
+            "roofline", r["mesh"], tag,
+            compute_s=round(rf["compute_s"], 4), memory_s=round(rf["memory_s"], 4),
+            collective_s=round(rf["collective_s"], 4), dominant=rf["dominant"],
+            mfu=rf["mfu"], useful=rf["useful_fraction"],
+            hbm_gb=r["hbm_per_device"]["total_gb"],
+        )

@@ -1,0 +1,62 @@
+"""Shared benchmark plumbing: timing, result tables, and dataset sizing.
+
+CPU container note: wall-clock numbers here are CPU numbers — meaningful for
+*relative* solver comparisons (the paper's tables compare methods under equal
+budgets) but not for TPU-absolute claims, which come from the §Roofline dry-run.
+Sizes default to scaled-down-but-shaped-like-the-paper datasets; pass --full for
+paper-sized n where feasible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class Row:
+    table: str
+    method: str
+    dataset: str
+    metrics: dict
+
+    def line(self) -> str:
+        ms = "  ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                       for k, v in self.metrics.items())
+        return f"{self.table:18s} {self.dataset:14s} {self.method:14s} {ms}"
+
+
+class Report:
+    def __init__(self):
+        self.rows: list[Row] = []
+
+    def add(self, table: str, method: str, dataset: str, **metrics):
+        row = Row(table, method, dataset, metrics)
+        self.rows.append(row)
+        print("  " + row.line(), flush=True)
+
+    def dump(self, path: Optional[str] = None):
+        if path:
+            with open(path, "w") as f:
+                for r in self.rows:
+                    f.write(json.dumps(dataclasses.asdict(r)) + "\n")
+
+
+def timed(fn: Callable, *args, **kwargs):
+    t0 = time.time()
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    return out, time.time() - t0
+
+
+def rmse(a, b) -> float:
+    return float(np.sqrt(np.mean((np.asarray(a) - np.asarray(b)) ** 2)))
+
+
+def nll_gaussian(y, mu, var) -> float:
+    y, mu, var = np.asarray(y), np.asarray(mu), np.maximum(np.asarray(var), 1e-6)
+    return float(np.mean(0.5 * np.log(2 * np.pi * var) + 0.5 * (y - mu) ** 2 / var))

@@ -1,0 +1,50 @@
+"""Benchmark harness entry point: `PYTHONPATH=src python -m benchmarks.run [--full]
+[--only bench_solvers,...]`. One module per paper table/figure (DESIGN.md §7)."""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+from .common import Report
+
+BENCHES = [
+    "bench_solvers",  # Table 3.1 / 4.1
+    "bench_dual",  # Figures 4.1–4.3
+    "bench_mll",  # Figure 5.1 + §5.4
+    "bench_kronecker",  # Chapter 6
+    "bench_thompson",  # Figures 3.7 / 4.4
+    "bench_molecules",  # Table 4.2
+    "bench_gram_kernel",  # Pallas tile sweep
+    "bench_roofline",  # §Roofline (reads dry-run JSONL)
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-sized datasets")
+    ap.add_argument("--only", default=None, help="comma-separated bench names")
+    ap.add_argument("--out", default=None, help="dump rows as JSONL")
+    args = ap.parse_args(argv)
+
+    names = args.only.split(",") if args.only else BENCHES
+    report = Report()
+    failures = 0
+    for name in names:
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run(report, full=args.full)
+            print(f"=== {name} done in {time.time()-t0:.0f}s ===")
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+    report.dump(args.out)
+    print(f"\n{len(report.rows)} rows; {failures} bench failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

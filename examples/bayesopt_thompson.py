@@ -1,0 +1,61 @@
+"""Large-scale parallel Thompson sampling (§3.3.2 / §4.3.2).
+
+    PYTHONPATH=src python examples/bayesopt_thompson.py [--steps 5] [--acq 64]
+
+Maximises a random GP-prior draw on [0,1]^d using batched posterior-sample
+acquisition; each Thompson step solves ONE batched linear system (pathwise
+conditioning) with stochastic dual descent, then maximises every sampled function
+with multi-start gradient ascent.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_fn import make_params
+from repro.core.rff import sample_prior
+from repro.core.solvers.sdd import solve_sdd
+from repro.core.thompson import ThompsonState, thompson_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--d", type=int, default=4)
+    ap.add_argument("--n0", type=int, default=1000)
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--acq", type=int, default=64)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(0)
+    params = make_params("matern32", lengthscale=0.25, signal=1.0, noise=0.001,
+                         d=args.d)
+    target = sample_prior(params, jax.random.PRNGKey(42), 1, 4096, args.d)
+
+    def objective(x):
+        return target(x)[:, 0]
+
+    x0 = jax.random.uniform(jax.random.fold_in(key, 1), (args.n0, args.d))
+    y0 = objective(x0)
+    state = ThompsonState(x=x0, y=y0, best=float(y0.max()))
+    print(f"initial best over {args.n0} random points: {state.best:.4f}")
+
+    for step in range(args.steps):
+        t0 = time.time()
+        state = thompson_step(
+            params, state, objective, jax.random.fold_in(key, 100 + step),
+            acq_batch=args.acq, num_candidates=2048, num_top=8, ascent_steps=30,
+            solver=solve_sdd,
+            solver_kwargs=dict(num_steps=4000, batch_size=256, step_size_times_n=2.0),
+        )
+        print(f"step {step}: best={state.best:.4f}  n={state.x.shape[0]}  "
+              f"({time.time()-t0:.1f}s)")
+
+    xr = jax.random.uniform(jax.random.fold_in(key, 999),
+                            (args.steps * args.acq, args.d))
+    print(f"random-search control at equal budget: "
+          f"{float(jnp.maximum(objective(xr).max(), y0.max())):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Molecular binding-affinity regression with a Tanimoto-kernel GP + SDD (§4.3.3).
+
+    PYTHONPATH=src python examples/molecules.py
+
+Count-fingerprint molecules, Tanimoto (Jaccard) covariance, stochastic dual
+descent for the representer weights — the Chapter 4 demonstration that exact-GP
+inference scales to large sparse-input tasks.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kernels_fn import TANIMOTO, gram, make_params
+from repro.core.solvers.base import Gram
+from repro.core.solvers.sdd import solve_sdd
+from repro.data.pipeline import molecule_fingerprints
+
+
+def r2(y, pred):
+    y, pred = np.asarray(y), np.asarray(pred)
+    return float(1 - ((y - pred) ** 2).sum() / ((y - y.mean()) ** 2).sum())
+
+
+def main():
+    data = molecule_fingerprints(n=4096, dim=1024, seed=0)
+    p = make_params(TANIMOTO, signal=1.0, noise=0.3)
+    op = Gram(x=data["x"], params=p)
+    t0 = time.time()
+    res = solve_sdd(op, data["y"], key=jax.random.PRNGKey(0), num_steps=8000,
+                    batch_size=256, step_size_times_n=2.0)
+    dt = time.time() - t0
+    pred = gram(p, data["x_test"], data["x"]) @ res.solution
+    print(f"Tanimoto-GP via SDD: n={data['x'].shape[0]}  {dt:.1f}s  "
+          f"rel-resid={float(res.rel_residual.max()):.2e}")
+    print(f"test R² = {r2(data['y_test'], pred):.3f} "
+          f"(mean-predictor baseline: 0.000)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart: GP regression with iterative solvers + pathwise conditioning.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Fits a GP to 10k synthetic observations with three linear-system solvers (CG, SGD,
+SDD — Chapters 2/3/4), draws posterior function samples via pathwise conditioning,
+and compares them against the exact O(n³) GP on a held-out set.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gp import exact_posterior
+from repro.core.kernels_fn import make_params
+from repro.core.pathwise import posterior_functions
+from repro.core.solvers.cg import solve_cg
+from repro.core.solvers.sdd import solve_sdd
+from repro.core.solvers.sgd import solve_sgd
+from repro.data.pipeline import regression_dataset
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4000, help="10000+ for the paper scale")
+    ap.add_argument("--steps", type=int, default=6000)
+    args = ap.parse_args()
+    data = regression_dataset(args.n, d=4, seed=0, noise=0.1)
+    x, y, xt, yt = data["x"], data["y"], data["x_test"], data["y_test"]
+    params = make_params("matern32", lengthscale=1.0, signal=1.0, noise=0.1, d=4)
+
+    print(f"n={x.shape[0]}, d={x.shape[1]}; exact GP as reference ...")
+    t0 = time.time()
+    exact = exact_posterior(params, x, y)
+    mu_ref = exact.mean(xt)
+    print(f"  exact (Cholesky, O(n³)): {time.time()-t0:.1f}s  "
+          f"rmse={float(jnp.sqrt(jnp.mean((mu_ref - yt)**2))):.4f}")
+
+    for name, solver, kw in [
+        ("CG  (§2.2.4)", solve_cg, dict(max_iters=200, tol=1e-4)),
+        ("SGD (Ch. 3) ", solve_sgd, dict(num_steps=args.steps, batch_size=512,
+                                         step_size_times_n=0.5)),
+        ("SDD (Ch. 4) ", solve_sdd, dict(num_steps=args.steps, batch_size=512,
+                                         step_size_times_n=5.0)),
+    ]:
+        t0 = time.time()
+        pf = posterior_functions(params, x, y, jax.random.PRNGKey(0),
+                                 num_samples=16, num_features=2048,
+                                 solver=solver, **kw)
+        mu, var = pf.sample_mean_and_var(xt)
+        dt = time.time() - t0
+        rmse = float(jnp.sqrt(jnp.mean((mu - yt) ** 2)))
+        drift = float(jnp.max(jnp.abs(mu - mu_ref)))
+        print(f"  {name}: {dt:5.1f}s  rmse={rmse:.4f}  |µ−µ_exact|∞={drift:.4f}  "
+              f"mean σ={float(jnp.sqrt(var.mean())):.3f}")
+    print("posterior samples are functions: evaluating 16 samples at 5 new points:")
+    print(np.asarray(pf(xt[:5])).round(3))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Insert the dry-run/roofline summary tables into EXPERIMENTS.md markers.
+
+    PYTHONPATH=src python results/insert_tables.py
+"""
+import json
+import re
+import subprocess
+import sys
+
+
+def table_for(jsonl, mesh_filter=None):
+    recs = {}
+    for line in open(jsonl):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"], r.get("profile", "tp"))] = r
+    rows = sorted(recs.values(), key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = ["| arch | shape | mesh | status | compute_s | memory_s | collective_s | "
+           "dom | useful | MFU | HBM/dev GB |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    n_ok = n_fit = 0
+    for r in rows:
+        if r.get("profile", "tp") != "tp":
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped "
+                       f"(long_500k policy) | | | | | | | |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | | | | | | | |")
+            continue
+        rf = r["roofline"]
+        hbm = r["hbm_per_device"]["total_gb"]
+        n_ok += 1
+        n_fit += hbm <= 16
+        out.append(
+            "| {a} | {s} | {m} | ok | {c:.4g} | {mem:.4g} | {k:.4g} | {d} | {u:.2f} "
+            "| **{mfu:.3g}** | {h:.1f}{flag} |".format(
+                a=r["arch"], s=r["shape"], m=r["mesh"], c=rf["compute_s"],
+                mem=rf["memory_s"], k=rf["collective_s"], d=rf["dominant"],
+                u=rf["useful_fraction"], mfu=rf["mfu"], h=hbm,
+                flag="" if hbm <= 16 else " ⚠" ))
+    out.append("")
+    out.append(f"compiled ok: {n_ok}; fit ≤16 GB/dev: {n_fit}/{n_ok}")
+    return "\n".join(out)
+
+
+def main():
+    md = open("EXPERIMENTS.md").read()
+    dry = table_for("results/dryrun.jsonl")  # both meshes — compile proof
+    roof = table_for("results/dryrun_v2.jsonl", mesh_filter="16x16")
+    md = md.replace("<!-- DRYRUN-SUMMARY -->",
+                    "### Compile matrix (both meshes, baseline tp profile, "
+                    "traffic-model v1)\n\n" + dry)
+    md = md.replace("<!-- ROOFLINE-SUMMARY -->",
+                    "### Single-pod roofline baseline (traffic-model v2 — "
+                    "slice-aware; see DESIGN.md §8)\n\n" + roof)
+    open("EXPERIMENTS.md", "w").write(md)
+    print("inserted")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Render results/dryrun.jsonl into the EXPERIMENTS.md §Dry-run/§Roofline tables.
+
+    PYTHONPATH=src python results/summarize.py [--jsonl results/dryrun.jsonl]
+"""
+import argparse
+import json
+from collections import defaultdict
+
+
+def fmt_row(r):
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped | — | — | — | — | — | — | "
+                f"{r['reason'][:46]} |")
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR | — | — | — | — | — | — | "
+                f"{r.get('error','')[:46]} |")
+    rf = r["roofline"]
+    hbm = r["hbm_per_device"]["total_gb"]
+    note = "fits" if hbm <= 16 else "OVER 16GB"
+    return ("| {arch} | {shape} | {mesh} | ok | {c:.3g} | {m:.3g} | {k:.3g} | {dom} | "
+            "{mfu:.3g} | {hbm:.1f} | {note} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"], c=rf["compute_s"],
+        m=rf["memory_s"], k=rf["collective_s"], dom=rf["dominant"][:4],
+        mfu=rf["mfu"], hbm=hbm, note=note)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+    # keep the LAST record per (arch, shape, mesh, profile)
+    recs = {}
+    for line in open(args.jsonl):
+        r = json.loads(line)
+        recs[(r["arch"], r["shape"], r["mesh"], r.get("profile", "tp"))] = r
+    rows = sorted(recs.values(), key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print("| arch | shape | mesh | status | compute_s | memory_s | collective_s | dom "
+          "| MFU | HBM/dev GB | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("profile", "tp") == "tp":
+            print(fmt_row(r))
+    ok = [r for r in rows if r["status"] == "ok" and r.get("profile", "tp") == "tp"]
+    sk = [r for r in rows if r["status"] == "skipped"]
+    er = [r for r in rows if r["status"] not in ("ok", "skipped")]
+    fit = [r for r in ok if r["hbm_per_device"]["total_gb"] <= 16]
+    print(f"\ncompiled OK: {len(ok)}  skipped(policy): {len(sk)}  errors: {len(er)}  "
+          f"fit≤16GB: {len(fit)}/{len(ok)}")
+    by_dom = defaultdict(int)
+    for r in ok:
+        by_dom[r["roofline"]["dominant"]] += 1
+    print("dominant terms:", dict(by_dom))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Core GP library — the paper's contribution (see DESIGN.md §1)."""
+from .kernels_fn import KernelParams, make_params, gram, matvec  # noqa: F401
+from .rff import sample_prior, make_fourier_features  # noqa: F401
+from .gp import exact_posterior, exact_mll  # noqa: F401
+from .pathwise import posterior_functions, PosteriorFunctions  # noqa: F401
+from .solvers.base import Gram, SolveResult  # noqa: F401
+from .solvers.cg import solve_cg  # noqa: F401
+from .solvers.sgd import solve_sgd  # noqa: F401
+from .solvers.sdd import solve_sdd  # noqa: F401
+from .solvers.ap import solve_ap  # noqa: F401
+from .mll import mll_grad, optimize_mll  # noqa: F401
+from .inducing import inducing_posterior  # noqa: F401
+from .kronecker import make_lkgp, lkgp_posterior, lkgp_solve_cg, break_even_density  # noqa: F401
+from .svgp import sgpr, sgpr_elbo  # noqa: F401

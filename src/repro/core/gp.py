@@ -1,0 +1,60 @@
+"""Exact GP regression reference (§2.1.1–2.1.2) — the O(n³) oracle.
+
+Used by tests/benchmarks as ground truth for the iterative methods; never used at
+scale. Includes both the conventional posterior (Eqs. 2.6–2.8) and conventional
+(Cholesky/affine) posterior sampling (Eq. 2.9).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_fn import KernelParams, gram
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ExactPosterior:
+    params: KernelParams
+    x: jax.Array
+    y: jax.Array
+    chol: jax.Array  # cholesky(K + σ²I)
+    weights: jax.Array  # (K+σ²I)^{-1} y
+
+    def mean(self, xs: jax.Array) -> jax.Array:
+        return gram(self.params, xs, self.x) @ self.weights
+
+    def cov(self, xs: jax.Array) -> jax.Array:
+        kxs = gram(self.params, self.x, xs)
+        sol = jax.scipy.linalg.cho_solve((self.chol, True), kxs)
+        return gram(self.params, xs) - kxs.T @ sol
+
+    def var(self, xs: jax.Array) -> jax.Array:
+        return jnp.diag(self.cov(xs))
+
+    def sample(self, key: jax.Array, xs: jax.Array, num_samples: int) -> jax.Array:
+        """Conventional sampling via Cholesky of the posterior covariance (Eq. 2.9)."""
+        c = self.cov(xs) + 1e-6 * jnp.eye(xs.shape[0], dtype=xs.dtype)
+        l = jnp.linalg.cholesky(c)
+        w = jax.random.normal(key, (xs.shape[0], num_samples), dtype=xs.dtype)
+        return self.mean(xs)[:, None] + l @ w
+
+
+def exact_posterior(params: KernelParams, x: jax.Array, y: jax.Array) -> ExactPosterior:
+    a = gram(params, x) + params.noise * jnp.eye(x.shape[0], dtype=x.dtype)
+    chol = jnp.linalg.cholesky(a)
+    w = jax.scipy.linalg.cho_solve((chol, True), y)
+    return ExactPosterior(params=params, x=x, y=y, chol=chol, weights=w)
+
+
+def exact_mll(params: KernelParams, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Log marginal likelihood (Eq. 2.36), zero prior mean."""
+    n = x.shape[0]
+    a = gram(params, x) + params.noise * jnp.eye(n, dtype=x.dtype)
+    chol = jnp.linalg.cholesky(a)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+    data_fit = -0.5 * jnp.dot(y, alpha)
+    complexity = -jnp.sum(jnp.log(jnp.diag(chol)))
+    return data_fit + complexity - 0.5 * n * jnp.log(2.0 * jnp.pi)

@@ -1,0 +1,118 @@
+"""Inducing-point pathwise sampling via stochastic optimisation (§3.2.3).
+
+For m ≪ n inducing points Z, the optimal inducing posterior mean and per-sample
+uncertainty-reduction weights are minimisers of (Eqs. 3.23/3.24)
+
+    v* = argmin ½‖y − K_XZ v‖² + σ²/2 ‖v‖²_{K_ZZ}
+    α*_i = argmin ½‖f_X + ε − K_XZ α‖² + σ²/2 ‖α‖²_{K_ZZ}
+
+i.e. solutions of the m×m normal equations (K_ZX K_XZ + σ² K_ZZ) u = K_ZX b, touched
+only through K_XZ matvecs (O(n·m) per iteration, m learnable weights — §3.2.3: update
+cost O(m·s) vs SVGP's O(m³)). Posterior samples: f(·) + K_(·)Z (v* − α*) (Eq. 3.36),
+with f_X ≈ RFF prior (the Nyström-consistency approximation discussed in §3.2.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_fn import KernelParams, gram, matvec
+from .rff import PriorSamples, sample_prior
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class InducingPosterior:
+    params: KernelParams
+    z: jax.Array  # (m, d) inducing inputs
+    prior: PriorSamples
+    v_mean: jax.Array  # (m,)
+    alpha: jax.Array  # (m, s)
+
+    def mean(self, xs: jax.Array) -> jax.Array:
+        return gram(self.params, xs, self.z) @ self.v_mean
+
+    def __call__(self, xs: jax.Array) -> jax.Array:
+        kxz = gram(self.params, xs, self.z)
+        return self.prior(xs) + kxz @ (self.v_mean[:, None] - self.alpha)
+
+
+def _normal_eq_matvec(
+    params: KernelParams, x: jax.Array, z: jax.Array, u: jax.Array, row_chunk: int
+) -> jax.Array:
+    """(K_ZX K_XZ + σ² K_ZZ) @ u without materialising K_XZ (n×m) when n is large."""
+    kxz_u = matvec(params, x, u, z=z, row_chunk=row_chunk)  # (n, s)
+    kzx_kxz_u = matvec(params, z, kxz_u, z=x, row_chunk=row_chunk)  # (m, s)
+    kzz_u = matvec(params, z, u, z=z, row_chunk=row_chunk)
+    return kzx_kxz_u + params.noise * kzz_u
+
+
+@partial(jax.jit, static_argnames=("max_iters", "row_chunk"))
+def _solve_inducing_cg(
+    params: KernelParams,
+    x: jax.Array,
+    z: jax.Array,
+    rhs: jax.Array,
+    max_iters: int = 200,
+    tol: float = 1e-3,
+    row_chunk: int = 4096,
+) -> jax.Array:
+    mv = lambda u: _normal_eq_matvec(params, x, z, u, row_chunk)
+    v = jnp.zeros_like(rhs)
+    r = rhs - mv(v)
+    p = r
+    bn = jnp.maximum(jnp.linalg.norm(rhs, axis=0), 1e-30)
+    rz = jnp.sum(r * r, axis=0)
+
+    def cond(s):
+        _, r, _, t, _ = s
+        return jnp.logical_and(t < max_iters, jnp.any(jnp.linalg.norm(r, axis=0) / bn > tol))
+
+    def body(s):
+        v, r, p, t, rz = s
+        ap = mv(p)
+        pap = jnp.sum(p * ap, axis=0)
+        a = rz / jnp.where(pap > 0, pap, 1.0)
+        v = v + a[None] * p
+        r = r - a[None] * ap
+        rz2 = jnp.sum(r * r, axis=0)
+        p = r + (rz2 / jnp.where(rz > 0, rz, 1.0))[None] * p
+        return v, r, p, t + 1, rz2
+
+    v, *_ = jax.lax.while_loop(cond, body, (v, r, p, 0, rz))
+    return v
+
+
+def inducing_posterior(
+    params: KernelParams,
+    x: jax.Array,
+    y: jax.Array,
+    z: jax.Array,
+    key: jax.Array,
+    *,
+    num_samples: int = 16,
+    num_features: int = 2048,
+    max_iters: int = 200,
+    row_chunk: int = 4096,
+) -> InducingPosterior:
+    kp, ke = jax.random.split(key)
+    prior = sample_prior(params, kp, num_samples, num_features, x.shape[1])
+    f_x = prior(x)
+    eps = jnp.sqrt(params.noise) * jax.random.normal(ke, f_x.shape, f_x.dtype)
+    targets = jnp.concatenate([y[:, None], f_x + eps], axis=1)  # (n, 1+s)
+    rhs = matvec(params, z, targets, z=x, row_chunk=row_chunk)  # K_ZX b: (m, 1+s)
+    sol = _solve_inducing_cg(params, x, z, rhs, max_iters=max_iters, row_chunk=row_chunk)
+    return InducingPosterior(
+        params=params, z=z, prior=prior, v_mean=sol[:, 0], alpha=sol[:, 1:]
+    )
+
+
+def select_inducing_greedy(x: jax.Array, m: int, key: jax.Array) -> jax.Array:
+    """Cheap inducing-point selection: random subset (§3.3.1 uses ANN dedup; a
+    uniform subset is the paper's stated-adequate fallback for large m)."""
+    idx = jax.random.choice(key, x.shape[0], (m,), replace=False)
+    return x[idx]

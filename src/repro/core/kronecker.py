@@ -1,0 +1,185 @@
+"""Latent Kronecker structure (Chapter 6, LKGP).
+
+Product-kernel GPs on a Cartesian grid X = X₁ × X₂ give K = K₁ ⊗ K₂ (Eq. 2.68) whose
+eigendecomposition factorises — but ONLY for fully-gridded data. LKGP lifts that: with
+observations on an arbitrary subset (mask M) of the grid, the observed covariance is
+the *projection of a latent Kronecker product*
+
+    K_obs = P_M (K₁ ⊗ K₂) P_Mᵀ            (§6.2.2)
+
+which destroys factorised decompositions but PRESERVES fast matvecs:
+
+    (K_obs + σ²I) v = P_M vec(K₁ V K₂ᵀ) + σ² v,   V = unvec(P_Mᵀ v)
+
+costing O(n₁n₂(n₁+n₂)) instead of O(n_obs²). Iterative solvers (any of core/solvers)
+plus pathwise conditioning then give posterior samples: prior samples on the full grid
+are cheap via the Kronecker Cholesky (L₁ ⊗ L₂) w (Eq. 2.73, §6.2.4) — no RFF needed.
+
+Break-even (§6.2.6): LKGP matvec beats the direct O(n_obs²) = (ρ n₁n₂)² matvec when
+the observed density ρ = n_obs/(n₁n₂) exceeds ρ* = sqrt((n₁+n₂)/(n₁n₂)); below that,
+iterating over observed entries directly is cheaper. `break_even_density` returns ρ*
+and benchmarks/bench_kronecker.py verifies it against measured FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_fn import KernelParams, gram
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LatentKroneckerGP:
+    """Two-factor LKGP over grid (g1 × g2) with boolean observation mask."""
+
+    params1: KernelParams
+    params2: KernelParams
+    grid1: jax.Array  # (n1, d1)
+    grid2: jax.Array  # (n2, d2)
+    obs_idx: jax.Array  # (n_obs,) flat indices into the n1*n2 grid — the mask M
+    noise: jax.Array  # σ²
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.grid1.shape[0], self.grid2.shape[0]
+
+    def k1(self) -> jax.Array:
+        return gram(self.params1, self.grid1)
+
+    def k2(self) -> jax.Array:
+        return gram(self.params2, self.grid2)
+
+    def project_up(self, v_obs: jax.Array) -> jax.Array:
+        """P_Mᵀ v: scatter observed vector(s) into the full grid. v:(n_obs,s)→(n1,n2,s)."""
+        n1, n2 = self.shape
+        s = v_obs.shape[1]
+        full = jnp.zeros((n1 * n2, s), v_obs.dtype)
+        return full.at[self.obs_idx].set(v_obs).reshape(n1, n2, s)
+
+    def project_down(self, v_full: jax.Array) -> jax.Array:
+        """P_M v: gather observed entries. (n1,n2,s)→(n_obs,s)."""
+        return v_full.reshape(-1, v_full.shape[-1])[self.obs_idx]
+
+    def mv(self, v_obs: jax.Array) -> jax.Array:
+        """(K_obs + σ²I) @ v via the latent Kronecker matvec (§6.2.3)."""
+        squeeze = v_obs.ndim == 1
+        v2 = v_obs[:, None] if squeeze else v_obs
+        full = self.project_up(v2)  # (n1, n2, s)
+        out = jnp.einsum("ab,bcs->acs", self.k1(), jnp.einsum("cd,bds->bcs", self.k2(), full))
+        out = self.project_down(out) + self.noise * v2
+        return out[:, 0] if squeeze else out
+
+    # -- prior sampling on the full grid via Kronecker Cholesky (Eq. 2.73) --------
+    def prior_sample_grid(self, key: jax.Array, num_samples: int) -> jax.Array:
+        n1, n2 = self.shape
+        # jitter ∝ signal: fp32 grams of close points round slightly indefinite
+        l1 = jnp.linalg.cholesky(self.k1() + 1e-5 * self.params1.signal * jnp.eye(n1))
+        l2 = jnp.linalg.cholesky(self.k2() + 1e-5 * self.params2.signal * jnp.eye(n2))
+        w = jax.random.normal(key, (n1, n2, num_samples))
+        return jnp.einsum("ab,bcs->acs", l1, jnp.einsum("cd,bds->bcs", l2, w))
+
+    def cross_mv(self, weights_obs: jax.Array) -> jax.Array:
+        """K_{grid,obs} @ w → full-grid predictions. (n_obs,s) → (n1,n2,s)."""
+        squeeze = weights_obs.ndim == 1
+        w2 = weights_obs[:, None] if squeeze else weights_obs
+        full = self.project_up(w2)
+        out = jnp.einsum("ab,bcs->acs", self.k1(), jnp.einsum("cd,bds->bcs", self.k2(), full))
+        return out[..., 0] if squeeze else out
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def lkgp_solve_cg(
+    gp: LatentKroneckerGP, b: jax.Array, max_iters: int = 500, tol: float = 1e-4
+) -> jax.Array:
+    """CG on the LKGP operator (same recursion as solvers/cg but structured matvec)."""
+    b2 = b[:, None] if b.ndim == 1 else b
+    v = jnp.zeros_like(b2)
+    r = b2 - gp.mv(v)
+    p = r
+    rz = jnp.sum(r * r, axis=0)
+    bn = jnp.maximum(jnp.linalg.norm(b2, axis=0), 1e-30)
+
+    def cond(s):
+        _, r, _, t, _ = s
+        return jnp.logical_and(t < max_iters, jnp.any(jnp.linalg.norm(r, axis=0) / bn > tol))
+
+    def body(s):
+        v, r, p, t, rz = s
+        ap = gp.mv(p)
+        a = rz / jnp.maximum(jnp.sum(p * ap, axis=0), 1e-30)
+        v = v + a[None] * p
+        r = r - a[None] * ap
+        rz2 = jnp.sum(r * r, axis=0)
+        p = r + (rz2 / jnp.maximum(rz, 1e-30))[None] * p
+        return v, r, p, t + 1, rz2
+
+    v, *_ = jax.lax.while_loop(cond, body, (v, r, p, 0, rz))
+    return v[:, 0] if b.ndim == 1 else v
+
+
+def lkgp_posterior(
+    gp: LatentKroneckerGP,
+    y_obs: jax.Array,
+    key: jax.Array,
+    *,
+    num_samples: int = 8,
+    max_iters: int = 500,
+) -> tuple[jax.Array, jax.Array]:
+    """Pathwise posterior on the FULL grid (§6.2.4).
+
+    Returns (mean (n1,n2), samples (n1,n2,s)). One batched solve for
+    [y | f_obs + ε], then f_full + K_{grid,obs}(v − α).
+    """
+    f_grid = gp.prior_sample_grid(key, num_samples)  # (n1, n2, s)
+    f_obs = gp.project_down(f_grid)
+    eps = jnp.sqrt(gp.noise) * jax.random.normal(
+        jax.random.fold_in(key, 1), f_obs.shape, f_obs.dtype
+    )
+    rhs = jnp.concatenate([y_obs[:, None], f_obs + eps], axis=1)
+    sol = lkgp_solve_cg(gp, rhs, max_iters=max_iters)
+    v_mean, alpha = sol[:, :1], sol[:, 1:]
+    mean = gp.cross_mv(v_mean)[..., 0]
+    update = gp.cross_mv(v_mean - alpha)  # (n1, n2, s)
+    samples = f_grid + update
+    return mean, samples
+
+
+def make_lkgp(
+    params1: KernelParams,
+    params2: KernelParams,
+    grid1: jax.Array,
+    grid2: jax.Array,
+    mask: jax.Array,
+    noise,
+) -> LatentKroneckerGP:
+    """Build an LKGP from a boolean (n1, n2) observation mask (eager nonzero)."""
+    import numpy as np
+
+    idx = jnp.asarray(np.nonzero(np.asarray(mask).reshape(-1))[0])
+    return LatentKroneckerGP(
+        params1=params1,
+        params2=params2,
+        grid1=grid1,
+        grid2=grid2,
+        obs_idx=idx,
+        noise=jnp.asarray(noise),
+    )
+
+
+def break_even_density(n1: int, n2: int) -> float:
+    """ρ* above which the latent Kronecker matvec is cheaper than the direct
+    O(n_obs²) matvec (§6.2.6): (ρ n₁n₂)² = n₁n₂(n₁+n₂) ⇒ ρ* = sqrt((n₁+n₂)/(n₁n₂))."""
+    return float(jnp.sqrt((n1 + n2) / (n1 * n2)))
+
+
+def lkgp_matvec_flops(n1: int, n2: int, density: float) -> tuple[float, float]:
+    """(latent-kronecker flops, direct flops) per matvec — used by bench_kronecker."""
+    lk = 2.0 * n1 * n2 * (n1 + n2)
+    n_obs = density * n1 * n2
+    direct = 2.0 * n_obs * n_obs
+    return lk, direct

@@ -1,0 +1,169 @@
+"""Marginal likelihood optimisation with iterative solvers (Chapter 5).
+
+The MLL gradient (Eq. 2.37) needs v_y = A⁻¹(y−μ) and tr(A⁻¹ ∂A/∂θ), A = K_θ + σ²I.
+
+*Standard estimator* (Gardner et al. 2018, Wang et al. 2019): Hutchinson probes
+z_j ~ N(0, I):   tr(A⁻¹ ∂A) ≈ mean_j (A⁻¹z_j)ᵀ ∂A z_j — requires solving A⁻¹z_j,
+whose solutions are *useless for anything else*.
+
+*Pathwise estimator* (§5.2, this paper): draw probes from the PRIOR of y,
+z_j = f_X^j + ε_j ~ N(0, A). Then α_j = A⁻¹z_j has E[α_jα_jᵀ] = A⁻¹ so
+
+    tr(A⁻¹ ∂A) ≈ mean_j α_jᵀ (∂A/∂θ) α_j,
+
+and the α_j are **exactly the pathwise-conditioning weights** of posterior samples
+(core/pathwise.py): the trace-estimation solves are amortised into posterior sampling
+for free. Additionally the solutions α_j = A⁻¹z_j have smaller initial distance
+‖0 − α*‖_A than the Hutchinson ones (§5.2.1: E‖α*‖²_A = n for z~N(0,A) vs
+tr(A⁻¹)·cond-dependent for z~N(0,I)), so solvers need fewer iterations.
+
+*Warm starting* (§5.3): across outer hyperparameter steps θ_t → θ_{t+1} the solutions
+move little; initialising each solve at the previous solution cuts solver iterations
+multiplicatively (up to 72× total speed-up in the paper), at the cost of a bias that
+is provably benign for convex quadratics (§5.3.2) because the solver still converges
+to the θ-dependent optimum.
+
+Gradients of the quadratic forms w.r.t. θ are taken by autodiff through the
+(chunked, never-materialised) kernel matvec with stop-gradient solutions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_fn import KernelParams, matvec
+from .rff import sample_prior
+from .solvers.base import Gram
+from .solvers.cg import solve_cg
+
+
+def _quad(params: KernelParams, x: jax.Array, u: jax.Array, w: jax.Array) -> jax.Array:
+    """uᵀ (K_θ + σ²I) w summed per column, differentiable in θ. u,w: (n,s)."""
+    kw = matvec(params, x, w)  # (n, s)
+    return jnp.sum(u * kw, axis=0) + params.noise * jnp.sum(u * w, axis=0)
+
+
+class MLLGradEstimate(NamedTuple):
+    grad: KernelParams  # gradient w.r.t. unconstrained hyperparameters
+    v_y: jax.Array  # (n,) mean weights — reusable for prediction
+    alpha: jax.Array  # (n, s) probe/sample weights — reusable for pathwise sampling
+    solver_iterations: jax.Array
+
+
+def mll_grad(
+    params: KernelParams,
+    x: jax.Array,
+    y: jax.Array,
+    key: jax.Array,
+    *,
+    num_probes: int = 8,
+    num_features: int = 1024,
+    estimator: str = "pathwise",  # "pathwise" | "hutchinson"
+    solver: Callable = solve_cg,
+    x0: Optional[jax.Array] = None,
+    **solver_kwargs,
+) -> MLLGradEstimate:
+    """Estimated ∇_θ log p(y|θ) (ascent direction). θ in log space (KernelParams)."""
+    op = Gram(x=x, params=params)
+    n = x.shape[0]
+    kp, ke, ks = jax.random.split(key, 3)
+
+    if estimator == "pathwise":
+        prior = sample_prior(params, kp, num_probes, num_features, x.shape[1])
+        f_x = prior(x)
+        eps = jnp.sqrt(params.noise) * jax.random.normal(ke, f_x.shape, f_x.dtype)
+        probes = f_x + eps  # z ~ N(0, A) approx (RFF prior + exact noise)
+    else:
+        probes = jax.random.normal(ke, (n, num_probes), dtype=x.dtype)
+
+    rhs = jnp.concatenate([y[:, None], probes], axis=1)
+    if solver is solve_cg:
+        res = solver(op, rhs, x0, **solver_kwargs)
+    else:
+        res = solver(op, rhs, x0, key=ks, **solver_kwargs)
+    sol = jax.lax.stop_gradient(res.solution)
+    v_y, alpha = sol[:, 0], sol[:, 1:]
+
+    def neg_terms(p: KernelParams) -> jax.Array:
+        # data fit grad: +½ v_yᵀ ∂A v_y  ⇒ differentiate  ½ v_yᵀ A(θ) v_y
+        fit = 0.5 * _quad(p, x, v_y[:, None], v_y[:, None])[0]
+        if estimator == "pathwise":
+            # tr(A⁻¹∂A) ≈ mean_j α_jᵀ ∂A α_j  ⇒ differentiate ½ mean α A α
+            tr = 0.5 * jnp.mean(_quad(p, x, alpha, alpha))
+        else:
+            # tr(A⁻¹∂A) ≈ mean_j (A⁻¹z_j)ᵀ ∂A z_j ⇒ differentiate ½ mean α A z
+            tr = 0.5 * jnp.mean(_quad(p, x, alpha, jax.lax.stop_gradient(probes)))
+        return fit - tr
+
+    g = jax.grad(neg_terms)(params)
+    return MLLGradEstimate(grad=g, v_y=v_y, alpha=alpha, solver_iterations=res.iterations)
+
+
+@dataclasses.dataclass
+class MLLOptimState:
+    params: KernelParams
+    adam_m: KernelParams
+    adam_v: KernelParams
+    warm: Optional[jax.Array]  # previous solutions (n, 1+s) for warm starting
+    step: int
+    total_solver_iters: int
+
+
+def _tree_adam(params, g, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, m, g)
+    v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_, v, g)
+    t = step + 1
+    mhat = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
+    vhat = jax.tree.map(lambda v_: v_ / (1 - b2**t), v)
+    params = jax.tree.map(
+        lambda p, m_, v_: p + lr * m_ / (jnp.sqrt(v_) + eps), params, mhat, vhat
+    )  # ASCENT on MLL
+    return params, m, v
+
+
+def optimize_mll(
+    params: KernelParams,
+    x: jax.Array,
+    y: jax.Array,
+    key: jax.Array,
+    *,
+    num_steps: int = 20,
+    lr: float = 0.05,
+    warm_start: bool = True,
+    estimator: str = "pathwise",
+    num_probes: int = 8,
+    solver: Callable = solve_cg,
+    callback: Optional[Callable[[int, MLLOptimState], None]] = None,
+    **solver_kwargs,
+) -> MLLOptimState:
+    """Outer loop: Adam ascent on θ with warm-started inner solves (Ch. 5)."""
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    st = MLLOptimState(params, zeros, zeros, None, 0, 0)
+    for t in range(num_steps):
+        # §5.3.3: warm starting the PATHWISE estimator requires the probe/prior
+        # randomness to be held fixed across outer steps — the previous solution is
+        # then a nearby init for the new θ's systems (fresh probes would re-randomise
+        # the RHS and void the warm start). Bias is negligible (§5.3.2).
+        est = mll_grad(
+            st.params,
+            x,
+            y,
+            key if warm_start else jax.random.fold_in(key, t),
+            num_probes=num_probes,
+            estimator=estimator,
+            solver=solver,
+            x0=st.warm if warm_start else None,
+            **solver_kwargs,
+        )
+        p, m, v = _tree_adam(st.params, est.grad, st.adam_m, st.adam_v, t, lr)
+        warm = jnp.concatenate([est.v_y[:, None], est.alpha], axis=1)
+        st = MLLOptimState(
+            p, m, v, warm, t + 1, st.total_solver_iters + int(est.solver_iterations)
+        )
+        if callback is not None:
+            callback(t, st)
+    return st

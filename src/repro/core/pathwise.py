@@ -1,0 +1,110 @@
+"""Pathwise conditioning (§2.1.2, Eq. 2.12) driven by iterative solvers (Ch. 3–4).
+
+A posterior function sample is a *function*
+
+    f_|y(·) = f(·) + K_(·)X (v* − α*_i),
+        v*   = (K+σ²I)⁻¹ y                  (posterior-mean representer weights)
+        α*_i = (K+σ²I)⁻¹ (f_X^i + ε_i)      (per-sample uncertainty-reduction weights)
+
+with f a prior sample approximated by random Fourier features. All s+1 linear systems
+share the coefficient matrix, so they are solved as ONE batched multi-RHS call to any
+solver in core/solvers (this batch is also where Ch. 5's probe vectors ride along —
+see core/mll.py). Evaluating the result at new X* costs one kernel matvec: one solve
+per *sample*, not per location — the property that makes Thompson sampling and BO
+tractable (§3.3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_fn import KernelParams, gram, matvec
+from .rff import PriorSamples, sample_prior
+from .solvers.base import Gram, SolveResult
+from .solvers.cg import solve_cg
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PosteriorFunctions:
+    """s posterior function samples + the posterior mean, evaluable anywhere."""
+
+    params: KernelParams
+    x: jax.Array  # (n, d) training inputs
+    prior: PriorSamples  # s prior functions
+    v_mean: jax.Array  # (n,) representer weights of the mean
+    alpha: jax.Array  # (n, s) per-sample uncertainty-reduction weights
+    solve_info: Optional[SolveResult] = None
+
+    @property
+    def num_samples(self) -> int:
+        return self.alpha.shape[1]
+
+    def mean(self, xs: jax.Array) -> jax.Array:
+        return matvec(self.params, xs, self.v_mean, z=self.x)
+
+    def __call__(self, xs: jax.Array) -> jax.Array:
+        """Evaluate all samples at xs → (n*, s)."""
+        kxs = gram(self.params, xs, self.x)  # (n*, n)
+        return self.prior(xs) + kxs @ (self.v_mean[:, None] - self.alpha)
+
+    def sample_mean_and_var(self, xs: jax.Array) -> tuple[jax.Array, jax.Array]:
+        f = self(xs)
+        return self.mean(xs), jnp.var(f, axis=1)
+
+
+def pathwise_rhs(
+    op: Gram,
+    y: jax.Array,
+    prior: PriorSamples,
+    key: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Build the batched RHS [y | f_X^1+ε_1 | ... | f_X^s+ε_s] and the noise draws.
+
+    Returns (rhs (n, 1+s), eps (n, s)). ε is returned separately so SGD's
+    variance-reduced objective (Eq. 3.6) can move it into the regulariser as δ=ε/σ².
+    """
+    f_x = prior(op.x)  # (n, s)
+    eps = jnp.sqrt(op.noise) * jax.random.normal(key, f_x.shape, dtype=f_x.dtype)
+    rhs = jnp.concatenate([y[:, None], f_x + eps], axis=1)
+    return rhs, eps
+
+
+def posterior_functions(
+    params: KernelParams,
+    x: jax.Array,
+    y: jax.Array,
+    key: jax.Array,
+    *,
+    num_samples: int = 16,
+    num_features: int = 2048,
+    solver: Callable[..., SolveResult] = solve_cg,
+    x0: Optional[jax.Array] = None,
+    **solver_kwargs,
+) -> PosteriorFunctions:
+    """End-to-end pathwise posterior: RFF prior + one batched iterative solve."""
+    kp, ke, ks = jax.random.split(key, 3)
+    op = Gram(x=x, params=params)
+    prior = sample_prior(params, kp, num_samples, num_features, x.shape[1])
+    rhs, eps = pathwise_rhs(op, y, prior, ke)
+    if solver is solve_cg:
+        res = solver(op, rhs, x0, **solver_kwargs)
+    elif getattr(solver, "__name__", "") == "solve_sgd":
+        # variance-reduced targets: data target [y | f_X], δ = [0 | ε/σ²]
+        data = rhs.at[:, 1:].add(-eps)
+        delta = jnp.concatenate([jnp.zeros_like(y)[:, None], eps / params.noise], axis=1)
+        res = solver(op, data, x0, key=ks, delta=delta, **solver_kwargs)
+    else:
+        res = solver(op, rhs, x0, key=ks, **solver_kwargs)
+    sol = res.solution
+    return PosteriorFunctions(
+        params=params,
+        x=x,
+        prior=prior,
+        v_mean=sol[:, 0],
+        alpha=sol[:, 1:],
+        solve_info=res,
+    )

@@ -1,0 +1,74 @@
+"""Preconditioners for CG (§2.2.4; Gardner et al. 2018, Wang et al. 2019).
+
+Both build a rank-m surrogate K ≈ L Lᵀ and apply (L Lᵀ + σ²I)⁻¹ via Woodbury in
+O(n·m) per application:
+
+  * ``nystrom``: uniform-subset Nyström (TPU default — one m×m eig + matmuls).
+  * ``pivoted_cholesky``: greedy diagonal pivoting (paper fidelity; sequential,
+    latency-bound — kept for benchmark parity, see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_fn import KernelParams, gram, gram_diag
+
+
+def _woodbury_apply(l: jax.Array, sigma2: jax.Array) -> Callable[[jax.Array], jax.Array]:
+    """r ↦ (L Lᵀ + σ²I)⁻¹ r with L: (n, m)."""
+    m = l.shape[1]
+    inner = l.T @ l + sigma2 * jnp.eye(m, dtype=l.dtype)  # (m, m)
+    chol = jnp.linalg.cholesky(inner)
+
+    def apply(r: jax.Array) -> jax.Array:
+        lr = l.T @ r
+        sol = jax.scipy.linalg.cho_solve((chol, True), lr)
+        return (r - l @ sol) / sigma2
+
+    return apply
+
+
+def nystrom_preconditioner(
+    params: KernelParams, x: jax.Array, key: jax.Array, rank: int = 100
+) -> Callable[[jax.Array], jax.Array]:
+    n = x.shape[0]
+    idx = jax.random.choice(key, n, (min(rank, n),), replace=False)
+    z = x[idx]
+    kzz = gram(params, z) + 1e-6 * jnp.eye(z.shape[0], dtype=x.dtype)
+    kxz = gram(params, x, z)
+    l = kxz @ jnp.linalg.cholesky(jnp.linalg.inv(kzz))  # K_xz K_zz^{-1/2}
+    return _woodbury_apply(l, params.noise)
+
+
+@partial(jax.jit, static_argnames=("rank",))
+def _pivoted_cholesky_factor(params: KernelParams, x: jax.Array, rank: int) -> jax.Array:
+    n = x.shape[0]
+    diag = gram_diag(params, x)
+    l = jnp.zeros((n, rank), dtype=x.dtype)
+
+    def body(i, carry):
+        l, diag = carry
+        p = jnp.argmax(diag)
+        kp = gram(params, x[p][None, :], x)[0]  # row p of K
+        row = kp - l @ l[p]
+        piv = jnp.sqrt(jnp.maximum(diag[p], 1e-12))
+        col = row / piv
+        col = col.at[p].set(piv)
+        l = l.at[:, i].set(col)
+        diag = jnp.maximum(diag - col * col, 0.0)
+        diag = diag.at[p].set(0.0)
+        return l, diag
+
+    l, _ = jax.lax.fori_loop(0, rank, body, (l, diag))
+    return l
+
+
+def pivoted_cholesky_preconditioner(
+    params: KernelParams, x: jax.Array, rank: int = 100
+) -> Callable[[jax.Array], jax.Array]:
+    l = _pivoted_cholesky_factor(params, x, rank)
+    return _woodbury_apply(l, params.noise)

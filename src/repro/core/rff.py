@@ -1,0 +1,75 @@
+"""Random Fourier features (§2.2.2): approximate prior function samples.
+
+A prior sample is f(x) ≈ Φ(x) w with w ~ N(0, I), Φ(x)_j = sqrt(2σ_f²/m) cos(ω_jᵀx+b_j),
+or the lower-variance paired sin/cos form (Sutherland & Schneider, 2015). Pathwise
+conditioning (core/pathwise.py) consumes these to evaluate f_X (train) and f_X* (test)
+*jointly* in O((n+n*) m), which is the paper's replacement for O((n+n*)³) conditional
+sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_fn import KernelParams, spectral_sample
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FourierFeatures:
+    omega: jax.Array  # (m, d) frequencies
+    phase: jax.Array  # (m,) phases (cos variant) — unused in paired variant
+    signal: jax.Array  # σ_f² signal variance
+    paired: bool = dataclasses.field(default=True, metadata=dict(static=True))
+
+    @property
+    def num_features(self) -> int:
+        m = self.omega.shape[0]
+        return 2 * m if self.paired else m
+
+    def features(self, x: jax.Array) -> jax.Array:
+        """Φ(x): (n, num_features). Uses the paired sin/cos map by default."""
+        proj = x @ self.omega.T  # (n, m)
+        m = self.omega.shape[0]
+        if self.paired:
+            scale = jnp.sqrt(self.signal / m)
+            return scale * jnp.concatenate([jnp.sin(proj), jnp.cos(proj)], axis=-1)
+        scale = jnp.sqrt(2.0 * self.signal / m)
+        return scale * jnp.cos(proj + self.phase[None, :])
+
+
+def make_fourier_features(
+    params: KernelParams, key: jax.Array, num_features: int, d: int, paired: bool = True
+) -> FourierFeatures:
+    m = num_features // 2 if paired else num_features
+    omega = spectral_sample(params, key, m, d)
+    phase = jax.random.uniform(jax.random.fold_in(key, 7), (m,), maxval=2.0 * jnp.pi)
+    return FourierFeatures(omega=omega, phase=phase, signal=params.signal, paired=paired)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PriorSamples:
+    """s prior function samples f^(i)(·) = Φ(·) w_i, evaluable anywhere."""
+
+    ff: FourierFeatures
+    w: jax.Array  # (num_features, s)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.ff.features(x) @ self.w  # (n, s)
+
+
+def sample_prior(
+    params: KernelParams,
+    key: jax.Array,
+    num_samples: int,
+    num_features: int,
+    d: int,
+) -> PriorSamples:
+    kf, kw = jax.random.split(key)
+    ff = make_fourier_features(params, kf, num_features, d)
+    w = jax.random.normal(kw, (ff.num_features, num_samples))
+    return PriorSamples(ff=ff, w=w)

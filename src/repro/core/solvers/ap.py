@@ -1,0 +1,57 @@
+"""Alternating projections / randomised block-coordinate solver (§5.1.1 baseline;
+Shalev-Shwartz & Zhang 2013 SDCA; Tu et al. 2016; Wu et al. 2024).
+
+Each step picks a random coordinate block I (|I| = p), solves the p×p block system
+exactly, and updates the *maintained residual* incrementally:
+
+    Δ = (K_II + σ² I_p)⁻¹ r_I ;   α_I += Δ ;   r −= (K_:I + σ² E_I) Δ
+
+O(n·p + p³) per step, one kernel row-block gather — the third solver family the
+Ch. 5 improvements (warm start, pathwise estimator) are demonstrated on.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import Gram, SolveResult, as_matrix_rhs, finalize
+
+
+@partial(jax.jit, static_argnames=("num_steps", "block_size"))
+def solve_ap(
+    op: Gram,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    key: jax.Array,
+    num_steps: int = 2000,
+    block_size: int = 512,
+) -> SolveResult:
+    b2, squeeze = as_matrix_rhs(b)
+    n, s = b2.shape
+    sigma2 = op.noise
+    a0 = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
+    r0 = b2 - op.mv(a0)
+
+    def step(carry, t):
+        alpha, r = carry
+        idx = jax.random.randint(jax.random.fold_in(key, t), (block_size,), 0, n)
+        rows = op.rows(idx)  # (p, n)
+        k_block = rows[:, :]  # gather columns for the p×p system
+        kii = jnp.take(rows, idx, axis=1) + sigma2 * jnp.eye(block_size, dtype=rows.dtype)
+        # duplicate indices in idx would double-count; deduplicate by weighting is
+        # avoided simply by solving the (possibly singular-duplicated) system with a
+        # small extra jitter — exactness per-step is not required for convergence.
+        delta = jnp.linalg.solve(
+            kii + 1e-6 * jnp.eye(block_size, dtype=rows.dtype), r[idx]
+        )  # (p, s)
+        alpha = alpha.at[idx].add(delta)
+        r = r - rows.T @ delta
+        r = r.at[idx].add(-sigma2 * delta)
+        return (alpha, r), None
+
+    (alpha, _), _ = jax.lax.scan(step, (a0, r0), jnp.arange(num_steps))
+    return finalize(op, alpha, b2, num_steps, squeeze)

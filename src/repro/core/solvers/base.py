@@ -1,0 +1,94 @@
+"""Shared iterative-solver infrastructure (§2.2.4).
+
+Everything the paper does reduces to solving, for a batch of right-hand sides B,
+
+    (K_XX + σ² I) V = B,      B = [y − μ | f_X + ε (s samples) | z_1.. z_p (probes)]
+
+with a positive-definite coefficient matrix that is only ever *touched through
+matvecs*. ``Gram`` wraps the training inputs + hyperparameters and provides
+O(chunk·n)-memory matvecs and row blocks; every solver (cg/sgd/sdd/ap) consumes this
+interface, takes an optional warm-start V₀ (Ch. 5 §5.3), and returns a ``SolveResult``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels_fn import KernelParams, gram, matvec
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Gram:
+    """The linear operator A = K(X,X) + σ² I, touched only through matvecs."""
+
+    x: jax.Array  # (n, d) training inputs
+    params: KernelParams
+    row_chunk: int = dataclasses.field(default=2048, metadata=dict(static=True))
+    use_pallas: bool = dataclasses.field(default=False, metadata=dict(static=True))
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def noise(self) -> jax.Array:
+        return self.params.noise
+
+    def mv(self, v: jax.Array) -> jax.Array:
+        """(K + σ²I) @ v without materialising K. v: (n,) or (n,s)."""
+        if self.use_pallas:
+            from ...kernels.ops import gram_matvec  # lazy: pallas import
+
+            return gram_matvec(self.params, self.x, v, jitter=self.noise)
+        return matvec(self.params, self.x, v, row_chunk=self.row_chunk, jitter=self.noise)
+
+    def mv_k(self, v: jax.Array) -> jax.Array:
+        """K @ v (no jitter)."""
+        return matvec(self.params, self.x, v, row_chunk=self.row_chunk)
+
+    def rows(self, idx: jax.Array) -> jax.Array:
+        """K[idx, :] row block — O(|idx|·n) memory (the SGD/SDD/AP primitive)."""
+        return gram(self.params, self.x[idx], self.x)
+
+    def dense(self) -> jax.Array:
+        """Materialised K + σ²I (tests / small-n reference only)."""
+        return gram(self.params, self.x) + self.noise * jnp.eye(self.n, dtype=self.x.dtype)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SolveResult:
+    solution: jax.Array  # (n, s)
+    residual_norm: jax.Array  # (s,) final ||A v − b||₂ per RHS
+    rel_residual: jax.Array  # (s,) ||A v − b|| / ||b||
+    iterations: jax.Array  # () number of iterations executed
+    converged: jax.Array  # () bool — all RHS under tolerance
+
+
+def as_matrix_rhs(b: jax.Array) -> tuple[jax.Array, bool]:
+    if b.ndim == 1:
+        return b[:, None], True
+    return b, False
+
+
+def finalize(
+    op: Gram, v: jax.Array, b: jax.Array, iterations, squeeze: bool
+) -> SolveResult:
+    r = b - op.mv(v)
+    rn = jnp.linalg.norm(r, axis=0)
+    bn = jnp.maximum(jnp.linalg.norm(b, axis=0), 1e-30)
+    sol = v[:, 0] if squeeze else v
+    return SolveResult(
+        solution=sol,
+        residual_norm=rn,
+        rel_residual=rn / bn,
+        iterations=jnp.asarray(iterations),
+        converged=jnp.all(rn / bn < 1.0),
+    )
+
+
+Solver = Callable[..., SolveResult]

@@ -1,0 +1,69 @@
+"""Method of conjugate gradients with optional preconditioning (§2.2.4, Eq. 2.78).
+
+Batched over right-hand sides (each RHS runs its own CG recursion; they share the
+matvec, so the dominant cost is one fused multi-RHS Gram matvec per iteration — this is
+exactly why the Ch. 5 pathwise estimator batches [y | samples | probes] together).
+Supports warm starts (Ch. 5 §5.3) and a fixed iteration budget (§5.4 early stopping).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import Gram, SolveResult, as_matrix_rhs, finalize
+
+
+@partial(jax.jit, static_argnames=("max_iters", "precond"))
+def solve_cg(
+    op: Gram,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    max_iters: int = 1000,
+    tol: float = 1e-2,
+    precond: Optional[Callable[[jax.Array], jax.Array]] = None,
+) -> SolveResult:
+    """Solve (K+σ²I) V = B. b: (n,) or (n,s). tol is on the *relative* residual."""
+    b2, squeeze = as_matrix_rhs(b)
+    n, s = b2.shape
+    v = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
+    minv = precond if precond is not None else (lambda r: r)
+
+    r0 = b2 - op.mv(v)
+    z0 = minv(r0)
+    bn = jnp.maximum(jnp.linalg.norm(b2, axis=0), 1e-30)
+
+    def cond(state):
+        _, r, _, _, t, _ = state
+        rel = jnp.linalg.norm(r, axis=0) / bn
+        return jnp.logical_and(t < max_iters, jnp.any(rel > tol))
+
+    def body(state):
+        v, r, z, p, t, rz = state
+        ap = op.mv(p)
+        pap = jnp.sum(p * ap, axis=0)
+        alpha = rz / jnp.where(pap > 0, pap, 1.0)
+        # freeze converged columns (alpha→0) to avoid round-off churn
+        active = jnp.linalg.norm(r, axis=0) / bn > tol
+        alpha = jnp.where(active, alpha, 0.0)
+        v = v + alpha[None, :] * p
+        r = r - alpha[None, :] * ap
+        z = minv(r)
+        rz_new = jnp.sum(r * z, axis=0)
+        beta = rz_new / jnp.where(rz > 0, rz, 1.0)
+        p = z + beta[None, :] * p
+        return v, r, z, p, t + 1, rz_new
+
+    state = (v, r0, z0, z0, jnp.asarray(0), jnp.sum(r0 * z0, axis=0))
+    v, r, _, _, t, _ = jax.lax.while_loop(cond, body, state)
+    res = finalize(op, v, b2, t, squeeze)
+    return SolveResult(
+        solution=res.solution,
+        residual_norm=res.residual_norm,
+        rel_residual=res.rel_residual,
+        iterations=t,
+        converged=jnp.all(res.rel_residual <= tol),
+    )

@@ -1,0 +1,66 @@
+"""Stochastic dual descent (Chapter 4, Algorithm 4.1).
+
+Minimises the *dual* objective L*(α) = ½‖α‖²_{K+σ²I} − αᵀb, which shares the minimiser
+α* = (K+σ²I)⁻¹ b with the primal but has Hessian K+σ²I instead of K(K+σ²I):
+condition number ≤ 1 + κn/σ² and smallest eigenvalue bounded away from zero ⇒ step
+sizes up to ~κn larger and geometric convergence guarantees (Prop. 4.1).
+
+Estimator: **random coordinates** (multiplicative noise — Eq. 4.25), NOT random
+features (additive noise — Eq. 4.24): the error of the coordinate estimator is
+proportional to ‖α − α*‖, so noise vanishes as the iterate converges (§4.2.2; beware
+the "Rao-Blackwellisation trap" — the *whole* gradient is subsampled, including the
+σ²α − b part). Nesterov momentum + *geometric* iterate averaging (§4.2.3).
+
+One kernel-row gather per step (vs two matvec-shaped terms for primal SGD) ⇒ ~30%
+faster per step than Ch. 3 SGD at equal batch size.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import Gram, SolveResult, as_matrix_rhs, finalize
+
+
+@partial(jax.jit, static_argnames=("num_steps", "batch_size"))
+def solve_sdd(
+    op: Gram,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    key: jax.Array,
+    num_steps: int = 20_000,
+    batch_size: int = 512,
+    step_size_times_n: float = 50.0,
+    momentum: float = 0.9,
+    averaging: Optional[float] = None,
+) -> SolveResult:
+    """Solve (K+σ²I)V = b by stochastic dual descent. b: (n,) or (n,s)."""
+    b2, squeeze = as_matrix_rhs(b)
+    n, s = b2.shape
+    sigma2 = op.noise
+    beta = step_size_times_n / n
+    r = (100.0 / num_steps) if averaging is None else averaging  # §4.2.3: r = 100/t_max
+
+    a0 = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
+
+    def step(carry, t):
+        alpha, vel, avg = carry
+        idx = jax.random.randint(jax.random.fold_in(key, t), (batch_size,), 0, n)
+        look = alpha + momentum * vel  # Nesterov lookahead
+        rows = op.rows(idx)  # (p, n) = k_i rows
+        # (k_i + σ² e_i)ᵀ look − b_i   (full dual gradient coordinate — Eq. 4.25)
+        resid = rows @ look + sigma2 * look[idx] - b2[idx]  # (p, s)
+        g_scaled = (n / batch_size) * resid
+        vel = momentum * vel
+        vel = vel.at[idx].add(-beta * g_scaled)
+        alpha = alpha + vel
+        avg = r * alpha + (1.0 - r) * avg  # geometric iterate averaging
+        return (alpha, vel, avg), None
+
+    init = (a0, jnp.zeros_like(a0), a0)
+    (alpha, _, avg), _ = jax.lax.scan(step, init, jnp.arange(num_steps))
+    return finalize(op, avg, b2, num_steps, squeeze)

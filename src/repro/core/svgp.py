@@ -1,0 +1,127 @@
+"""Sparse variational GP baselines (§2.2.1) — the paper's main comparison methods.
+
+* ``sgpr``: Titsias (2009) collapsed bound  L_SGPR(Z) = log N(y|0, Q_XX+σ²I) − tr-term
+  (Eq. 2.47) with the exact optimal q; predictive Eqs. 2.49/2.50.
+* ``svgp_fit``: Hensman et al. (2013) stochastic variational inference with explicit
+  (m, S) posterior and natural-gradient steps (Eqs. 2.53/2.54) on mini-batches.
+
+Pathwise sampling from the SVGP posterior uses Eq. 3.13 machinery via core/inducing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_fn import KernelParams, gram
+
+
+class SGPRPosterior(NamedTuple):
+    params: KernelParams
+    z: jax.Array
+    chol_b: jax.Array  # chol(K_ZZ + σ⁻²K_ZX K_XZ)
+    chol_kzz: jax.Array
+    proj_y: jax.Array  # σ⁻² (K_ZZ + σ⁻²K_ZX K_XZ)⁻¹ K_ZX y
+
+    def mean(self, xs: jax.Array) -> jax.Array:
+        return gram(self.params, xs, self.z) @ self.proj_y
+
+    def var(self, xs: jax.Array) -> jax.Array:
+        kxz = gram(self.params, xs, self.z)  # (n*, m)
+        a = jax.scipy.linalg.solve_triangular(self.chol_kzz, kxz.T, lower=True)
+        b = jax.scipy.linalg.solve_triangular(self.chol_b, kxz.T, lower=True)
+        kss = self.params.signal * jnp.ones(xs.shape[0])
+        return kss - jnp.sum(a * a, axis=0) + jnp.sum(b * b, axis=0)
+
+
+def sgpr(params: KernelParams, x: jax.Array, y: jax.Array, z: jax.Array) -> SGPRPosterior:
+    m = z.shape[0]
+    sigma2 = params.noise
+    kzz = gram(params, z) + 1e-5 * params.signal * jnp.eye(m)
+    kzx = gram(params, z, x)
+    b = kzz + (kzx @ kzx.T) / sigma2
+    # fp32 rounding in K_ZX K_XZ can push the smallest eigenvalue slightly negative
+    # (scale ~ n·κ/σ²); ridge proportional to the matrix scale keeps chol finite
+    b = b + (3e-5 * jnp.trace(b) / m) * jnp.eye(m)
+    chol_b = jnp.linalg.cholesky(b)
+    proj_y = jax.scipy.linalg.cho_solve((chol_b, True), kzx @ y) / sigma2
+    return SGPRPosterior(
+        params=params,
+        z=z,
+        chol_b=chol_b,
+        chol_kzz=jnp.linalg.cholesky(kzz),
+        proj_y=proj_y,
+    )
+
+
+def sgpr_elbo(params: KernelParams, x: jax.Array, y: jax.Array, z: jax.Array) -> jax.Array:
+    """Collapsed bound (Eq. 2.47): log N(y|0, Q+σ²I) − tr(K−Q)/(2σ²)."""
+    n, m = x.shape[0], z.shape[0]
+    sigma2 = params.noise
+    kzz = gram(params, z) + 1e-5 * params.signal * jnp.eye(m)
+    kzx = gram(params, z, x)
+    lz = jnp.linalg.cholesky(kzz)
+    a = jax.scipy.linalg.solve_triangular(lz, kzx, lower=True) / jnp.sqrt(sigma2)  # (m,n)
+    b = jnp.eye(m) + a @ a.T
+    lb = jnp.linalg.cholesky(b)
+    c = jax.scipy.linalg.solve_triangular(lb, a @ y, lower=True) / jnp.sqrt(sigma2)
+    log_det = jnp.sum(jnp.log(jnp.diag(lb))) + 0.5 * n * jnp.log(sigma2)
+    quad = 0.5 * (jnp.dot(y, y) / sigma2 - jnp.dot(c, c))
+    trace = 0.5 / sigma2 * (params.signal * n - sigma2 * jnp.sum(a * a))
+    return -log_det - quad - 0.5 * n * jnp.log(2 * jnp.pi) - trace
+
+
+@dataclasses.dataclass
+class SVGPState:
+    theta1: jax.Array  # S⁻¹ m natural parameter (m,)
+    theta2: jax.Array  # −½ S⁻¹ (m, m)
+
+
+def svgp_natgrad_step(
+    params: KernelParams,
+    x_batch: jax.Array,
+    y_batch: jax.Array,
+    z: jax.Array,
+    state: SVGPState,
+    n_total: int,
+    lr: float = 0.5,
+) -> SVGPState:
+    """One natural-gradient step (Eqs. 2.53/2.54), mini-batch scaled."""
+    m = z.shape[0]
+    sigma2 = params.noise
+    kzz = gram(params, z) + 1e-5 * params.signal * jnp.eye(m)
+    chol = jnp.linalg.cholesky(kzz)
+    kzb = gram(params, z, x_batch)  # (m, b)
+    # K_ZZ⁻¹ applied via cholesky solves (fp32 inv() of an ill-conditioned SE gram
+    # corrupts the natural-gradient target by O(0.5) in prediction space)
+    a = jax.scipy.linalg.cho_solve((chol, True), kzb)  # K_ZZ⁻¹ K_Zb  (m, b)
+    scale = n_total / x_batch.shape[0]
+    lam = (a @ a.T) * (scale / sigma2) + jax.scipy.linalg.cho_solve(
+        (chol, True), jnp.eye(m))
+    t1_target = (a @ y_batch) * (scale / sigma2)
+    theta1 = state.theta1 + lr * (t1_target - state.theta1)
+    theta2 = state.theta2 + lr * (-0.5 * lam - state.theta2)
+    return SVGPState(theta1=theta1, theta2=theta2)
+
+
+def svgp_mean_var(params: KernelParams, z: jax.Array, state: SVGPState, xs: jax.Array):
+    prec = -2.0 * state.theta2
+    prec = prec + (1e-6 * jnp.trace(prec) / prec.shape[0]) * jnp.eye(prec.shape[0])
+    chol_p = jnp.linalg.cholesky(prec)
+    s_cov = jax.scipy.linalg.cho_solve((chol_p, True), jnp.eye(prec.shape[0]))
+    mu = jax.scipy.linalg.cho_solve((chol_p, True), state.theta1)
+    m = z.shape[0]
+    kzz = gram(params, z) + 1e-5 * params.signal * jnp.eye(m)
+    chol = jnp.linalg.cholesky(kzz)
+    ksz = gram(params, xs, z)
+    a = jax.scipy.linalg.cho_solve((chol, True), ksz.T).T  # K_sZ K_ZZ⁻¹
+    mean = a @ mu
+    var = (
+        params.signal
+        - jnp.sum(a * ksz, axis=1)
+        + jnp.sum((a @ s_cov) * a, axis=1)
+    )
+    return mean, var

@@ -1,0 +1,115 @@
+"""Causal flash attention Pallas TPU kernel (LM substrate hot-spot).
+
+Online-softmax tiling: for each (batch·head, q-block) the kernel streams kv-blocks,
+keeping running max m, normaliser l, and the (bq × dh) output accumulator in VMEM.
+Causal masking skips fully-masked kv blocks. GQA is handled in ops.py by indexing kv
+heads (no materialised head broadcast).
+
+TARGET: TPU (MXU 128-aligned bq/bk). Validated via interpret=True against
+ref.flash_attention_ref; the dry-run/train path uses the pure-jnp reference on CPU
+and this kernel when backend == "tpu" (models/attention.py flag).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, bq, bk, nkv,
+                  causal, scale, kv_len):
+    qi, kj = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq
+    k_start = kj * bk
+    run = (not causal) or (k_start <= q_start + bq - 1)
+
+    @pl.when(jnp.asarray(run))
+    def _block():
+        q = q_ref[0]  # (bq, d)
+        k = k_ref[0]  # (bk, d)
+        v = v_ref[0]  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            s = jnp.where(rows >= cols, s, _NEG_INF)
+        if kv_len is not None:  # padding mask (S padded to a block multiple)
+            s = jnp.where(cols < kv_len, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1)
+        acc_ref[...] = corr[:, None] * acc_ref[...] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kj == nkv - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "kv_len", "interpret")
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    kv_len=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """q,k,v: (BH, S, D) — batch·heads flattened, kv already GQA-expanded indices.
+
+    S must be a multiple of the block sizes (ops.py pads and passes the true
+    length via kv_len so padded keys are masked out)."""
+    bh, s, d = q.shape
+    assert s % block_q == 0 and s % block_k == 0
+    nq, nkv = s // block_q, s // block_k
+    scale = d**-0.5
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            bq=block_q,
+            bk=block_k,
+            nkv=nkv,
+            causal=causal,
+            scale=scale,
+            kv_len=kv_len,
+        ),
+        grid=(bh, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

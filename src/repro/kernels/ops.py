@@ -1,0 +1,105 @@
+"""Jit'd public wrappers around the Pallas kernels: padding, lengthscale folding,
+GQA head expansion, and interpret-mode dispatch (CPU validation vs TPU execution).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .gram_matvec import gram_matvec_pallas
+from .rff_matvec import rff_matvec_pallas
+from .flash_attention import flash_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(a: jax.Array, mult: int) -> jax.Array:
+    pad = (-a.shape[0]) % mult
+    return a if pad == 0 else jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+
+
+def gram_matvec(params, x, v, z=None, *, jitter=None, block=256, interpret=None):
+    """(σ_f² k(x,z) + jitter I) @ v — Pallas fused Gram matvec (see gram_matvec.py).
+
+    params: core.kernels_fn.KernelParams. v: (m,) or (m,s).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    squeeze = v.ndim == 1
+    v2 = v[:, None] if squeeze else v
+    ls = params.lengthscale
+    xs = x / ls
+    zs = xs if z is None else z / ls
+    n, m = xs.shape[0], zs.shape[0]
+    jit_val = 0.0 if jitter is None else float(jitter)
+    xp = _pad_rows(xs, block)
+    zp = _pad_rows(zs, block)
+    vp = _pad_rows(v2, block)
+    out = gram_matvec_pallas(
+        xp,
+        zp,
+        vp,
+        kind=params.kind,
+        signal=float(params.signal),
+        jitter=jit_val,
+        block_m=block,
+        block_n=block,
+        interpret=interpret,
+    )[:n]
+    return out[:, 0] if squeeze else out
+
+
+def rff_matvec(x, omega, w, *, signal=1.0, block=256, interpret=None):
+    """Φ(x) @ w (paired sin/cos RFF) — fused, feature matrix never in HBM."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    n = x.shape[0]
+    m_true = omega.shape[0]
+    xp = _pad_rows(x, block)
+    pad_f = (-m_true) % block
+    if pad_f:
+        # padded ω rows give cos→1 features, but the matching padded w rows are zero,
+        # so their contribution vanishes; only the 1/m normalisation needs fixing.
+        omega = jnp.pad(omega, ((0, pad_f), (0, 0)))
+        w = jnp.concatenate(
+            [
+                jnp.pad(w[:m_true], ((0, pad_f), (0, 0))),
+                jnp.pad(w[m_true:], ((0, pad_f), (0, 0))),
+            ],
+            axis=0,
+        )
+    m_pad = m_true + pad_f
+    signal_adj = float(signal) * m_pad / m_true  # sqrt(adj/m_pad) == sqrt(signal/m_true)
+    out = rff_matvec_pallas(
+        xp, omega, w, signal=signal_adj, block_m=block, block_f=block,
+        interpret=interpret,
+    )[:n]
+    return out
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128, interpret=None):
+    """q: (b, s, hq, d), k/v: (b, s, hkv, d) with hq % hkv == 0 (GQA) → (b, s, hq, d)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    assert hq % hkv == 0
+    group = hq // hkv
+    # GQA: index kv heads per q head (gather, no broadcast materialisation pre-kernel)
+    head_map = jnp.arange(hq) // group
+    kq = k[:, :, head_map]  # (b, s, hq, d)
+    vq = v[:, :, head_map]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    kf = kq.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    vf = vq.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    pad = (-s) % max(block_q, block_k)
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0)))
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+    out = flash_attention_pallas(
+        qf, kf, vf, causal=causal, block_q=block_q, block_k=block_k,
+        kv_len=(s if pad else None), interpret=interpret,
+    )[:, :s]
+    return out.reshape(b, hq, s, d).transpose(0, 2, 1, 3)

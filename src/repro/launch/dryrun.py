@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run (deliverable e) + roofline extraction (deliverable g).
+
+For every (architecture × input shape) cell:
+  1. build the production mesh (16×16 single-pod, or 2×16×16 multi-pod),
+  2. jit the step function with explicit in/out shardings,
+  3. .lower(**abstract inputs).compile()  — proving the distribution config is
+     coherent (sharding mismatches / compile-OOM / unsupported collectives fail here),
+  4. print memory_analysis() (per-device fit) and cost_analysis(),
+  5. run the loop-aware HLO profiler (hlo_analysis) for flops / bytes / collective
+     traffic and emit one JSON line per cell for EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod --out dryrun.jsonl
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs.base import SHAPES, ModelConfig, ShapeConfig, cell_is_applicable, get_config, list_configs
+from ..models import model as model_lib
+from ..models.param import is_leaf
+from ..models.sharding_ctx import use_mesh
+from ..train.optim import AdamWConfig
+from . import steps as steps_lib
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh, num_chips
+from .roofline import make_terms, model_flops
+from .sharding import (
+    activation_rules,
+    batch_sharding,
+    cache_shardings,
+    param_shardings,
+    replicated,
+    spec_for_axes,
+)
+
+
+def _input_shardings(cfg, shape, mesh, specs: dict):
+    b = shape.global_batch
+    out = {}
+    for k, v in specs.items():
+        if k == "cache_index":
+            out[k] = replicated(mesh)
+        else:
+            out[k] = batch_sharding(mesh, v.shape, b)
+    return out
+
+
+def _opt_shardings(params_sh, mesh):
+    from ..train.optim import OptState
+
+    return OptState(mu=params_sh, nu=params_sh, step=replicated(mesh))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               config_override=None, opt_cfg: AdamWConfig = AdamWConfig(),
+               profile: str = "tp", micro_steps: int = 1):
+    """Lower + compile one cell; returns (record dict, compiled) — compiled is None
+    for inapplicable (skipped) cells."""
+    cfg: ModelConfig = config_override or get_config(arch)
+    shape: ShapeConfig = SHAPES[shape_name]
+    ok, why = cell_is_applicable(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = num_chips(mesh)
+    base = dict(arch=arch, shape=shape_name, mesh="x".join(map(str, mesh.devices.shape)),
+                chips=chips, mode=shape.mode, profile=profile)
+    if not ok:
+        return dict(base, status="skipped", reason=why), None
+
+    schema = model_lib.param_schema(cfg)
+    params_abs = model_lib.abstract_model_params(cfg, steps_lib.COMPUTE_DTYPE)
+    params_sh = param_shardings(schema, mesh, profile)
+    inputs = steps_lib.input_specs(cfg, shape)
+    inputs_sh = _input_shardings(cfg, shape, mesh, inputs)
+    rules = activation_rules(mesh, profile)
+
+    t0 = time.time()
+    with use_mesh(mesh, rules):
+        if shape.mode == "train":
+            from ..train.optim import abstract_opt_state
+
+            opt_abs = abstract_opt_state(params_abs, opt_cfg)
+            opt_sh = _opt_shardings(params_sh, mesh)
+            step = steps_lib.make_train_step(cfg, opt_cfg, micro_steps=micro_steps)
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, opt_sh, inputs_sh),
+                out_shardings=(params_sh, opt_sh, replicated(mesh)),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_abs, opt_abs, inputs)
+        elif shape.mode == "prefill":
+            cache_abs = model_lib.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+            cache_sh = cache_shardings(cache_abs, mesh, shape.global_batch)
+            step = steps_lib.make_prefill_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, cache_sh, inputs_sh),
+                out_shardings=(replicated(mesh), cache_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_abs, cache_abs, inputs)
+        else:  # decode
+            cache_abs = model_lib.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+            cache_sh = cache_shardings(cache_abs, mesh, shape.global_batch)
+            step = steps_lib.make_serve_step(cfg)
+            tok_sh = inputs_sh["token"]
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, cache_sh, tok_sh, replicated(mesh)),
+                out_shardings=(tok_sh, tok_sh, cache_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(
+                params_abs, cache_abs, inputs["token"], inputs["cache_index"]
+            )
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    prof = analyze_hlo(hlo)
+
+    n_params = model_lib.count_params(cfg)
+    n_active = model_lib.active_param_count(cfg)
+    mflops = model_flops(cfg, shape, n_active)
+    # per-device flops from the profiler × chips = global; memory term uses the
+    # fusion-aware bytes model (the raw operand+output sum is kept as upper bound)
+    terms = make_terms(prof.flops * chips, prof.bytes_fused * chips,
+                       prof.collective_bytes * chips, mflops, chips)
+
+    rec = dict(
+        base,
+        status="ok",
+        compile_s=round(compile_s, 1),
+        params=n_params,
+        active_params=n_active,
+        hbm_per_device=dict(
+            arguments=mem.argument_size_in_bytes,
+            temps=mem.temp_size_in_bytes,
+            outputs=mem.output_size_in_bytes,
+            total_gb=round(
+                (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                 + mem.output_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3),
+        ),
+        cost_analysis=dict(
+            flops_raw=cost.get("flops", 0.0),
+            bytes_raw=cost.get("bytes accessed", 0.0),
+        ),
+        hlo_profile=dict(
+            flops_per_device=prof.flops,
+            bytes_per_device=prof.bytes_fused,
+            bytes_upper_per_device=prof.bytes,
+            collective_bytes_per_device=prof.collective_bytes,
+            collective_by_kind=prof.collective_by_kind,
+            collective_counts=prof.collective_counts,
+        ),
+        roofline=dict(
+            compute_s=terms.compute_s,
+            memory_s=terms.memory_s,
+            collective_s=terms.collective_s,
+            dominant=terms.dominant,
+            model_flops=mflops,
+            useful_fraction=round(terms.useful_fraction, 4),
+            mfu=round(terms.mfu, 4),
+            step_time_s=terms.step_time_s,
+        ),
+    )
+    return rec, compiled
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--resume", action="store_true", help="skip cells already in --out")
+    ap.add_argument("--profile", default="tp", help="sharding profile: tp | fsdp")
+    args = ap.parse_args(argv)
+
+    cells = []
+    archs = list_configs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    done = set()
+    if args.resume and args.out and os.path.exists(args.out):
+        for line in open(args.out):
+            try:
+                r = json.loads(line)
+                done.add((r["arch"], r["shape"], r["mesh"]))
+            except Exception:
+                pass
+
+    failures = 0
+    for a, s, mp in cells:
+        mesh_tag = "2x16x16" if mp else "16x16"
+        if (a, s, mesh_tag) in done:
+            print(f"[dryrun] {a} × {s} × {mesh_tag}: already done, skipping")
+            continue
+        print(f"[dryrun] {a} × {s} × {mesh_tag} ...", flush=True)
+        try:
+            rec, _ = lower_cell(a, s, multi_pod=mp, profile=args.profile)
+        except Exception as e:
+            traceback.print_exc()
+            rec = dict(arch=a, shape=s, mesh=mesh_tag, status="error",
+                       error=f"{type(e).__name__}: {e}")
+            failures += 1
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"  status=ok  compile={rec['compile_s']}s  "
+                  f"hbm/dev={rec['hbm_per_device']['total_gb']}GB  "
+                  f"dominant={r['dominant']}  mfu={r['mfu']}")
+        else:
+            print(f"  status={rec['status']}  {rec.get('reason', rec.get('error',''))}")
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    print(f"[dryrun] finished; {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,273 @@
+"""Post-SPMD HLO static profiler for the dry-run roofline (§Roofline).
+
+`compiled.cost_analysis()` does not multiply through `while` loops (lax.scan over
+layers counts as ONE iteration) and reports no collective traffic at all. This
+module re-derives all three roofline inputs from `compiled.as_text()`:
+
+  flops             — 2·M·N·K for every `dot` (+ conv), × enclosing-loop trip counts
+  bytes             — Σ (operand + output bytes) of top-level instructions
+                      (fusion-internal ops excluded: a fusion is one HBM round trip)
+  collective_bytes  — Σ operand bytes of all-gather / all-reduce / reduce-scatter /
+                      all-to-all / collective-permute, × trip counts
+
+Trip counts come from the `backend_config={"known_trip_count":{"n":...}}` attribute
+XLA attaches to compiled `while` ops (fallback: the largest constant compared in the
+loop condition). All sizes are PER DEVICE (the text is the partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)"
+    r"\[([0-9,]*)\]"
+)
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_OPS = ("parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "copy-start",
+             "copy-done")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(_DTYPE_BYTES[d] * _shape_elems(dims) for d, dims in _SHAPE_RE.findall(text))
+
+
+@dataclasses.dataclass
+class HloProfile:
+    flops: float
+    bytes: float  # upper bound: every top-level op pays operand+output traffic
+    bytes_fused: float  # TPU-fusion model: standalone elementwise ops fuse for free
+    collective_bytes: float
+    collective_by_kind: dict
+    collective_counts: dict
+    notes: dict
+
+
+# Ops that materialise HBM traffic even under aggressive fusion (the bytes_fused
+# model): matmuls, fusions XLA already formed, data movement, and cache updates.
+_MATERIALIZING = ("dot", "fusion", "dynamic-update-slice", "dynamic-slice", "gather",
+                  "scatter", "copy", "convolution", "reduce", "transpose", "concatenate",
+                  "pad", "reduce-window", "select-and-scatter", "sort", "rng")
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    lines: list
+    shapes: dict  # %name -> shape-text (result declarations + typed params)
+
+
+def _parse_computations(hlo: str) -> dict[str, "_Comp"]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.endswith("{") and "->" in line and "=" not in line.split("(")[0]:
+            header = line[:-1].strip()
+            tok = header.split()[0] if not header.startswith("ENTRY") else header.split()[1]
+            name = tok.lstrip("%")
+            cur = _Comp(name, [], {})
+            comps[name] = cur
+            # typed params in the signature: "(p: f32[2,3], q: (s32[], f32[4]))"
+            sig = header[len(tok) + (6 if header.startswith("ENTRY") else 0):]
+            for m in re.finditer(r"([\w.\-]+)\s*:\s*([^,()]+(?:\([^)]*\))?)", sig):
+                cur.shapes["%" + m.group(1)] = m.group(2)
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        cur.lines.append(line)
+        if "=" in line:
+            lhs, rhs = line.split("=", 1)
+            mname = re.search(r"%[\w.\-]+", lhs) or re.search(r"^\s*([\w.\-]+)", lhs)
+            if mname:
+                nm = mname.group(0).strip()
+                if not nm.startswith("%"):
+                    nm = "%" + nm
+                cur.shapes[nm] = rhs.split("(")[0]
+    return comps
+
+
+def _opcode(rhs: str) -> str:
+    """The op name after the result type, e.g. 'bf16[2]{0} all-gather(...'."""
+    m = re.search(r"\}?\s*([a-z][\w\-]*)\(", rhs)
+    return m.group(1) if m else ""
+
+
+def _operands(rhs: str) -> list[str]:
+    inner = rhs.split("(", 1)[1] if "(" in rhs else ""
+    # cut at the matching close paren — approximate: stop at "), " attr boundary
+    inner = re.split(r"\)\s*,\s*[a-z_]+=", inner)[0]
+    return re.findall(r"%[\w.\-]+", inner)
+
+
+def _trip_count(line: str, comps, cond_name: str | None) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    if cond_name and cond_name in comps:
+        for ln in comps[cond_name].lines:
+            for mm in re.finditer(r"constant\((\d+)\)", ln):
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+def _dot_flops(comp: _Comp, line: str) -> float:
+    """2 × out_elems × contracted_elems for a dot instruction."""
+    lhs, rhs = line.split("=", 1)
+    out = _SHAPE_RE.search(rhs)  # result type leads the rhs
+    if not out:
+        return 0.0
+    out_elems = _shape_elems(out.group(2))
+    ops = _operands(rhs)
+    mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+    contracted = 1
+    if ops and mcd:
+        lhs_shape = comp.shapes.get(ops[0], "")
+        sm = _SHAPE_RE.search(lhs_shape)
+        if sm:
+            dims = [int(x) for x in sm.group(2).split(",") if x]
+            for ci in mcd.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contracted *= dims[int(ci)]
+    return 2.0 * out_elems * contracted
+
+
+def _conv_flops(comp: _Comp, line: str) -> float:
+    _, rhs = line.split("=", 1)
+    out = _SHAPE_RE.search(rhs)
+    ops = _operands(rhs)
+    if not out or len(ops) < 2:
+        return 0.0
+    out_elems = _shape_elems(out.group(2))
+    ker = _SHAPE_RE.search(comp.shapes.get(ops[1], ""))
+    ker_elems = _shape_elems(ker.group(2)) if ker else 1
+    mfg = re.search(r"feature_group_count=(\d+)", rhs)
+    fg = int(mfg.group(1)) if mfg else 1
+    return 2.0 * out_elems * ker_elems / max(fg, 1)
+
+
+def analyze_hlo(hlo: str) -> HloProfile:
+    comps = _parse_computations(hlo)
+
+    # ---- call graph: (parent, child, kind, mult) --------------------------------
+    called: set[str] = set()
+    edges: dict[str, list] = defaultdict(list)
+    for c in comps.values():
+        for line in c.lines:
+            if "=" not in line:
+                continue
+            rhs = line.split("=", 1)[1]
+            if re.search(r"\bwhile\(", rhs):
+                mb = re.search(r"body=%?([\w.\-]+)", rhs)
+                mc = re.search(r"condition=%?([\w.\-]+)", rhs)
+                if mb:
+                    tc = _trip_count(line, comps, mc.group(1) if mc else None)
+                    edges[c.name].append((mb.group(1), "loop", tc))
+                    called.add(mb.group(1))
+                    if mc:
+                        edges[c.name].append((mc.group(1), "loop", tc))
+                        called.add(mc.group(1))
+            for m in re.finditer(r"(?:calls|to_apply|branch_computations)=\{?%?([\w.\-,% ]+)\}?", rhs):
+                for t in re.split(r"[,\s]+", m.group(1)):
+                    t = t.lstrip("%")
+                    if t in comps:
+                        kind = "fused" if "calls=" in rhs or "to_apply=" in rhs else "branch"
+                        edges[c.name].append((t, kind, 1))
+                        called.add(t)
+
+    # multiplier + topline flag per computation
+    mult: dict[str, float] = {}
+    topline: dict[str, bool] = {}
+
+    def visit(name: str, m: float, top: bool, depth=0):
+        if name not in comps or depth > 50:
+            return
+        if mult.get(name, 0.0) >= m and topline.get(name, False) >= top:
+            return
+        mult[name] = max(mult.get(name, 0.0), m)
+        topline[name] = topline.get(name, False) or top
+        for child, kind, tc in edges.get(name, []):
+            visit(child, m * tc, top and kind in ("loop", "branch"), depth + 1)
+
+    entries = [n for n in comps if n not in called]
+    for e in entries or list(comps):
+        visit(e, 1.0, True)
+
+    flops = 0.0
+    bytes_ = 0.0
+    bytes_fused = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_counts: dict[str, int] = defaultdict(int)
+    for c in comps.values():
+        m = mult.get(c.name, 1.0)
+        top = topline.get(c.name, False)
+        for line in c.lines:
+            if "=" not in line:
+                continue
+            rhs = line.split("=", 1)[1]
+            op = _opcode(rhs)
+            if op == "dot":
+                flops += m * _dot_flops(c, line)
+            elif op.startswith("convolution"):
+                flops += m * _conv_flops(c, line)
+            coll = next((k for k in _COLLECTIVES if op.startswith(k)), None)
+            if coll is not None and not op.endswith("-done"):
+                ops_ = _operands(rhs)
+                sz = sum(_shapes_bytes(c.shapes.get(o, "")) for o in ops_)
+                if sz == 0:  # fallback: result shape
+                    sz = _shapes_bytes(rhs.split("(")[0])
+                coll_bytes[coll] += m * sz
+                coll_counts[coll] += 1
+            if top and op and not any(op.startswith(s) for s in _SKIP_OPS):
+                out_b = _shapes_bytes(rhs.split("(")[0])
+                ops_ = _operands(rhs)
+                opd_b = sum(_shapes_bytes(c.shapes.get(o, "")) for o in ops_)
+                bytes_ += m * (out_b + opd_b)
+                # slicing ops touch only the slice, not the whole buffer; DUS/scatter
+                # update in place (read+write the update region)
+                if op.startswith(("dynamic-slice", "gather")):
+                    eff = 2.0 * out_b
+                elif op.startswith("dynamic-update-slice"):
+                    upd = _shapes_bytes(c.shapes.get(ops_[1], "")) if len(ops_) > 1 else out_b
+                    eff = 2.0 * min(upd, out_b)
+                elif op.startswith("scatter"):
+                    upd = _shapes_bytes(c.shapes.get(ops_[-1], "")) if ops_ else out_b
+                    eff = 2.0 * min(upd, out_b)
+                else:
+                    eff = out_b + opd_b
+                if any(op.startswith(k) for k in _MATERIALIZING) or coll is not None:
+                    bytes_fused += m * eff
+
+    return HloProfile(
+        flops=flops,
+        bytes=bytes_,
+        bytes_fused=bytes_fused,
+        collective_bytes=sum(coll_bytes.values()),
+        collective_by_kind=dict(coll_bytes),
+        collective_counts=dict(coll_counts),
+        notes={"computations": len(comps)},
+    )

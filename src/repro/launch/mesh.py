@@ -1,0 +1,32 @@
+"""Production mesh topology (DESIGN.md §5).
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the "pod" axis is
+pure data parallelism across ICI-disjoint pods (gradient all-reduce crosses DCN).
+
+Functions, not module-level constants: importing this module never touches jax
+device state (smoke tests must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh with the same logical axes — CPU smoke tests of sharded code."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes that carry the batch (pure-DP axes)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def num_chips(mesh) -> int:
+    return mesh.devices.size

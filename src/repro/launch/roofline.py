@@ -1,0 +1,111 @@
+"""Roofline model for the TPU v5e target (§Roofline).
+
+    compute term    = HLO_FLOPs        / (chips × 197e12 FLOP/s)
+    memory term     = HLO_bytes        / (chips × 819e9  B/s)
+    collective term = collective_bytes / (chips × 50e9   B/s per ICI link)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). XLA's cost analysis does
+NOT multiply through `while` loops (lax.scan over layers), so dryrun.py scales both
+by the known scan trip structure before they reach this module; MODEL_FLOPS
+(analytic 6·N·D, or 6·N_active·D for MoE) is reported alongside as the
+useful-compute yardstick.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound assuming perfect overlap of the three engines."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs / (chips × peak × step_time) — the roofline fraction."""
+        t = self.step_time_s
+        return self.model_flops / (self.chips * PEAK_FLOPS * t) if t > 0 else 0.0
+
+
+def make_terms(hlo_flops: float, hlo_bytes: float, coll_bytes: float,
+               model_flops: float, chips: int) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=hlo_flops / (chips * PEAK_FLOPS),
+        memory_s=hlo_bytes / (chips * HBM_BW),
+        collective_s=coll_bytes / (chips * ICI_BW),
+        hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes,
+        collective_bytes=coll_bytes,
+        model_flops=model_flops,
+        chips=chips,
+    )
+
+
+# ------------------------------------------------------- analytic FLOPs -------
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig, active_params: int) -> float:
+    """6·N_active·D for training; 2·N_active per decoded token (+ attention reads).
+
+    Attention FLOPs (the S² term) are added explicitly since 6·N·D ignores them:
+      train:  6·b·s²·h·dh·L   (fwd 2 + bwd 4; ×2 for the two matmuls QK^T and PV
+              halves folded into the 12·b·s²·d_attn convention)
+      decode: 4·b·S·h·dh per attention layer (one query against S cached keys).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    n_attn = _attention_layers(cfg)
+    dh = cfg.head_dim
+    h = cfg.num_heads
+    if shape.mode == "train":
+        dense = 6.0 * active_params * b * s
+        attn = 12.0 * b * s * s * h * dh * n_attn * 0.5  # causal halves the square
+        return dense + attn
+    if shape.mode == "prefill":
+        dense = 2.0 * active_params * b * s
+        attn = 4.0 * b * s * s * h * dh * n_attn * 0.5
+        return dense + attn
+    # decode: one token, cache length s
+    dense = 2.0 * active_params * b
+    attn = 4.0 * b * s * h * dh * n_attn
+    return dense + attn
+
+
+def _attention_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_layer_period
+    if cfg.is_encdec:
+        return cfg.num_layers * 2 + cfg.encoder_layers  # self + cross + encoder
+    return cfg.num_layers

@@ -1,0 +1,231 @@
+"""Logical-axis → physical-mesh sharding rules (MaxText-style; DESIGN.md §5).
+
+Parameters are FSDP-sharded: the "embed" (d_model) axis shards over the mesh "data"
+axis, and tensor-parallel axes (heads / kv / mlp / experts / vocab / d_inner /
+kv_lora) shard over "model". The "pod" axis is pure DP for parameters (weights are
+replicated across pods; gradients all-reduce over it — the cross-DCN collective).
+
+Activations: batch over ("pod","data"); per-token feature axes over "model".
+
+A weight may name several logical axes that map to the same mesh axis (e.g. MoE
+(experts, embed, mlp)); `spec_for_axes` assigns each mesh axis at most once, in
+rule-priority order, so PartitionSpecs stay valid.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models.param import P, is_leaf
+
+
+# Priority-ordered: earlier rules claim their mesh axis first.
+PARAM_RULES: dict[str, Optional[tuple[str, ...]]] = {
+    # tensor/expert parallel dims → "model"
+    "experts": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "kv_lora": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "d_inner": ("model",),
+    # FSDP dim → ("pod","data"): on the multi-pod mesh parameters + optimizer
+    # state shard over BOTH DP axes (ZeRO-3 over 32 ways) — required to fit the
+    # 398B-param archs; single-pod meshes simply drop the absent "pod" axis.
+    "embed": ("pod", "data"),
+    # layer-stack dim stays replicated (scanned)
+    "layers": None,
+}
+
+# Pure-FSDP profile (§Perf hillclimb): for models whose per-device compute is small
+# (≤33B dense), 16-way tensor parallelism makes every layer pay (b,s,d)-sized
+# all-reduces that dwarf the matmul time. This profile retires the "model" axis
+# into extra data/FSDP parallelism: weights shard d_model over ALL devices, batch
+# shards over all devices, and the only collectives left are the FSDP param
+# all-gathers + gradient reduce-scatters (overlappable with compute).
+PARAM_RULES_FSDP: dict[str, Optional[tuple[str, ...]]] = {
+    "embed": ("pod", "data", "model"),
+    "layers": None,
+    "experts": None, "heads": None, "kv": None, "kv_lora": None,
+    "mlp": None, "vocab": None, "d_inner": None,
+}
+
+ACT_RULES_FSDP: dict[str, Optional[tuple[str, ...]]] = {
+    "batch": ("pod", "data", "model"),
+    "seq": None, "seq_act": None, "heads_act": None, "kv_act": None,
+    "mlp_act": None, "vocab_act": None, "experts_act": None,
+}
+
+PROFILES = {"tp": None, "fsdp": (PARAM_RULES_FSDP, ACT_RULES_FSDP)}
+
+ACT_RULES: dict[str, Optional[tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # Megatron-style sequence parallelism: the residual stream between blocks (and
+    # therefore the remat-saved carry stack of the layer scan) shards its sequence
+    # dim over "model". Without this the bf16 carry stack alone is
+    # L·b_local·s·d·2B ≈ 17 GB/device for llama3-8b train_4k.
+    "seq_act": ("model",),
+    "heads_act": ("model",),
+    "kv_act": ("model",),  # grouped-attention internals: shard the kv-heads dim
+    "mlp_act": ("model",),
+    "vocab_act": ("model",),
+    "experts_act": ("model",),
+}
+
+
+def _filter_rules(rules: dict, mesh: Mesh) -> dict:
+    """Drop mesh axes absent from this mesh (e.g. "pod" on the single-pod mesh)."""
+    out = {}
+    for k, v in rules.items():
+        if v is None:
+            out[k] = None
+        else:
+            kept = tuple(a for a in v if a in mesh.axis_names)
+            out[k] = kept if kept else None
+    return out
+
+
+def activation_rules(mesh: Mesh, profile: str = "tp") -> dict:
+    """Rules installed into models.sharding_ctx for with_sharding_constraint."""
+    base = ACT_RULES if PROFILES.get(profile) is None else PROFILES[profile][1]
+    r = _filter_rules(base, mesh)
+    # sharding_ctx expects a flat axis→mesh-axes mapping
+    return {k: (v if v is None else (v if len(v) > 1 else v[0])) for k, v in r.items()}
+
+
+def spec_for_axes(
+    logical: tuple, mesh: Mesh, rules: Optional[dict] = None
+) -> PartitionSpec:
+    """Build a PartitionSpec, assigning each mesh axis at most once (priority order
+    = PARAM_RULES declaration order, then positional order)."""
+    rules = _filter_rules(PARAM_RULES if rules is None else rules, mesh)
+    order = {name: i for i, name in enumerate(rules)}
+    used: set[str] = set()
+    spec: list = [None] * len(logical)
+    # visit dims by rule priority so e.g. "experts" beats "mlp" for the model axis
+    dims = sorted(
+        range(len(logical)),
+        key=lambda i: order.get(logical[i], len(order)),
+    )
+    for i in dims:
+        ax = logical[i]
+        mesh_axes = rules.get(ax)
+        if not mesh_axes:
+            continue
+        kept = tuple(a for a in mesh_axes if a not in used)
+        if not kept:
+            continue
+        used.update(kept)
+        spec[i] = kept if len(kept) > 1 else kept[0]
+    return PartitionSpec(*spec)
+
+
+def _mesh_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = (axes,) if isinstance(axes, str) else axes
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def evenize_spec(spec: PartitionSpec, shape: tuple, mesh: Mesh) -> PartitionSpec:
+    """jit in_shardings require each dim divisible by its shard count; drop mesh
+    axes (innermost first) on dims that don't divide (e.g. vocab 50280 over 16,
+    kv_heads 8 over 16)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else list(entry)
+        axes = list(axes)
+        while axes and shape[i] % _mesh_size(mesh, tuple(axes)) != 0:
+            axes.pop()  # drop innermost
+        out.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    return PartitionSpec(*out)
+
+
+def param_shardings(schema: Any, mesh: Mesh, profile: str = "tp") -> Any:
+    """NamedSharding tree matching a param schema (P-leaf tree)."""
+    rules = PARAM_RULES if PROFILES.get(profile) is None else PROFILES[profile][0]
+    return jax.tree.map(
+        lambda p: NamedSharding(
+            mesh, evenize_spec(spec_for_axes(p.axes, mesh, rules), p.shape, mesh)),
+        schema,
+        is_leaf=is_leaf,
+    )
+
+
+# ----------------------------------------------------------------- caches -----
+
+
+def _cache_spec(path: str, shape: tuple, mesh: Mesh, batch: int) -> PartitionSpec:
+    """KV/SSM-cache leaf sharding by leaf name (DESIGN.md §5).
+
+    gqa k/v:  (layers.., b, s, kv, dh) → batch over DP axes, kv heads over model.
+    mla ckv:  (layers.., b, s, r)      → batch over DP, latent r over model.
+    mla krope:(layers.., b, s, rope)   → batch over DP only (tiny).
+    mamba conv:(layers.., b, w, c)     → batch over DP, channels over model.
+    mamba ssm: (layers.., b, h, n, p)  → batch over DP, heads over model.
+    memory:   (b, enc_seq, d)          → batch over DP.
+
+    When batch == 1 (long_500k) the batch dim cannot shard; the cache *sequence*
+    dim takes the DP axes instead (sequence parallelism over the KV cache).
+    """
+    ndim = len(shape)
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    model_n = mesh.shape.get("model", 1)
+    leaf = path.rsplit("/", 1)[-1]
+    trailing = {"k": 4, "v": 4, "ckv": 3, "krope": 3, "conv": 3, "ssm": 4, "memory": 3}
+    n_lead = 0 if leaf == "memory" else ndim - trailing[leaf]
+    spec: list = [None] * ndim
+    seq_shard = batch == 1  # long_500k: batch can't shard → seq takes the DP axes
+    has_seq = leaf in ("k", "v", "ckv", "krope", "memory")
+    spec[n_lead] = None if seq_shard else dp_spec
+    if seq_shard and has_seq:
+        spec[n_lead + 1] = dp_spec
+    # "model" goes on the first trailing feature dim that divides evenly (kv-heads
+    # when divisible, else head_dim; ssm heads else state/head dims; conv channels)
+    if leaf != "krope" and leaf != "memory":
+        for i in range(n_lead + (2 if has_seq else 1), ndim):
+            if spec[i] is None and shape[i] % model_n == 0:
+                spec[i] = "model"
+                break
+    return evenize_spec(PartitionSpec(*spec), shape, mesh)
+
+
+def cache_shardings(cache_tree: Any, mesh: Mesh, batch: int) -> Any:
+    paths_leaves = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    specs = []
+    for path, leaf in paths_leaves:
+        name = "/".join(
+            getattr(k, "key", getattr(k, "idx", getattr(k, "name", "?"))).__str__()
+            for k in path
+        )
+        specs.append(NamedSharding(mesh, _cache_spec(name, leaf.shape, mesh, batch)))
+    treedef = jax.tree_util.tree_structure(cache_tree)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ----------------------------------------------------------------- inputs -----
+
+
+def batch_sharding(mesh: Mesh, shape: tuple, batch: int) -> NamedSharding:
+    """Token/label arrays: (b, s, ...) — batch over DP axes (replicated if b == 1)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+    spec: list = [None] * len(shape)
+    if batch > 1:
+        spec[0] = dp_spec
+    return NamedSharding(mesh, evenize_spec(PartitionSpec(*spec), shape, mesh))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PartitionSpec())

@@ -1,0 +1,129 @@
+"""Step functions lowered by the dry-run and driven by train.py / serve.py.
+
+    train_step(params, opt, batch)            → (params, opt, metrics)
+    prefill_step(params, cache, batch)        → (logits, cache)
+    serve_step(params, cache, token, index)   → (next_token, logits, cache)
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every *data* input
+of the step the shape lowers (tokens/labels, stub frame/patch embeddings, decode
+token + cache index). Params / optimizer state / caches get their own abstract trees
+(models.model.abstract_model_params, train.optim.abstract_opt_state, abstract_cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import model as model_lib
+from ..train.optim import AdamWConfig, OptState, adamw_update
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ----------------------------------------------------------------- inputs -----
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=COMPUTE_DTYPE) -> dict:
+    """Abstract data inputs for the step this (arch × shape) cell lowers."""
+    b, s = shape.global_batch, shape.seq_len
+    ints = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+    if shape.mode == "train":
+        specs = {"tokens": ints((b, s)), "labels": ints((b, s))}
+    elif shape.mode == "prefill":
+        specs = {"tokens": ints((b, s))}
+    else:  # decode: one new token against a cache of seq_len
+        specs = {"token": ints((b, 1)), "cache_index": ints(())}
+    if cfg.is_encdec and shape.mode != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), dtype)
+    if cfg.family == "vlm" and shape.mode != "decode":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), dtype
+        )
+    return specs
+
+
+# ------------------------------------------------------------------- loss -----
+
+
+def _next_token_loss(cfg: ModelConfig, logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy. logits (b,s,v) fp32, labels (b,s) int32."""
+    lmax = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - lmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    lab = jnp.take_along_axis(shifted, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - lab)
+
+
+# ------------------------------------------------------------------ steps -----
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                    micro_steps: int = 1):
+    """Fused fwd+bwd+AdamW step. micro_steps > 1 runs gradient accumulation over
+    batch slices (lax.scan): activation liveness drops ×micro_steps at the cost of
+    holding one fp32 grad accumulator (sharded like the params) — the §Perf
+    memory-term lever for the ≥132B cells."""
+
+    def loss_fn(p, batch):
+        logits = model_lib.forward_train(cfg, p, batch)
+        return _next_token_loss(cfg, logits, batch["labels"])
+
+    def train_step(params: Any, opt: OptState, batch: dict):
+        if micro_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((micro_steps, x.shape[0] // micro_steps)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = (acc[0] + l,
+                       jax.tree.map(lambda a, b_: a + b_.astype(a.dtype), acc[1], g))
+                return acc, None
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss_sum, grads), _ = jax.lax.scan(body, zero, micro)
+            loss = loss_sum / micro_steps
+            grads = jax.tree.map(lambda g: g / micro_steps, grads)
+        params2, opt2 = adamw_update(params, grads, opt, opt_cfg)
+        metrics = {"loss": loss, "step": opt2.step}
+        return params2, opt2, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params: Any, cache: Any, batch: dict):
+        logits, cache = model_lib.prefill(cfg, params, batch, cache)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params: Any, cache: Any, token: jax.Array, cache_index: jax.Array):
+        logits, cache = model_lib.decode_step(cfg, params, token, cache, cache_index)
+        next_token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------- helpers -----
+
+
+def abstract_state(cfg: ModelConfig, opt_cfg: AdamWConfig = AdamWConfig(),
+                   dtype=COMPUTE_DTYPE):
+    """Abstract (params, opt) trees for the train dry-run."""
+    from ..train.optim import abstract_opt_state
+
+    params = model_lib.abstract_model_params(cfg, dtype)
+    return params, abstract_opt_state(params, opt_cfg)

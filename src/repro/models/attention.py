@@ -1,0 +1,337 @@
+"""Attention mixers: GQA (llama-family) and MLA (deepseek-v2), each supporting
+train (full causal), prefill (causal + returns KV cache), and decode (1 token vs
+cache). Pure-jnp attention is the CPU/dry-run path; on TPU the flash-attention
+Pallas kernel (kernels/flash_attention.py) is selected via ``use_flash``.
+
+MLA caches the 512-d latent c_kv + shared rope key only (the paper point of MLA);
+the baseline decode up-projects the cached latents every step — the documented
+hillclimb (EXPERIMENTS.md §Perf) absorbs W_uk into the query instead.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .param import P
+from .layers import apply_rope, apply_mrope
+from .sharding_ctx import shard
+
+
+_Q_CHUNK = 512  # query-block size for the streaming (flash-style) path
+
+
+def _sdpa_block(qg, k, v, *, causal: bool, q_offset, kv_len):
+    """One query block. qg: (b,sq,hkv,g,dh); k,v: (b,sk,hkv,dh). fp32 softmax."""
+    b, sq, hkv, g, dh = qg.shape
+    # no explicit constraint on the grouped-head dims: kv_heads is often not a
+    # multiple of the model-axis size (8 vs 16), and forcing it causes involuntary
+    # full rematerialisation in SPMD (measured: +4 GB/device, +4.5 s memory term on
+    # llama3-8b train_4k). GSPMD propagates a consistent layout from wq/wk/wv.
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * (dh**-0.5)
+    sk = k.shape[1]
+    if causal:
+        rows = q_offset + jnp.arange(sq)[:, None]
+        cols = jnp.arange(sk)[None, :]
+        mask = rows >= cols
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    if kv_len is not None:  # decode: only first kv_len cache entries are valid
+        valid = jnp.arange(sk) < kv_len  # (sk,)
+        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return out.reshape(b, sq, hkv * g, dh)
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset=0, kv_len: Optional[jax.Array] = None):
+    """q: (b,sq,h,dh); k,v: (b,sk,hkv,dh), h % hkv == 0.
+
+    Long sequences stream over query blocks (lax.scan) so the (sq × sk) logits
+    tensor never materialises at once — O(q_chunk · sk) live memory, the pure-JAX
+    analogue of the Pallas flash kernel (kernels/flash_attention.py is the TPU
+    runtime path; this is the portable/dry-run path with identical semantics).
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    if sq <= _Q_CHUNK:
+        return _sdpa_block(qg, k, v, causal=causal, q_offset=q_offset, kv_len=kv_len)
+    # largest divisor of sq ≤ _Q_CHUNK (whisper's encoder length 1500 → 500)
+    qc = next(c for c in range(min(_Q_CHUNK, sq), 0, -1) if sq % c == 0)
+    nq = sq // qc
+    qb = jnp.moveaxis(qg.reshape(b, nq, qc, hkv, g, dh), 1, 0)
+
+    # remat the block: backward recomputes each chunk's logits/softmax instead of
+    # the inner scan stacking (nq, b, hkv, g, qc, sk) fp32 residuals — that stack
+    # would be the full s² tensor the streaming exists to avoid.
+    blk = jax.checkpoint(
+        lambda qblk, off: _sdpa_block(qblk, k, v, causal=causal, q_offset=off,
+                                      kv_len=kv_len),
+        prevent_cse=False,
+    )
+
+    def body(_, inp):
+        i, qblk = inp
+        return None, blk(qblk, q_offset + i * qc)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qb))  # (nq,b,qc,h,dh)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, dh)
+
+
+# ------------------------------------------------------------------ GQA ------
+
+
+def gqa_params(cfg):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": P((d, h * dh), ("embed", "heads")),
+        "wk": P((d, kv * dh), ("embed", "kv")),
+        "wv": P((d, kv * dh), ("embed", "kv")),
+        "wo": P((h * dh, d), ("heads", "embed")),
+    }
+
+
+def gqa_make_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    shape = (batch, max_len, kv, dh)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+    }
+
+
+def gqa_apply(
+    p: dict,
+    cfg,
+    h: jax.Array,
+    positions: jax.Array,  # (b, s) int32 or (3, b, s) for m-rope
+    mode: str,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    cross_kv: Optional[tuple] = None,
+    causal: bool = True,
+):
+    b, s, d = h.shape
+    nh, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (h @ p["wq"]).reshape(b, s, nh, dh)
+    if cross_kv is None:
+        k = (h @ p["wk"]).reshape(b, s, kv, dh)
+        v = (h @ p["wv"]).reshape(b, s, kv, dh)
+    else:  # cross-attention (whisper decoder): kv from encoder memory
+        mem = cross_kv[0]
+        k = (mem @ p["wk"]).reshape(b, mem.shape[1], kv, dh)
+        v = (mem @ p["wv"]).reshape(b, mem.shape[1], kv, dh)
+    if cfg.use_mrope and cross_kv is None:
+        q = apply_mrope(q, positions, cfg.rope_theta, _mrope_sections(cfg))
+        k = apply_mrope(k, positions, cfg.rope_theta, _mrope_sections(cfg))
+    elif cross_kv is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if cross_kv is not None:
+        # cross-attention: encoder memory is fixed; never cached, never masked
+        out = _sdpa(q, k, v, causal=False)
+        return out.reshape(b, s, nh * dh) @ p["wo"], new_cache
+    if mode == "train":
+        out = _sdpa(q, k, v, causal=causal)
+    elif mode == "prefill":
+        out = _sdpa(q, k, v, causal=True)
+        new_cache = {  # write the prompt into the full-length cache buffer
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1
+            ),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1
+            ),
+        }
+    elif mode == "decode":
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), cache_index, axis=1
+        )
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), cache_index, axis=1
+        )
+        new_cache = {"k": ck, "v": cv}
+        out = _sdpa(q, ck, cv, causal=False, kv_len=cache_index + 1)
+    else:
+        raise ValueError(mode)
+    out = out.reshape(b, s, nh * dh)
+    return out @ p["wo"], new_cache
+
+
+def _mrope_sections(cfg):
+    half = cfg.head_dim // 2
+    t = half // 4
+    hw = (half - t) // 2
+    return (t, hw, half - t - hw)
+
+
+# ------------------------------------------------------------------ MLA ------
+
+
+def mla_params(cfg):
+    d, h = cfg.d_model, cfg.num_heads
+    r = cfg.kv_lora_rank
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq": P((d, h * (nope + rope_d)), ("embed", "heads")),
+        "w_dkv": P((d, r), ("embed", "kv_lora")),
+        "w_krope": P((d, rope_d), ("embed", None)),
+        "w_uk": P((r, h * nope), ("kv_lora", "heads")),
+        "w_uv": P((r, h * vd), ("kv_lora", "heads")),
+        "wo": P((h * vd, d), ("heads", "embed")),
+    }
+
+
+def mla_make_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def _mla_attend_block(cfg, q, k_nope, v, krope, kv_len, q_offset, causal):
+    """One query block. q: (b,sq,h,nope+rope); k_nope/v: (b,sk,h,·); krope: (b,sk,rope)."""
+    b, sq, h, _ = q.shape
+    nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
+    sk = k_nope.shape[1]
+    qn, qr = q[..., :nope], q[..., nope:]
+    scale = (nope + rope_d) ** -0.5
+    logits = (
+        jnp.einsum("bqhd,bshd->bhqs", qn, k_nope)
+        + jnp.einsum("bqhd,bsd->bhqs", qr, krope)
+    ).astype(jnp.float32) * scale
+    logits = shard(logits, "batch", "heads_act", None, None)
+    if causal:
+        rows = q_offset + jnp.arange(sq)[:, None]
+        cols = jnp.arange(sk)[None, :]
+        logits = jnp.where((rows >= cols)[None, None], logits, -1e30)
+    if kv_len is not None:
+        valid = jnp.arange(sk) < kv_len  # (sk,)
+        logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqs,bshd->bqhd", pr, v)
+    return out.reshape(b, sq, -1)
+
+
+def _mla_attend_absorbed(cfg, q, ckv, krope, p, kv_len=None, q_offset=0, causal=True):
+    """§Perf H3 (decode): attend in LATENT space — absorb W_uk into the query and
+    W_uv into the output so the 32k-position cache is never up-projected:
+
+        logits = (q_nope W_ukᵀ) ckvᵀ + q_rope kropeᵀ      (contract over r=512)
+        out    = (P @ ckv) W_uv                           (weighted latents, then up)
+
+    Per decode step this reads O(s·r) cache bytes instead of O(s·h·(nope+vd))
+    up-projections — the MLA memory-term hillclimb. Used when sq is small
+    (decode/short prefill); training keeps the standard form (better MXU shapes).
+    """
+    b, sq, h, _ = q.shape
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    sk = ckv.shape[1]
+    qn, qr = q[..., :nope], q[..., nope:]
+    w_uk = p["w_uk"].reshape(r, h, nope)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", qn, w_uk)  # (b,sq,h,r)
+    scale = (nope + rope_d) ** -0.5
+    logits = (
+        jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv)
+        + jnp.einsum("bqhd,bsd->bhqs", qr, krope)
+    ).astype(jnp.float32) * scale
+    logits = shard(logits, "batch", "heads_act", None, None)
+    if causal:
+        rows = q_offset + jnp.arange(sq)[:, None]
+        cols = jnp.arange(sk)[None, :]
+        logits = jnp.where((rows >= cols)[None, None], logits, -1e30)
+    if kv_len is not None:
+        valid = jnp.arange(sk) < kv_len
+        logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1).astype(ckv.dtype)
+    lat = jnp.einsum("bhqs,bsr->bqhr", pr, ckv)  # weighted latents
+    w_uv = p["w_uv"].reshape(r, h, vd)
+    out = jnp.einsum("bqhr,rhd->bqhd", lat, w_uv)
+    return out.reshape(b, sq, h * vd)
+
+
+def _mla_attend(cfg, q, ckv, krope, p, kv_len=None, q_offset=0, causal=True):
+    """q: (b,sq,h,nope+rope); ckv: (b,sk,r); krope: (b,sk,rope).
+
+    Streams over query blocks like _sdpa so the (sq × sk) logits never
+    materialise at once. The cached latent is up-projected once per call
+    (baseline; cfg.mla_absorb=True switches decode to the latent-space form)."""
+    b, sq, h, _ = q.shape
+    nope, vd = cfg.qk_nope_dim, cfg.v_head_dim
+    sk = ckv.shape[1]
+    if cfg.mla_absorb and sq <= _Q_CHUNK:
+        return _mla_attend_absorbed(cfg, q, ckv, krope, p, kv_len, q_offset, causal)
+    k_nope = (ckv @ p["w_uk"]).reshape(b, sk, h, nope)  # baseline: up-project cache
+    v = (ckv @ p["w_uv"]).reshape(b, sk, h, vd)
+    k_nope = shard(k_nope, "batch", None, "heads_act", None)
+    v = shard(v, "batch", None, "heads_act", None)
+    if sq <= _Q_CHUNK:
+        return _mla_attend_block(cfg, q, k_nope, v, krope, kv_len, q_offset, causal)
+    assert sq % _Q_CHUNK == 0, (sq, _Q_CHUNK)
+    nq = sq // _Q_CHUNK
+    qb = jnp.moveaxis(q.reshape(b, nq, _Q_CHUNK, h, -1), 1, 0)
+
+    blk = jax.checkpoint(
+        lambda qblk, off: _mla_attend_block(cfg, qblk, k_nope, v, krope, kv_len, off,
+                                            causal),
+        prevent_cse=False,
+    )
+
+    def body(_, inp):
+        i, qblk = inp
+        return None, blk(qblk, q_offset + i * _Q_CHUNK)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qb))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, -1)
+
+
+def mla_apply(
+    p: dict,
+    cfg,
+    h: jax.Array,
+    positions: jax.Array,
+    mode: str,
+    cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+    **_,
+):
+    b, s, d = h.shape
+    nh = cfg.num_heads
+    nope, rope_d = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = (h @ p["wq"]).reshape(b, s, nh, nope + rope_d)
+    qr = apply_rope(q[..., nope:], positions, cfg.rope_theta)
+    q = jnp.concatenate([q[..., :nope], qr], axis=-1)
+    ckv = h @ p["w_dkv"]  # (b, s, r)
+    krope = apply_rope((h @ p["w_krope"])[:, :, None, :], positions, cfg.rope_theta)[
+        :, :, 0
+    ]
+    new_cache = cache
+    if mode == "train":
+        out = _mla_attend(cfg, q, ckv, krope, p, causal=True)
+    elif mode == "prefill":
+        out = _mla_attend(cfg, q, ckv, krope, p, causal=True)
+        new_cache = {
+            "ckv": jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1
+            ),
+            "krope": jax.lax.dynamic_update_slice_in_dim(
+                cache["krope"], krope.astype(cache["krope"].dtype), 0, axis=1
+            ),
+        }
+    elif mode == "decode":
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_index, axis=1
+        )
+        kr = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], krope.astype(cache["krope"].dtype), cache_index, axis=1
+        )
+        new_cache = {"ckv": ck, "krope": kr}
+        out = _mla_attend(cfg, q, ck, kr, p, kv_len=cache_index + 1, causal=False)
+    else:
+        raise ValueError(mode)
+    return out @ p["wo"], new_cache

@@ -1,0 +1,109 @@
+"""Common layers: RMSNorm (parametric + olmo non-parametric), RoPE / M-RoPE, SwiGLU
+MLP, embeddings. Pure functions over param dicts declared with models/param.P.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .param import P
+from .sharding_ctx import shard
+
+
+def rmsnorm_params(cfg):
+    if not cfg.parametric_norm:
+        return {}
+    return {"scale": P((cfg.d_model,), ("embed",), init="ones")}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    if "scale" in p:
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------- RoPE -------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (b, s, h, d); positions: (b, s) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (b, s, d/2)
+    cos, sin = jnp.cos(ang)[:, :, None], jnp.sin(ang)[:, :, None]  # (b,s,1,d/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions3: jax.Array, theta: float, sections=(16, 24, 24)
+) -> jax.Array:
+    """M-RoPE (qwen2-vl): positions3 (3, b, s); head_dim/2 split into (t,h,w) sections.
+
+    Text tokens carry identical (t,h,w) positions ⇒ reduces to 1-D RoPE there.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    # pick which of the 3 position streams drives each frequency index
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )  # (half,)
+    pos = positions3[sec_id]  # (half, b, s) gathered per-frequency stream
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # (b, s, half)
+    cos, sin = jnp.cos(ang)[:, :, None], jnp.sin(ang)[:, :, None]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLP -------
+
+
+def mlp_params(cfg, d_ff: Optional[int] = None):
+    ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    return {
+        "gate": P((d, ff), ("embed", "mlp")),
+        "up": P((d, ff), ("embed", "mlp")),
+        "down": P((ff, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    h = shard(h, "batch", "seq", "mlp_act")
+    return h @ p["down"]
+
+
+# ----------------------------------------------------------- embeddings ------
+
+
+def embed_params(cfg):
+    out = {"tok": P((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), init="embed")}
+    if not cfg.tie_embeddings:
+        out["unembed"] = P((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    return out
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(p: dict, h: jax.Array) -> jax.Array:
+    w = p.get("unembed")
+    if w is None:
+        w = p["tok"].T
+    logits = h.astype(jnp.float32) @ w.astype(jnp.float32)
+    return shard(logits, "batch", "seq", "vocab_act")

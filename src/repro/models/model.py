@@ -1,0 +1,463 @@
+"""Model assembly: composable decoder / encoder-decoder builder over the mixer and
+MLP modules, with lax.scan over homogeneous layer stacks (jamba scans 8-layer
+periods) and optional remat. Three entry points per model:
+
+    forward_train(params, inputs)            → logits (b, s, v)
+    prefill(params, inputs, cache)           → (last logits, filled cache)
+    decode_step(params, token, cache, index) → (logits, updated cache)
+
+Caches are pytrees with a leading layer/period dim so they scan together with the
+stacked params. ``abstract_cache``/``param_schema`` provide ShapeDtypeStructs for the
+dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (
+    embed,
+    embed_params,
+    mlp,
+    mlp_params,
+    rmsnorm,
+    rmsnorm_params,
+    unembed,
+)
+from .param import P, abstract_params, init_params, logical_axes, stack_schema
+from .sharding_ctx import shard
+
+
+# --------------------------------------------------------------- schemas -----
+
+
+def _mixer_params(cfg: ModelConfig, kind: str):
+    if kind == "attn":
+        return attn_mod.mla_params(cfg) if cfg.use_mla else attn_mod.gqa_params(cfg)
+    return ssm_mod.mamba_params(cfg)
+
+
+def _block_schema(cfg: ModelConfig, mixer: str, mlp_kind: str, cross: bool = False):
+    s: dict[str, Any] = {
+        "norm1": rmsnorm_params(cfg),
+        "mixer": _mixer_params(cfg, mixer),
+    }
+    if mlp_kind == "dense":
+        s["norm2"] = rmsnorm_params(cfg)
+        s["mlp"] = mlp_params(cfg)
+    elif mlp_kind == "moe":
+        s["norm2"] = rmsnorm_params(cfg)
+        s["mlp"] = moe_mod.moe_params(cfg)
+    if cross:
+        s["norm_x"] = rmsnorm_params(cfg)
+        s["cross"] = attn_mod.gqa_params(cfg)
+    return s
+
+
+def _layer_plan(cfg: ModelConfig) -> dict:
+    """How the layer stack decomposes into scannable homogeneous groups."""
+    if cfg.family == "ssm":
+        return {"kind": "uniform", "mixer": "mamba", "mlp": "none", "n": cfg.num_layers}
+    if cfg.family == "hybrid":
+        assert cfg.num_layers % cfg.attn_layer_period == 0
+        return {"kind": "period", "n": cfg.num_layers // cfg.attn_layer_period,
+                "period": cfg.attn_layer_period}
+    mlp_kind = "moe" if cfg.is_moe else "dense"
+    return {"kind": "uniform", "mixer": "attn", "mlp": mlp_kind, "n": cfg.num_layers}
+
+
+def _period_schema(cfg: ModelConfig):
+    """jamba 8-layer period: [attn, mamba×7]; MLP alternates dense/moe by parity."""
+    per = cfg.attn_layer_period
+    n_moe = per // cfg.moe_layer_period
+    return {
+        "attn_block": _block_schema(cfg, "attn", "dense"),
+        "mamba_blocks": stack_schema(_block_schema(cfg, "mamba", "none"), per - 1, None),
+        "moe_mlps": stack_schema(
+            {"norm2": rmsnorm_params(cfg), "mlp": moe_mod.moe_params(cfg)}, n_moe, None
+        ),
+        "dense_mlps": stack_schema(
+            {"norm2": rmsnorm_params(cfg), "mlp": mlp_params(cfg)}, per - n_moe - 1, None
+        ),
+    }
+
+
+def param_schema(cfg: ModelConfig):
+    plan = _layer_plan(cfg)
+    sch: dict[str, Any] = {"embed": embed_params(cfg), "final_norm": rmsnorm_params(cfg)}
+    if plan["kind"] == "uniform":
+        sch["layers"] = stack_schema(
+            _block_schema(cfg, plan["mixer"], plan["mlp"]), plan["n"]
+        )
+    else:
+        sch["layers"] = stack_schema(_period_schema(cfg), plan["n"])
+    if cfg.is_encdec:
+        sch["enc_layers"] = stack_schema(
+            _block_schema(cfg, "attn", "dense"), cfg.encoder_layers
+        )
+        sch["enc_norm"] = rmsnorm_params(cfg)
+        sch["dec_layers"] = stack_schema(
+            _block_schema(cfg, "attn", "dense", cross=True), cfg.num_layers
+        )
+        del sch["layers"]
+    return sch
+
+
+# --------------------------------------------------------------- caches ------
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    plan = _layer_plan(cfg)
+
+    def attn_cache():
+        if cfg.use_mla:
+            return attn_mod.mla_make_cache(cfg, batch, max_len, dtype)
+        return attn_mod.gqa_make_cache(cfg, batch, max_len, dtype)
+
+    def stackit(tree, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree
+        )
+
+    if cfg.is_encdec:
+        return {
+            "self": stackit(attn_cache(), cfg.num_layers),
+            "memory": jax.ShapeDtypeStruct((batch, cfg.encoder_seq, cfg.d_model), dtype),
+        }
+    if plan["kind"] == "uniform":
+        if plan["mixer"] == "mamba":
+            return {"mamba": stackit(ssm_mod.mamba_make_cache(cfg, batch, dtype), plan["n"])}
+        return {"attn": stackit(attn_cache(), plan["n"])}
+    per = plan["period"]
+    return {
+        "attn": stackit(attn_cache(), plan["n"]),
+        "mamba": stackit(
+            stackit(ssm_mod.mamba_make_cache(cfg, batch, dtype), per - 1), plan["n"]
+        ),
+    }
+
+
+def zero_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), abstract_cache(cfg, batch, max_len, dtype)
+    )
+
+
+# --------------------------------------------------------------- blocks ------
+
+
+def _apply_block(p, cfg, h, positions, mode, cache, cache_index, mixer: str,
+                 mlp_kind: str, cross_mem=None):
+    attn_fn = attn_mod.mla_apply if cfg.use_mla else attn_mod.gqa_apply
+    if mixer == "attn":
+        mixed, new_cache = attn_fn(
+            p["mixer"], cfg, rmsnorm(p["norm1"], h, cfg.norm_eps), positions, mode,
+            cache, cache_index,
+        )
+    else:
+        mixed, new_cache = ssm_mod.mamba_apply(
+            p["mixer"], cfg, rmsnorm(p["norm1"], h, cfg.norm_eps), mode, cache,
+            cache_index,
+        )
+    h = h + mixed
+    if cross_mem is not None:
+        xattn, _ = attn_mod.gqa_apply(
+            p["cross"], cfg, rmsnorm(p["norm_x"], h, cfg.norm_eps), positions, mode,
+            None, None, cross_kv=(cross_mem,),
+        )
+        h = h + xattn
+    if mlp_kind == "dense":
+        h = h + mlp(p["mlp"], rmsnorm(p["norm2"], h, cfg.norm_eps))
+    elif mlp_kind == "moe":
+        h = h + moe_mod.moe_apply(p["mlp"], cfg, rmsnorm(p["norm2"], h, cfg.norm_eps))
+    return h, new_cache
+
+
+def _apply_period(p, cfg, h, positions, mode, cache, cache_index):
+    """jamba 8-layer period (see _period_schema).
+
+    Each sub-block is itself checkpointed (nested remat): the outer period-level
+    checkpoint would otherwise keep all 8 blocks' recompute intermediates live at
+    once in its backward — measured 146 GB/device on jamba-1.5-large train_4k.
+    """
+    per = cfg.attn_layer_period
+    new_cache = {"attn": None, "mamba": None}
+    mamba_caches = []
+    i_moe = i_dense = 0
+    remat_block = cfg.remat and mode == "train"
+
+    def _ckpt(fn):
+        return jax.checkpoint(fn, prevent_cse=False) if remat_block else fn
+
+    for i in range(per):
+        is_attn = i == 0
+        is_moe = (i % cfg.moe_layer_period) == 1  # global layer 8p+i; odd i → MoE
+        if is_attn:
+            blk = dict(p["attn_block"])
+
+            def attn_fn(hh, bp, cc):
+                return _apply_block(bp, cfg, hh, positions, mode, cc, cache_index,
+                                    "attn", "dense")
+
+            h, c = _ckpt(attn_fn)(h, blk, None if cache is None else cache["attn"])
+            new_cache["attn"] = c
+        else:
+            blk = jax.tree.map(lambda a: a[i - 1], p["mamba_blocks"])
+
+            def mamba_fn(hh, bp, cc):
+                return _apply_block(bp, cfg, hh, positions, mode, cc, cache_index,
+                                    "mamba", "none")
+
+            h, c = _ckpt(mamba_fn)(
+                h, blk,
+                None if cache is None else jax.tree.map(lambda a: a[i - 1], cache["mamba"]),
+            )
+            mamba_caches.append(c)
+            if is_moe:
+                mp = jax.tree.map(lambda a: a[i_moe], p["moe_mlps"])
+
+                def moe_fn(hh, mpp):
+                    return hh + moe_mod.moe_apply(
+                        mpp["mlp"], cfg, rmsnorm(mpp["norm2"], hh, cfg.norm_eps))
+
+                h = _ckpt(moe_fn)(h, mp)
+                i_moe += 1
+            else:
+                dp = jax.tree.map(lambda a: a[i_dense], p["dense_mlps"])
+
+                def mlp_fn(hh, dpp):
+                    return hh + mlp(dpp["mlp"], rmsnorm(dpp["norm2"], hh, cfg.norm_eps))
+
+                h = _ckpt(mlp_fn)(h, dp)
+                i_dense += 1
+    if cache is not None:
+        new_cache["mamba"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *mamba_caches
+        )
+    return h, new_cache
+
+
+# --------------------------------------------------------------- model -------
+
+
+def _seq_shard(h: jax.Array) -> jax.Array:
+    """Sequence-parallel residual stream (Megatron SP): between blocks, activations
+    (b, s, d) shard their seq dim over the mesh "model" axis. The remat-saved carry
+    stack of the layer scan inherits this layout (16× smaller at TP=16)."""
+    if h.ndim == 3 and h.shape[1] > 1:
+        return shard(h, "batch", "seq_act", None)
+    return h
+
+
+def _scan_stack(apply_fn, stacked_params, h, cache, remat: bool, seq_shard: bool = True):
+    """Scan a homogeneous block stack; cache (may be None) scans alongside.
+
+    seq_shard applies sequence parallelism to the inter-block residual — a remat
+    *memory* optimisation: only worthwhile when remat saves the carry (training).
+    In prefill it forces per-layer gathers that made prefill_32k collective-bound
+    (88 s collective term on llama3 before the §Perf H4 fix), so callers pass
+    seq_shard=(mode == "train").
+    """
+    # prevent_cse=False: we are inside lax.scan, where CSE-prevention barriers are
+    # unnecessary (jax docs) and on some backends cause the saved bf16 carry stack
+    # to be re-materialised in fp32 (observed: +8 GB/device on olmo-1b train_4k).
+    fn = jax.checkpoint(apply_fn, prevent_cse=False) if remat else apply_fn
+    sq = _seq_shard if seq_shard else (lambda x: x)
+    h = sq(h)
+
+    if cache is None:
+        def body(carry, p_l):
+            out, _ = fn(carry, p_l, None)
+            return sq(out), None
+
+        h, _ = jax.lax.scan(body, h, stacked_params)
+        return h, None
+
+    def body(carry, xs):
+        p_l, c_l = xs
+        out, new_c = fn(carry, p_l, c_l)
+        return sq(out), new_c
+
+    h, new_cache = jax.lax.scan(body, h, (stacked_params, cache))
+    return h, new_cache
+
+
+def _positions_for(cfg: ModelConfig, batch: int, seq: int, offset) -> jax.Array:
+    pos = offset + jnp.arange(seq)[None, :]
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if not cfg.use_mrope:
+        return pos
+    # M-RoPE: (3, b, s); text positions identical across (t,h,w); the stub vision
+    # region gets a 2-D grid in the (h,w) streams.
+    vt = cfg.vision_tokens
+    side = max(int(vt**0.5), 1)
+    th = pos.copy()
+    tw = pos.copy()
+    if vt and seq >= vt:
+        grid = jnp.arange(vt)
+        th = th.at[:, :vt].set(grid // side)
+        tw = tw.at[:, :vt].set(grid % side)
+    return jnp.stack([pos, th, tw])
+
+
+def _trunk(cfg, params, h, positions, mode, cache, cache_index):
+    plan = _layer_plan(cfg)
+    remat = cfg.remat and mode == "train"
+    if plan["kind"] == "uniform":
+        mixer, mlp_kind = plan.get("mixer", "attn"), plan.get("mlp", "dense")
+
+        def apply_fn(hh, p_l, c_l):
+            return _apply_block(p_l, cfg, hh, positions, mode, c_l, cache_index,
+                                mixer, mlp_kind)
+
+        key = "mamba" if plan["mixer"] == "mamba" else "attn"
+        sub_cache = None if cache is None else cache[key]
+        h, new_sub = _scan_stack(apply_fn, params["layers"], h, sub_cache, remat,
+                                 seq_shard=mode == "train")
+        new_cache = None if cache is None else {key: new_sub}
+    else:
+        def apply_fn(hh, p_l, c_l):
+            return _apply_period(p_l, cfg, hh, positions, mode, c_l, cache_index)
+
+        h, new_cache = _scan_stack(apply_fn, params["layers"], h, cache, remat,
+                                   seq_shard=mode == "train")
+    return h, new_cache
+
+
+def _encode(cfg, params, frames):
+    """whisper encoder over stub frame embeddings (b, enc_seq, d)."""
+    b, s, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def apply_fn(hh, p_l, c_l):
+        del c_l
+        out, _ = attn_mod.gqa_apply(
+            p_l["mixer"], cfg, rmsnorm(p_l["norm1"], hh, cfg.norm_eps), pos, "train",
+            causal=False,
+        )
+        hh = hh + out
+        hh = hh + mlp(p_l["mlp"], rmsnorm(p_l["norm2"], hh, cfg.norm_eps))
+        return hh, None
+
+    h, _ = _scan_stack(apply_fn, params["enc_layers"], frames, None, cfg.remat)
+    return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def _decode_trunk(cfg, params, h, positions, mode, cache, cache_index, memory):
+    """whisper decoder stack (self-attn cached + cross-attn to memory)."""
+    remat = cfg.remat and mode == "train"
+
+    def apply_fn(hh, p_l, c_l):
+        return _apply_block(p_l, cfg, hh, positions, mode, c_l, cache_index,
+                            "attn", "dense", cross_mem=memory)
+
+    sub_cache = None if cache is None else cache["self"]
+    h, new_sub = _scan_stack(apply_fn, params["dec_layers"], h, sub_cache, remat,
+                             seq_shard=mode == "train")
+    new_cache = None if cache is None else dict(cache, self=new_sub)
+    return h, new_cache
+
+
+def _inputs_to_h(cfg, params, inputs, mode):
+    tokens = inputs["tokens"]
+    h = embed(params["embed"], tokens)
+    if cfg.family == "vlm" and "vision_embeds" in inputs and mode != "decode":
+        vt = cfg.vision_tokens
+        h = jnp.concatenate([inputs["vision_embeds"].astype(h.dtype), h[:, vt:]], axis=1)
+    return h
+
+
+def forward_train(cfg: ModelConfig, params, inputs) -> jax.Array:
+    """Full causal LM forward → logits (b, s, vocab)."""
+    if cfg.is_encdec:
+        memory = _encode(cfg, params, inputs["frames"])
+        h = embed(params["embed"], inputs["tokens"])
+        b, s, _ = h.shape
+        pos = _positions_for(cfg, b, s, 0)
+        h, _ = _decode_trunk(cfg, params, h, pos, "train", None, None, memory)
+    else:
+        h = _inputs_to_h(cfg, params, inputs, "train")
+        b, s, _ = h.shape
+        pos = _positions_for(cfg, b, s, 0)
+        h, _ = _trunk(cfg, params, h, pos, "train", None, None)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return unembed(params["embed"], h)
+
+
+def prefill(cfg: ModelConfig, params, inputs, cache):
+    """Process the prompt, fill the cache, return last-position logits."""
+    if cfg.is_encdec:
+        memory = _encode(cfg, params, inputs["frames"])
+        h = embed(params["embed"], inputs["tokens"])
+        b, s, _ = h.shape
+        pos = _positions_for(cfg, b, s, 0)
+        h, new_cache = _decode_trunk(cfg, params, h, pos, "prefill", cache, None, memory)
+        new_cache["memory"] = memory.astype(cache["memory"].dtype)
+    else:
+        h = _inputs_to_h(cfg, params, inputs, "prefill")
+        b, s, _ = h.shape
+        pos = _positions_for(cfg, b, s, 0)
+        h, new_cache = _trunk(cfg, params, h, pos, "prefill", cache, None)
+    h = rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    return unembed(params["embed"], h), new_cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, cache_index):
+    """One token (b, 1) against the cache at position cache_index."""
+    h = embed(params["embed"], token)
+    b = token.shape[0]
+    pos = _positions_for(cfg, b, 1, cache_index)
+    if cfg.is_encdec:
+        memory = cache["memory"]
+        h, new_cache = _decode_trunk(
+            cfg, params, h, pos, "decode", cache, cache_index, memory
+        )
+    else:
+        h, new_cache = _trunk(cfg, params, h, pos, "decode", cache, cache_index)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return unembed(params["embed"], h), new_cache
+
+
+# ------------------------------------------------------------- init/count ----
+
+
+def init_model_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    return init_params(param_schema(cfg), key, dtype)
+
+
+def abstract_model_params(cfg: ModelConfig, dtype=jnp.float32):
+    return abstract_params(param_schema(cfg), dtype)
+
+
+def model_logical_axes(cfg: ModelConfig):
+    return logical_axes(param_schema(cfg))
+
+
+def count_params(cfg: ModelConfig) -> int:
+    from .param import param_count
+
+    return param_count(param_schema(cfg))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: routed k of E experts) — for 6·N·D."""
+    total = count_params(cfg)
+    if not cfg.is_moe:
+        return total
+    e, k = cfg.num_experts, cfg.experts_per_tok
+    per_expert = 3 * cfg.d_model * cfg.expert_ff
+    n_moe_layers = (
+        cfg.num_layers // cfg.moe_layer_period
+        if cfg.family != "hybrid"
+        else cfg.num_layers // cfg.moe_layer_period
+    )
+    inactive = (e - k) * per_expert * n_moe_layers
+    return total - inactive

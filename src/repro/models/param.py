@@ -1,0 +1,75 @@
+"""Param schema system: declare parameters once as a pytree of ``P`` leaves carrying
+shape + *logical axes*; derive (a) initialised arrays, (b) ShapeDtypeStructs for the
+dry-run (no allocation), (c) PartitionSpecs via launch/sharding.py logical-axis rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Declarative parameter leaf: shape + logical axis names (len == ndim)."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "fan_in"  # fan_in | zeros | ones | embed
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_leaf(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def init_params(schema: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    """Materialise a schema into arrays (smoke tests / real training)."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_leaf)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, leaf in zip(keys, leaves):
+        if leaf.init == "zeros":
+            a = jnp.zeros(leaf.shape, dtype)
+        elif leaf.init == "ones":
+            a = jnp.ones(leaf.shape, dtype)
+        elif leaf.init == "embed":
+            a = 0.02 * jax.random.normal(k, leaf.shape, dtype)
+        else:  # fan_in
+            fan_in = leaf.shape[0] if len(leaf.shape) == 1 else math.prod(leaf.shape[:-1])
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+            a = scale * jax.random.normal(k, leaf.shape, dtype)
+        out.append(a)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(schema: Any, dtype=jnp.float32) -> Any:
+    """ShapeDtypeStruct tree — the dry-run path (never allocates)."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), schema, is_leaf=is_leaf
+    )
+
+
+def logical_axes(schema: Any) -> Any:
+    """Tree of logical-axis tuples, same structure as the params."""
+    return jax.tree.map(lambda p: p.axes, schema, is_leaf=is_leaf)
+
+
+def param_count(schema: Any) -> int:
+    return sum(
+        math.prod(p.shape) for p in jax.tree.leaves(schema, is_leaf=is_leaf)
+    )
+
+
+def stack_schema(schema: Any, n: int, axis_name: str | None = "layers") -> Any:
+    """Prepend a stacking dim (for lax.scan over layers)."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, (axis_name,) + p.axes, p.init),
+        schema,
+        is_leaf=is_leaf,
+    )

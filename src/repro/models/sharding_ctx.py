@@ -1,0 +1,54 @@
+"""Activation-sharding context: model code calls ``shard(x, *logical_axes)``; the
+launcher installs a mesh + logical→physical rules; outside a context it's a no-op
+(smoke tests on 1 device).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_STATE = threading.local()
+
+
+def rules_to_spec(rules: dict, logical: tuple) -> PartitionSpec:
+    """Each mesh axis may appear once; the earliest logical dim wins (e.g. MoE
+    activations name both experts_act and mlp_act, which both map to "model")."""
+    used: set[str] = set()
+    out = []
+    for ax in logical:
+        phys = rules.get(ax)
+        if phys is None:
+            out.append(None)
+            continue
+        axes = (phys,) if isinstance(phys, str) else tuple(phys)
+        kept = tuple(a for a in axes if a not in used)
+        used.update(kept)
+        out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return PartitionSpec(*out)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current() -> Optional[tuple]:
+    return getattr(_STATE, "ctx", None)
+
+
+def shard(x: jax.Array, *logical: str) -> jax.Array:
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules_to_spec(rules, logical)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

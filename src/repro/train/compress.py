@@ -1,0 +1,69 @@
+"""Gradient compression for cross-pod reduction (DESIGN.md §5).
+
+int8 stochastic-rounding quantisation with **error feedback**: the residual of each
+quantisation is carried and added to the next step's gradient, so the compressed
+SGD trajectory tracks the exact one (error-feedback SGD converges at the same rate
+for smooth objectives). Intended for the "pod" axis all-reduce, whose DCN bandwidth
+is ~10× lower than ICI; per-tensor scale keeps the quantisation range adaptive.
+
+compress → (int8 payload, fp32 scale); decompress reverses. 4× wire reduction vs
+bf16. The trainer applies it leaf-wise to the cross-pod gradient contribution.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: jax.Array  # int8
+    scale: jax.Array  # ()
+
+
+def compress(x: jax.Array, key: jax.Array) -> Compressed:
+    """Stochastic-rounding int8 quantisation."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    y = x32 / scale
+    lo = jnp.floor(y)
+    p = y - lo  # probability of rounding up
+    up = jax.random.bernoulli(key, p.astype(jnp.float32))
+    q = jnp.clip(lo + up.astype(jnp.float32), -127, 127).astype(jnp.int8)
+    return Compressed(q=q, scale=scale)
+
+
+def decompress(c: Compressed, dtype=jnp.float32) -> jax.Array:
+    return (c.q.astype(jnp.float32) * c.scale).astype(dtype)
+
+
+def compress_with_feedback(grad: jax.Array, error: jax.Array, key: jax.Array):
+    """Returns (compressed, new_error). new_error = (grad+error) − decompress(...)."""
+    g = grad.astype(jnp.float32) + error
+    c = compress(g, key)
+    new_error = g - decompress(c)
+    return c, new_error
+
+
+def tree_compress_with_feedback(grads: Any, errors: Any, key: jax.Array):
+    leaves, tdef = jax.tree.flatten(grads)
+    errs = jax.tree.leaves(errors)
+    keys = jax.random.split(key, len(leaves))
+    cs, nes = [], []
+    for g, e, k in zip(leaves, errs, keys):
+        c, ne = compress_with_feedback(g, e, k)
+        cs.append(c)
+        nes.append(ne)
+    return jax.tree.unflatten(tdef, cs), jax.tree.unflatten(tdef, nes)
+
+
+def tree_decompress(comp: Any, like: Any) -> Any:
+    return jax.tree.map(
+        lambda c, g: decompress(c, g.dtype),
+        comp, like, is_leaf=lambda x: isinstance(x, Compressed),
+    )
+
+
+def init_error_state(grads_like: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

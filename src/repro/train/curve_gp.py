@@ -1,0 +1,80 @@
+"""Learning-curve prediction with the latent-Kronecker GP (Ch. 6 §6.3.2), wired
+into the trainer as a first-class feature.
+
+The trainer (or a sweep of trainers) logs (config, step) → loss into a partially
+observed grid — exactly LKGP's setting: configs × steps is a product space, and
+runs observed only as prefixes give the projection mask. The fitted GP predicts
+each curve's continuation; the trainer uses it to
+
+  * early-stop runs whose predicted final loss is dominated (sweep pruning),
+  * flag divergence (observed loss outside the posterior's 3σ band).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.kernels_fn import make_params
+from ..core.kronecker import lkgp_posterior, make_lkgp
+
+
+@dataclasses.dataclass
+class CurvePrediction:
+    mean: jax.Array  # (configs, steps) posterior mean over the full grid
+    std: jax.Array  # (configs, steps)
+    final_mean: jax.Array  # (configs,) predicted final-step loss
+    final_std: jax.Array
+
+
+def fit_curve_gp(
+    curves: jax.Array,  # (n_configs, n_steps) observed losses (junk where masked)
+    mask: jax.Array,  # (n_configs, n_steps) bool — True = observed
+    config_features: jax.Array,  # (n_configs, d1)
+    step_features: Optional[jax.Array] = None,  # (n_steps, 1); default log-steps
+    *,
+    noise: float = 1e-2,
+    num_samples: int = 16,
+    max_iters: int = 300,
+    key: Optional[jax.Array] = None,
+) -> CurvePrediction:
+    n_cfg, n_steps = curves.shape
+    if step_features is None:
+        step_features = jnp.log(jnp.arange(1, n_steps + 1, dtype=jnp.float32))[:, None]
+    key = jax.random.PRNGKey(0) if key is None else key
+
+    y_obs = curves.reshape(-1)[jnp.asarray(jnp.nonzero(mask.reshape(-1))[0])]
+    mu = y_obs.mean()
+    gp = make_lkgp(
+        make_params("matern52", lengthscale=1.0, signal=1.0, d=config_features.shape[1]),
+        make_params("matern52", lengthscale=1.0, signal=1.0, d=1),
+        config_features,
+        step_features,
+        mask,
+        noise,
+    )
+    mean, samples = lkgp_posterior(gp, y_obs - mu, key, num_samples=num_samples,
+                                   max_iters=max_iters)
+    mean = mean + mu
+    std = jnp.std(samples, axis=-1)
+    return CurvePrediction(
+        mean=mean, std=std, final_mean=mean[:, -1], final_std=std[:, -1]
+    )
+
+
+def should_stop_early(pred: CurvePrediction, config_idx: int, margin: float = 1.0) -> bool:
+    """Prune run i if its predicted final loss is at least `margin`·σ worse than the
+    best predicted final loss across the sweep."""
+    best = jnp.min(pred.final_mean)
+    i = config_idx
+    return bool(pred.final_mean[i] - margin * pred.final_std[i] > best)
+
+
+def divergence_score(pred: CurvePrediction, config_idx: int, step: int,
+                     observed_loss: float) -> float:
+    """|z|-score of an observed loss under the GP posterior — >3 flags divergence."""
+    m = pred.mean[config_idx, step]
+    s = jnp.maximum(pred.std[config_idx, step], 1e-6)
+    return float(jnp.abs(observed_loss - m) / s)

@@ -1,0 +1,95 @@
+"""Per-kernel allclose vs ref.py oracles (interpret mode), sweeping shapes/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernels_fn import make_params
+from repro.kernels.ops import flash_attention, gram_matvec, rff_matvec
+from repro.kernels.ref import flash_attention_ref, gram_matvec_ref, rff_matvec_ref
+
+
+@pytest.mark.parametrize("kind", ["se", "matern12", "matern32", "matern52"])
+@pytest.mark.parametrize("n,m,s", [(64, 64, 1), (200, 130, 3), (256, 256, 8)])
+def test_gram_matvec_kinds_shapes(kind, n, m, s):
+    key = jax.random.PRNGKey(n + m + s)
+    x = jax.random.normal(key, (n, 4))
+    z = jax.random.normal(jax.random.fold_in(key, 1), (m, 4))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (m, s))
+    p = make_params(kind, lengthscale=0.8, signal=1.4, d=4)
+    out = gram_matvec(p, x, v, z=z, block=64, interpret=True)
+    ref = gram_matvec_ref(x / p.lengthscale, z / p.lengthscale, v,
+                          kind=kind, signal=float(p.signal))
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_gram_matvec_jitter_square():
+    key = jax.random.PRNGKey(0)
+    n, s = 192, 4
+    x = jax.random.normal(key, (n, 3))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n, s))
+    p = make_params("se", lengthscale=1.0, signal=1.0, d=3, noise=0.5)
+    out = gram_matvec(p, x, v, jitter=float(p.noise), block=64, interpret=True)
+    ref = gram_matvec_ref(x, x, v, kind="se", signal=1.0, jitter=float(p.noise))
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_gram_matvec_1d_vector_rhs():
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (100, 2))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (100,))
+    p = make_params("matern32", lengthscale=1.2, d=2)
+    out = gram_matvec(p, x, v, block=64, interpret=True)
+    ref = gram_matvec_ref(x / p.lengthscale, x / p.lengthscale, v[:, None],
+                          kind="matern32")[:, 0]
+    assert out.shape == (100,)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n,f,s", [(64, 64, 1), (100, 90, 2), (256, 512, 4)])
+def test_rff_matvec_shapes(n, f, s):
+    key = jax.random.PRNGKey(n + f)
+    x = jax.random.normal(key, (n, 3))
+    omega = jax.random.normal(jax.random.fold_in(key, 1), (f, 3))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (2 * f, s))
+    out = rff_matvec(x, omega, w, signal=1.3, block=64, interpret=True)
+    ref = rff_matvec_ref(x, omega, w, signal=1.3)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("b,s,hq,hkv,d", [(1, 128, 2, 2, 32), (2, 256, 4, 2, 64),
+                                          (1, 130, 2, 1, 32)])
+def test_flash_attention_vs_ref(causal, b, s, hq, hkv, d):
+    key = jax.random.PRNGKey(s + hq)
+    q = jax.random.normal(key, (b, s, hq, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, hkv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, hkv, d))
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    head_map = jnp.arange(hq) // (hq // hkv)
+    ref = flash_attention_ref(q, k[:, :, head_map], v[:, :, head_map], causal=causal)
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (1, 128, 2, 32), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 128, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 128, 2, 32), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64, interpret=True)
+    ref = flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, rtol=3e-2, atol=3e-2)
+
+
+def test_gram_matvec_bf16_inputs():
+    key = jax.random.PRNGKey(10)
+    x = jax.random.normal(key, (128, 4), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 1), (128, 2), jnp.bfloat16)
+    p = make_params("se", lengthscale=1.0, d=4, dtype=jnp.float32)
+    out = gram_matvec(p, x.astype(jnp.float32), v.astype(jnp.float32), block=64,
+                      interpret=True)
+    ref = gram_matvec_ref(x.astype(jnp.float32), x.astype(jnp.float32),
+                          v.astype(jnp.float32), kind="se")
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,118 @@
+"""Sharding rules, HLO analyzer, and distributed GP solver (subprocess: multi-device)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import evenize_spec, spec_for_axes
+from repro.models.sharding_ctx import rules_to_spec
+
+
+def test_spec_dedup_mesh_axes():
+    mesh = make_host_mesh()
+    spec = spec_for_axes(("layers", "experts", "embed", "mlp"), mesh)
+    flat = [a for s in spec if s for a in ((s,) if isinstance(s, str) else s)]
+    assert len(flat) == len(set(flat))
+    # experts (higher priority) takes "model"; mlp must not repeat it
+    assert spec[1] == "model" and spec[3] is None
+
+
+def test_rules_to_spec_dedup():
+    spec = rules_to_spec(
+        {"batch": "data", "experts_act": "model", "mlp_act": "model"},
+        ("batch", "experts_act", None, "mlp_act"),
+    )
+    assert spec == PartitionSpec("data", "model", None, None)
+
+
+def test_evenize_drops_nondividing_axes():
+    mesh = make_host_mesh()  # (1,1): everything divides — identity
+    s = evenize_spec(PartitionSpec("data", None), (7, 3), mesh)
+    assert s == PartitionSpec("data", None)
+
+
+def test_evenize_drops_on_16x16():
+    import os
+    # simulate: 16×16 shapes via a fake mesh object
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    s = evenize_spec(PartitionSpec("model", "data"), (50280, 2048), FakeMesh())
+    assert s == PartitionSpec(None, "data")  # 50280 % 16 != 0 → dropped
+    s2 = evenize_spec(PartitionSpec("model", None), (50304, 2048), FakeMesh())
+    assert s2 == PartitionSpec("model", None)
+
+
+HLO_SAMPLE = """
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %ag = f32[8,64]{1,0} all-gather(%x), channel_id=1, replica_groups=[2,4]<=[8], dimensions={1}
+  %w = f32[64,16]{1,0} constant({...})
+  %dot = f32[8,16]{1,0} dot(%ag, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%i2, %dot)
+}
+
+%cond (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %i3 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i3, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %tup = (s32[], f32[8,16]) tuple(%z, %a)
+  %wh = (s32[], f32[8,16]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_hlo_analyzer_loop_multipliers():
+    prof = analyze_hlo(HLO_SAMPLE)
+    # dot: 2·8·16·64 = 16384 flops × 10 iterations
+    assert prof.flops == 10 * 2 * 8 * 16 * 64
+    # all-gather operand f32[8,16] = 512 B × 10
+    assert prof.collective_bytes == 10 * 512
+    assert prof.collective_counts == {"all-gather": 1}
+
+
+def test_distributed_cg_subprocess():
+    """distributed_cg under shard_map on 8 virtual devices == dense solve.
+    Runs in a subprocess so the 8-device platform doesn't leak into this one."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.distributed import distributed_cg, shard_training_rows
+        from repro.core.kernels_fn import make_params, gram
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        n, d = 256, 3
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (n, d))
+        y = jnp.sin(x.sum(-1))
+        p = make_params("se", lengthscale=1.0, noise=0.2, d=d)
+        xs = shard_training_rows(mesh, x)
+        v = distributed_cg(p, xs, y, mesh, max_iters=300, tol=1e-8)
+        ref = jnp.linalg.solve(gram(p, x) + p.noise * jnp.eye(n), y)
+        err = float(jnp.linalg.norm(v - ref))
+        assert err < 1e-2, err
+        print("OK", err)
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True,
+                       timeout=600, env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout

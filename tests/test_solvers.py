@@ -1,0 +1,115 @@
+"""Iterative linear system solvers vs the dense oracle (Ch. 2.2.4, 3, 4, 5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernels_fn import make_params, gram
+from repro.core.solvers.base import Gram
+from repro.core.solvers.ap import solve_ap
+from repro.core.solvers.cg import solve_cg
+from repro.core.solvers.sdd import solve_sdd
+from repro.core.solvers.sgd import solve_sgd
+from repro.core.precond import nystrom_preconditioner, pivoted_cholesky_preconditioner
+
+
+def test_cg_converges_to_dense(toy_regression):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    res = solve_cg(op, t["y"], max_iters=400, tol=1e-6)
+    np.testing.assert_allclose(res.solution, t["v_star"], atol=1e-3)
+    assert bool(res.converged)
+
+
+def test_cg_multi_rhs(toy_regression):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    b = jax.random.normal(jax.random.PRNGKey(0), (t["n"], 5))
+    res = solve_cg(op, b, max_iters=400, tol=1e-8)
+    ref = jnp.linalg.solve(t["kmat"], b)
+    np.testing.assert_allclose(res.solution, ref, atol=2e-3)
+
+
+def test_sdd_converges_weights(toy_regression):
+    """Ch. 4: dual descent reaches the dense solution in weight space."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    res = solve_sdd(op, t["y"], key=jax.random.PRNGKey(1), num_steps=30_000,
+                    batch_size=128, step_size_times_n=5.0)
+    assert float(jnp.linalg.norm(res.solution - t["v_star"])) < 5e-2 * float(
+        jnp.linalg.norm(t["v_star"])
+    )
+
+
+def test_sgd_converges_predictions(toy_regression):
+    """Ch. 3 implicit bias: SGD is accurate in PREDICTION space even when slow in
+    weight space (§3.2.4)."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    res = solve_sgd(op, t["y"], key=jax.random.PRNGKey(2), num_steps=20_000,
+                    batch_size=128, step_size_times_n=0.5)
+    k_test = gram(t["params"], t["x_test"], t["x"])
+    pred = k_test @ res.solution
+    ref = k_test @ t["v_star"]
+    err = float(jnp.max(jnp.abs(pred - ref)))
+    assert err < 0.08, err
+
+
+def test_ap_converges(toy_regression):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    res = solve_ap(op, t["y"], key=jax.random.PRNGKey(3), num_steps=2000,
+                   block_size=100)
+    assert float(res.rel_residual.max()) < 1e-2
+
+
+def test_warm_start_reduces_iterations(toy_regression):
+    """Ch. 5 §5.3: initialising at a nearby solution cuts CG iterations."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    cold = solve_cg(op, t["y"], max_iters=400, tol=1e-6)
+    # perturb hyperparameters slightly — the warm start is the old solution
+    import dataclasses
+    p2 = dataclasses.replace(t["params"], log_lengthscale=t["params"].log_lengthscale + 0.05)
+    op2 = Gram(x=t["x"], params=p2)
+    cold2 = solve_cg(op2, t["y"], max_iters=400, tol=1e-6)
+    warm2 = solve_cg(op2, t["y"], cold.solution, max_iters=400, tol=1e-6)
+    assert int(warm2.iterations) < int(cold2.iterations)
+
+
+def test_early_stopping_budget(toy_regression):
+    """§5.4: a fixed iteration budget yields monotone-ish residual decrease."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    r10 = solve_cg(op, t["y"], max_iters=10, tol=0.0)
+    r50 = solve_cg(op, t["y"], max_iters=50, tol=0.0)
+    assert float(r50.rel_residual.max()) < float(r10.rel_residual.max())
+
+
+@pytest.mark.parametrize("precond_fn", ["nystrom", "pivoted"])
+def test_preconditioning_speeds_cg(toy_regression, precond_fn):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    plain = solve_cg(op, t["y"], max_iters=400, tol=1e-6)
+    if precond_fn == "nystrom":
+        pc = nystrom_preconditioner(t["params"], t["x"], jax.random.PRNGKey(0), rank=100)
+    else:
+        pc = pivoted_cholesky_preconditioner(t["params"], t["x"], rank=100)
+    fast = solve_cg(op, t["y"], max_iters=400, tol=1e-6, precond=pc)
+    assert int(fast.iterations) <= int(plain.iterations)
+    np.testing.assert_allclose(fast.solution, t["v_star"], atol=5e-3)
+
+
+def test_sdd_multiplicative_noise_tolerates_low_noise():
+    """Ch. 3/4 headline: iterative solvers stay accurate when σ² is tiny
+    (ill-conditioned kernel matrix) — the regime where SVGP diverges."""
+    key = jax.random.PRNGKey(0)
+    n = 300
+    x = jax.random.normal(key, (n, 2))
+    y = jnp.sin(x.sum(-1))
+    p = make_params("matern32", lengthscale=1.0, noise=0.01, d=2)
+    op = Gram(x=x, params=p)
+    res = solve_cg(op, y, max_iters=3000, tol=1e-6)
+    kmat = gram(p, x) + p.noise * jnp.eye(n)
+    ref = jnp.linalg.solve(kmat, y)
+    np.testing.assert_allclose(res.solution, ref, atol=2e-2)

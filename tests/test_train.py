@@ -1,0 +1,140 @@
+"""Training substrate: loss goes down, checkpoint/restart is exact, gradient
+compression with error feedback, straggler detection, curve-GP integration."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.data.pipeline import grid_curves, token_batch
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.train.compress import (
+    compress, decompress, init_error_state, tree_compress_with_feedback,
+    tree_decompress,
+)
+from repro.train.curve_gp import divergence_score, fit_curve_gp, should_stop_early
+from repro.train.optim import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _tiny_cfg():
+    return get_config("olmo-1b").reduced(num_layers=2, d_model=64, num_heads=2,
+                                         num_kv_heads=2, d_ff=128, head_dim=32,
+                                         vocab_size=128)
+
+
+def test_loss_decreases():
+    cfg = _tiny_cfg()
+    tc = TrainerConfig(batch=4, seq_len=32, num_steps=40, log_every=0,
+                       opt=AdamWConfig(lr=3e-3, warmup_steps=10, mu_dtype=jnp.float32))
+    tr = Trainer(cfg, tc)
+    tr.run()
+    first = np.mean(tr.losses[:5])
+    last = np.mean(tr.losses[-5:])
+    assert last < first - 0.1, (first, last)
+
+
+def test_checkpoint_restart_exact(tmp_path):
+    """Kill-and-resume reproduces the uninterrupted run bit-for-bit (stateless
+    data pipeline + atomic step-tagged checkpoints)."""
+    cfg = _tiny_cfg()
+
+    def make(steps, ckpt_dir):
+        tc = TrainerConfig(batch=4, seq_len=32, num_steps=steps, log_every=0,
+                           ckpt_dir=ckpt_dir, ckpt_every=10,
+                           opt=AdamWConfig(lr=1e-3, mu_dtype=jnp.float32))
+        return Trainer(cfg, tc)
+
+    # uninterrupted 20 steps
+    t_full = make(20, str(tmp_path / "full"))
+    p_full, _ = t_full.run()
+    # interrupted: run 10, then "crash" and resume to 20 in a fresh Trainer
+    t_a = make(10, str(tmp_path / "resume"))
+    t_a.run()
+    assert latest_step(str(tmp_path / "resume")) == 10
+    t_b = make(20, str(tmp_path / "resume"))
+    p_res, _ = t_b.run()
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"w": jnp.arange(6.0).reshape(2, 3)}
+    save_checkpoint(d, 5, tree)
+    # partial tmp dirs are ignored
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))
+    assert latest_step(d) == 5
+    restored, step, _ = restore_checkpoint(d, tree)
+    assert step == 5
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+
+
+def test_token_pipeline_stateless_and_learnable():
+    b1 = token_batch(0, 7, 4, 16, 97)
+    b2 = token_batch(0, 7, 4, 16, 97)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = token_batch(0, 8, 4, 16, 97)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    # planted bigram: majority of transitions follow next = 31·cur + 17 (mod V)
+    toks = np.asarray(b1["tokens"])
+    labs = np.asarray(b1["labels"])
+    hits = (labs == (31 * toks + 17) % 97).mean()
+    assert hits > 0.5
+
+
+def test_compression_error_feedback_unbiased():
+    """Error feedback: the cumulative decompressed sum tracks the true sum."""
+    key = jax.random.PRNGKey(0)
+    g = {"a": jax.random.normal(key, (64, 64)) * 1e-3}
+    err = init_error_state(g)
+    total_true = jnp.zeros((64, 64))
+    total_comp = jnp.zeros((64, 64))
+    for t in range(30):
+        gt = {"a": g["a"] * (1.0 + 0.1 * t)}
+        comp, err = tree_compress_with_feedback(gt, err, jax.random.fold_in(key, t))
+        dec = tree_decompress(comp, gt)
+        total_true += gt["a"]
+        total_comp += dec["a"]
+    rel = float(jnp.linalg.norm(total_comp - total_true) / jnp.linalg.norm(total_true))
+    assert rel < 0.05, rel
+
+
+def test_compression_roundtrip_quantisation():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (1000,))
+    c = compress(x, jax.random.fold_in(key, 1))
+    x2 = decompress(c)
+    assert c.q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(x2 - x))) <= float(c.scale) + 1e-6
+
+
+def test_straggler_detection():
+    cfg = _tiny_cfg()
+    tc = TrainerConfig(batch=2, seq_len=16, num_steps=1, log_every=0)
+    tr = Trainer(cfg, tc)
+    tr.step_times = [0.1] * 18 + [0.5, 0.1]
+    rep = tr.straggler_report()
+    assert len(rep.slow_steps) == 1
+    assert abs(rep.median_s - 0.1) < 1e-6
+
+
+def test_curve_gp_prediction_and_pruning():
+    data = grid_curves(n_configs=24, n_steps=30, density=0.7, seed=0)
+    pred = fit_curve_gp(data["curves"], data["mask"], data["grid1"],
+                        max_iters=200, num_samples=32)
+    # predictions on observed cells match the observed losses
+    m = np.asarray(data["mask"])
+    err = np.abs(np.asarray(pred.mean) - np.asarray(data["curves"]))[m]
+    assert err.mean() < 0.1, err.mean()
+    # the worst predicted config should be prunable against the best
+    worst = int(np.argmax(np.asarray(pred.final_mean)))
+    best = int(np.argmin(np.asarray(pred.final_mean)))
+    if pred.final_mean[worst] - pred.final_mean[best] > 2 * pred.final_std[worst]:
+        assert should_stop_early(pred, worst, margin=1.0)
+    assert not should_stop_early(pred, best, margin=1.0)
+    # divergence scoring: a wildly wrong loss has a big z-score
+    z = divergence_score(pred, 0, 10, float(data["curves"][0, 10]) + 10.0)
+    assert z > 3.0
