@@ -8,8 +8,7 @@ import numpy as np
 
 from repro.core.kernels_fn import gram, make_params
 from repro.core.solvers.base import Gram
-from repro.core.solvers.sdd import solve_sdd
-from repro.core.solvers.sgd import solve_sgd
+from repro.core.solvers.spec import SDD, SGD, solve
 from repro.data.pipeline import regression_dataset
 
 from .common import Report
@@ -58,10 +57,10 @@ def run(report: Report, full: bool = False):
                    k_err=_knorm(vd - v_star, kmat) if jnp.isfinite(vd).all() else float("inf"))
 
     # --- Fig 4.2: random features (additive noise) vs random coordinates -------
-    res_coord = solve_sdd(op, y, key=jax.random.PRNGKey(0), num_steps=10_000,
-                          batch_size=256, step_size_times_n=5.0)
-    res_feat = solve_sgd(op, y, key=jax.random.PRNGKey(0), num_steps=10_000,
-                         batch_size=256, num_features=100, step_size_times_n=0.5)
+    res_coord = solve(op, y, SDD(num_steps=10_000, batch_size=256,
+                                 step_size_times_n=5.0), key=jax.random.PRNGKey(0))
+    res_feat = solve(op, y, SGD(num_steps=10_000, batch_size=256, num_features=100,
+                                step_size_times_n=0.5), key=jax.random.PRNGKey(0))
     report.add("dual(F4.2)", "rand-coordinates", "pol",
                k_err=_knorm(res_coord.solution - v_star, kmat),
                rel_resid=float(res_coord.rel_residual.max()))
@@ -72,8 +71,8 @@ def run(report: Report, full: bool = False):
     # --- Fig 4.3: momentum / averaging ablation ---------------------------------
     for mom, avg, label in [(0.0, 1.0, "no-momentum"), (0.9, 1.0, "nesterov"),
                             (0.9, None, "nesterov+geom-avg")]:
-        r = solve_sdd(op, y, key=jax.random.PRNGKey(1), num_steps=6_000,
-                      batch_size=256, step_size_times_n=5.0, momentum=mom,
-                      averaging=avg)
+        r = solve(op, y, SDD(num_steps=6_000, batch_size=256,
+                             step_size_times_n=5.0, momentum=mom, averaging=avg),
+                  key=jax.random.PRNGKey(1))
         report.add("dual(F4.3)", label, "pol",
                    k_err=_knorm(r.solution - v_star, kmat))

@@ -49,7 +49,7 @@ def run(report: Report, full: bool = False):
 
     # standard iterative GP on the same observations (dense matvec on n_obs)
     from repro.core.pathwise import posterior_functions
-    from repro.core.solvers.cg import solve_cg
+    from repro.core.solvers.spec import CG
 
     grid_x = np.repeat(np.asarray(data["grid1"]), size[1], axis=0)
     grid_t = np.tile(np.asarray(data["grid2"]), (size[0], 1))
@@ -58,7 +58,7 @@ def run(report: Report, full: bool = False):
     p_flat = make_params("matern52", lengthscale=1.0, signal=1.0, noise=1e-1, d=5)
     pf, dt_std = timed(posterior_functions, p_flat, x_obs, y_obs - y_obs.mean(),
                        jax.random.PRNGKey(1), num_samples=8, num_features=1024,
-                       solver=solve_cg, max_iters=200)
+                       spec=CG(max_iters=200))
     report.add("kronecker(§6.3)", "standard-iterGP", f"{size[0]}x{size[1]}",
                n_obs=n_obs, seconds=round(dt_std, 2),
                lkgp_speedup=round(dt_std / max(dt_lk, 1e-9), 2))

@@ -10,6 +10,7 @@ import numpy as np
 from repro.core.gp import exact_mll
 from repro.core.kernels_fn import make_params
 from repro.core.mll import optimize_mll
+from repro.core.solvers.spec import CG
 from repro.data.pipeline import regression_dataset
 
 from .common import Report
@@ -21,7 +22,7 @@ def run(report: Report, full: bool = False):
     x, y = data["x"][:n], data["y"][:n]
     d = x.shape[1]
     p0 = make_params("matern32", lengthscale=2.0, signal=0.5, noise=0.5, d=d)
-    kw = dict(num_steps=12, lr=0.08, num_probes=8, max_iters=600, tol=1e-3)
+    kw = dict(num_steps=12, lr=0.08, num_probes=8, spec=CG(max_iters=600, tol=1e-3))
 
     rows = {}
     for est in ("hutchinson", "pathwise"):
@@ -43,16 +44,16 @@ def run(report: Report, full: bool = False):
 
     # §5.4 early stopping: residual after a fixed budget, warm vs cold
     from repro.core.solvers.base import Gram
-    from repro.core.solvers.cg import solve_cg
+    from repro.core.solvers.spec import solve
 
     p = make_params("matern32", lengthscale=1.5, signal=1.0, noise=0.2, d=d)
     op = Gram(x=x, params=p)
-    cold = solve_cg(op, y, max_iters=20, tol=0.0)
+    cold = solve(op, y, CG(max_iters=20, tol=0.0))
     # warm start from a cheap preliminary solve at slightly different θ
     import dataclasses
     p_near = dataclasses.replace(p, log_lengthscale=p.log_lengthscale + 0.05)
-    prelim = solve_cg(Gram(x=x, params=p_near), y, max_iters=60, tol=0.0)
-    warm = solve_cg(op, y, prelim.solution, max_iters=20, tol=0.0)
+    prelim = solve(Gram(x=x, params=p_near), y, CG(max_iters=60, tol=0.0))
+    warm = solve(op, y, CG(max_iters=20, tol=0.0), x0=prelim.solution)
     report.add("mll-earlystop(§5.4)", "cold-20it", "elevators",
                rel_resid=float(cold.rel_residual.max()))
     report.add("mll-earlystop(§5.4)", "warm-20it", "elevators",

@@ -8,8 +8,7 @@ import numpy as np
 
 from repro.core.kernels_fn import TANIMOTO, gram, make_params
 from repro.core.solvers.base import Gram
-from repro.core.solvers.cg import solve_cg
-from repro.core.solvers.sdd import solve_sdd
+from repro.core.solvers.spec import CG, SDD, solve
 from repro.data.pipeline import molecule_fingerprints
 
 from .common import Report
@@ -29,12 +28,11 @@ def run(report: Report, full: bool = False):
         p = make_params(TANIMOTO, signal=1.0, noise=0.3)
         op = Gram(x=data["x"], params=p)
         k_test = gram(p, data["x_test"], data["x"])
-        for method, solver, kw in [
-            ("SDD", solve_sdd, dict(key=jax.random.PRNGKey(0), num_steps=6000,
-                                    batch_size=256, step_size_times_n=2.0)),
-            ("CG", solve_cg, dict(max_iters=200, tol=1e-4)),
+        for method, spec in [
+            ("SDD", SDD(num_steps=6000, batch_size=256, step_size_times_n=2.0)),
+            ("CG", CG(max_iters=200, tol=1e-4)),
         ]:
-            res = solver(op, data["y"], **kw)
+            res = solve(op, data["y"], spec, key=jax.random.PRNGKey(0))
             pred = k_test @ res.solution
             report.add("molecules(T4.2)", method, name, r2=round(_r2(data["y_test"], pred), 3))
         # mean predictor control

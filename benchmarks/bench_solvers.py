@@ -13,9 +13,7 @@ import numpy as np
 
 from repro.core.kernels_fn import gram, make_params
 from repro.core.pathwise import posterior_functions
-from repro.core.solvers.cg import solve_cg
-from repro.core.solvers.sdd import solve_sdd
-from repro.core.solvers.sgd import solve_sgd
+from repro.core.solvers.spec import CG, SDD, SGD
 from repro.core.svgp import sgpr
 from repro.data.pipeline import regression_dataset
 
@@ -36,15 +34,13 @@ def run(report: Report, full: bool = False):
                         signal=1.0, noise=0.1, d=d)
 
         budget = dict(num_samples=16, num_features=2048)
-        for method, solver, kw in [
-            ("CG", solve_cg, dict(max_iters=150, tol=1e-3)),
-            ("SGD", solve_sgd, dict(num_steps=8000, batch_size=256,
-                                    step_size_times_n=0.5)),
-            ("SDD", solve_sdd, dict(num_steps=8000, batch_size=256,
-                                    step_size_times_n=2.0)),
+        for method, spec in [
+            ("CG", CG(max_iters=150, tol=1e-3)),
+            ("SGD", SGD(num_steps=8000, batch_size=256, step_size_times_n=0.5)),
+            ("SDD", SDD(num_steps=8000, batch_size=256, step_size_times_n=2.0)),
         ]:
             pf, dt = timed(posterior_functions, p, x, y, jax.random.PRNGKey(0),
-                           solver=solver, **budget, **kw)
+                           spec=spec, **budget)
             mu, var = pf.sample_mean_and_var(xt)
             report.add("solvers(T3.1/4.1)", method, name,
                        rmse=rmse(mu, yt), nll=nll_gaussian(yt, mu, var),
@@ -60,13 +56,12 @@ def run(report: Report, full: bool = False):
 
         # low-noise, ill-conditioned row (RMSE† in Table 3.1)
         p_low = dataclasses.replace(p, log_noise=jnp.log(jnp.asarray(0.001)))
-        for method, solver, kw in [
-            ("CG", solve_cg, dict(max_iters=150, tol=1e-3)),
-            ("SDD", solve_sdd, dict(num_steps=8000, batch_size=256,
-                                    step_size_times_n=2.0)),
+        for method, spec in [
+            ("CG", CG(max_iters=150, tol=1e-3)),
+            ("SDD", SDD(num_steps=8000, batch_size=256, step_size_times_n=2.0)),
         ]:
             pf, dt = timed(posterior_functions, p_low, x, y, jax.random.PRNGKey(0),
-                           solver=solver, num_samples=4, num_features=2048, **kw)
+                           spec=spec, num_samples=4, num_features=2048)
             mu = pf.mean(xt)
             report.add("solvers-lownoise", method, name, rmse=rmse(mu, yt),
                        seconds=round(dt, 2))

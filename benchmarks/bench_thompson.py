@@ -8,9 +8,7 @@ import numpy as np
 
 from repro.core.kernels_fn import make_params
 from repro.core.rff import sample_prior
-from repro.core.solvers.cg import solve_cg
-from repro.core.solvers.sdd import solve_sdd
-from repro.core.solvers.sgd import solve_sgd
+from repro.core.solvers.spec import CG, SDD, SGD
 from repro.core.thompson import ThompsonState, thompson_step
 
 from .common import Report
@@ -33,19 +31,17 @@ def run(report: Report, full: bool = False):
         x0 = jax.random.uniform(jax.random.fold_in(key, seed), (n0, d))
         y0 = objective(x0)
         base = float(y0.max())
-        for method, solver, kw in [
-            ("SDD", solve_sdd, dict(num_steps=3000, batch_size=128,
-                                    step_size_times_n=2.0)),
-            ("SGD", solve_sgd, dict(num_steps=3000, batch_size=128,
-                                    step_size_times_n=0.3)),
-            ("CG", solve_cg, dict(max_iters=100)),
+        for method, spec in [
+            ("SDD", SDD(num_steps=3000, batch_size=128, step_size_times_n=2.0)),
+            ("SGD", SGD(num_steps=3000, batch_size=128, step_size_times_n=0.3)),
+            ("CG", CG(max_iters=100)),
         ]:
             state = ThompsonState(x=x0, y=y0, best=base)
             for t in range(steps):
                 state = thompson_step(
                     p, state, objective, jax.random.fold_in(key, 77 + 13 * t + seed),
                     acq_batch=acq, num_candidates=512, num_top=4, ascent_steps=20,
-                    solver=solver, solver_kwargs=kw,
+                    spec=spec,
                 )
             report.add("thompson(F3.7/4.4)", method, f"d={d} seed={seed}",
                        start=round(base, 3), best=round(state.best, 3),

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.core.kernels_fn import make_params
 from repro.core.rff import sample_prior
-from repro.core.solvers.sdd import solve_sdd
+from repro.core.solvers.spec import SDD
 from repro.core.thompson import ThompsonState, thompson_step
 
 
@@ -45,8 +45,7 @@ def main():
         state = thompson_step(
             params, state, objective, jax.random.fold_in(key, 100 + step),
             acq_batch=args.acq, num_candidates=2048, num_top=8, ascent_steps=30,
-            solver=solve_sdd,
-            solver_kwargs=dict(num_steps=4000, batch_size=256, step_size_times_n=2.0),
+            spec=SDD(num_steps=4000, batch_size=256, step_size_times_n=2.0),
         )
         print(f"step {step}: best={state.best:.4f}  n={state.x.shape[0]}  "
               f"({time.time()-t0:.1f}s)")

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core.kernels_fn import TANIMOTO, gram, make_params
 from repro.core.solvers.base import Gram
-from repro.core.solvers.sdd import solve_sdd
+from repro.core.solvers.spec import SDD, solve
 from repro.data.pipeline import molecule_fingerprints
 
 
@@ -28,8 +28,8 @@ def main():
     p = make_params(TANIMOTO, signal=1.0, noise=0.3)
     op = Gram(x=data["x"], params=p)
     t0 = time.time()
-    res = solve_sdd(op, data["y"], key=jax.random.PRNGKey(0), num_steps=8000,
-                    batch_size=256, step_size_times_n=2.0)
+    res = solve(op, data["y"], SDD(num_steps=8000, batch_size=256,
+                                   step_size_times_n=2.0), key=jax.random.PRNGKey(0))
     dt = time.time() - t0
     pred = gram(p, data["x_test"], data["x"]) @ res.solution
     print(f"Tanimoto-GP via SDD: n={data['x'].shape[0]}  {dt:.1f}s  "

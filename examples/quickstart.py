@@ -12,12 +12,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.api import IterativeGP
 from repro.core.gp import exact_posterior
 from repro.core.kernels_fn import make_params
 from repro.core.pathwise import posterior_functions
-from repro.core.solvers.cg import solve_cg
-from repro.core.solvers.sdd import solve_sdd
-from repro.core.solvers.sgd import solve_sgd
+from repro.core.solvers.spec import CG, SDD, SGD
 from repro.data.pipeline import regression_dataset
 
 
@@ -39,17 +38,18 @@ def main():
     print(f"  exact (Cholesky, O(n³)): {time.time()-t0:.1f}s  "
           f"rmse={float(jnp.sqrt(jnp.mean((mu_ref - yt)**2))):.4f}")
 
-    for name, solver, kw in [
-        ("CG  (§2.2.4)", solve_cg, dict(max_iters=200, tol=1e-4)),
-        ("SGD (Ch. 3) ", solve_sgd, dict(num_steps=args.steps, batch_size=512,
-                                         step_size_times_n=0.5)),
-        ("SDD (Ch. 4) ", solve_sdd, dict(num_steps=args.steps, batch_size=512,
-                                         step_size_times_n=5.0)),
+    # each solver is a declarative spec; posterior_functions(..., spec=...) is the
+    # only thing that changes between methods
+    for name, spec in [
+        ("CG  (§2.2.4)", CG(max_iters=200, tol=1e-4)),
+        ("SGD (Ch. 3) ", SGD(num_steps=args.steps, batch_size=512,
+                             step_size_times_n=0.5)),
+        ("SDD (Ch. 4) ", SDD(num_steps=args.steps, batch_size=512,
+                             step_size_times_n=5.0)),
     ]:
         t0 = time.time()
         pf = posterior_functions(params, x, y, jax.random.PRNGKey(0),
-                                 num_samples=16, num_features=2048,
-                                 solver=solver, **kw)
+                                 num_samples=16, num_features=2048, spec=spec)
         mu, var = pf.sample_mean_and_var(xt)
         dt = time.time() - t0
         rmse = float(jnp.sqrt(jnp.mean((mu - yt) ** 2)))
@@ -58,6 +58,11 @@ def main():
               f"mean σ={float(jnp.sqrt(var.mean())):.3f}")
     print("posterior samples are functions: evaluating 16 samples at 5 new points:")
     print(np.asarray(pf(xt[:5])).round(3))
+
+    # ...or the whole pipeline in three lines via the façade:
+    gp = IterativeGP("matern32", lengthscale=1.0, noise=0.1, spec="cg")
+    mu, var = gp.fit(x, y).predict(xt, num_samples=16)
+    print(f"IterativeGP façade: rmse={float(jnp.sqrt(jnp.mean((mu - yt)**2))):.4f}")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,21 @@ from .solvers.cg import solve_cg  # noqa: F401
 from .solvers.sgd import solve_sgd  # noqa: F401
 from .solvers.sdd import solve_sdd  # noqa: F401
 from .solvers.ap import solve_ap  # noqa: F401
+from .solvers.spec import (  # noqa: F401
+    AP,
+    CG,
+    SDD,
+    SGD,
+    Nystrom,
+    PivotedCholesky,
+    SolverSpec,
+    as_spec,
+    get_solver,
+    register_solver,
+    registered_solvers,
+    solve,
+)
+from .api import IterativeGP  # noqa: F401
 from .mll import mll_grad, optimize_mll  # noqa: F401
 from .inducing import inducing_posterior  # noqa: F401
 from .kronecker import make_lkgp, lkgp_posterior, lkgp_solve_cg, break_even_density  # noqa: F401

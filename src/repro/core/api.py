@@ -1,0 +1,164 @@
+"""`IterativeGP` — the paper's pipeline in three lines.
+
+    gp = IterativeGP("matern32", lengthscale=0.5, noise=0.1, spec="sdd")
+    gp.fit(x, y).optimize(num_steps=20)
+    mean, var = gp.predict(x_new)
+
+Everything routes through the unified SolverSpec API (core/solvers/spec.py): the
+same spec drives MLL optimisation (Ch. 5), pathwise posterior sampling (Ch. 3) and
+prediction, so swapping CG ↔ SGD ↔ SDD ↔ AP is a one-argument change.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from .kernels_fn import KernelParams, make_params
+from .mll import MLLOptimState, optimize_mll
+from .pathwise import PosteriorFunctions, posterior_functions
+from .solvers.spec import SolverSpec, SpecLike, as_spec
+
+
+class IterativeGP:
+    """Scalable GP regression façade over the iterative-solver stack.
+
+    Stateful and deliberately small: ``fit`` stores the data (GPs have no separate
+    training phase — all cost is in the linear solves), ``optimize`` runs Adam
+    ascent on the marginal likelihood with warm-started inner solves, and
+    ``posterior``/``sample``/``predict`` expose pathwise-conditioned function
+    samples. All PRNG handling is internal (seeded by ``seed``) unless an explicit
+    ``key`` is passed.
+    """
+
+    def __init__(
+        self,
+        kernel: str = "matern32",
+        *,
+        lengthscale: float = 1.0,
+        signal: float = 1.0,
+        noise: float = 0.1,
+        spec: SpecLike = "cg",
+        seed: int = 0,
+    ):
+        self.kernel = kernel
+        self._init_hypers = dict(lengthscale=lengthscale, signal=signal, noise=noise)
+        self.spec: SolverSpec = as_spec(spec)
+        self.params: Optional[KernelParams] = None
+        self.x: Optional[jax.Array] = None
+        self.y: Optional[jax.Array] = None
+        self._key = jax.random.PRNGKey(seed)
+        self._post: Optional[PosteriorFunctions] = None
+        self._post_cache_key: Optional[tuple] = None
+        self.last_optim: Optional[MLLOptimState] = None
+
+    def _next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _require_fitted(self):
+        if self.x is None:
+            raise RuntimeError("call fit(x, y) before optimizing or predicting")
+
+    def fit(self, x, y) -> "IterativeGP":
+        """Store training data; hyperparameters are created on first fit (and
+        re-initialised if the feature dimension changes — ARD lengthscales sized
+        for the old d cannot be reused)."""
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        if self.params is not None and self.params.log_lengthscale.shape != (
+            x.shape[1],
+        ):
+            self.params = None
+        if self.params is None:
+            self.params = make_params(
+                self.kernel, d=x.shape[1], **self._init_hypers
+            )
+        self.x, self.y = x, y
+        self._post = None
+        return self
+
+    def optimize(
+        self,
+        num_steps: int = 20,
+        lr: float = 0.05,
+        *,
+        num_probes: int = 8,
+        warm_start: bool = True,
+        estimator: str = "pathwise",
+        key: Optional[jax.Array] = None,
+    ) -> "IterativeGP":
+        """Adam ascent on the MLL with warm-started inner solves (Ch. 5)."""
+        self._require_fitted()
+        st = optimize_mll(
+            self.params,
+            self.x,
+            self.y,
+            self._next_key() if key is None else key,
+            num_steps=num_steps,
+            lr=lr,
+            num_probes=num_probes,
+            warm_start=warm_start,
+            estimator=estimator,
+            spec=self.spec,
+        )
+        self.params = st.params
+        self.last_optim = st
+        self._post = None
+        return self
+
+    def posterior(
+        self,
+        num_samples: int = 16,
+        num_features: int = 2048,
+        key: Optional[jax.Array] = None,
+    ) -> PosteriorFunctions:
+        """Pathwise-conditioned posterior function samples. Cached until the
+        hyperparameters, data, or sampling arguments change; passing an explicit
+        ``key`` always draws fresh samples."""
+        self._require_fitted()
+        cache_key = (num_samples, num_features)
+        if self._post is None or key is not None or self._post_cache_key != cache_key:
+            self._post = posterior_functions(
+                self.params,
+                self.x,
+                self.y,
+                self._next_key() if key is None else key,
+                num_samples=num_samples,
+                num_features=num_features,
+                spec=self.spec,
+            )
+            self._post_cache_key = cache_key
+            info = self._post.solve_info
+            if info is not None and not bool(
+                jnp.all(jnp.isfinite(info.rel_residual))
+            ):
+                warnings.warn(
+                    f"solver {self.spec.name!r} diverged (non-finite residual) — "
+                    f"its step size is tuned for large n; reduce "
+                    f"step_size_times_n or use spec='cg'",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+        return self._post
+
+    def sample(
+        self,
+        xs,
+        num_samples: int = 16,
+        key: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Evaluate posterior function samples at ``xs`` → (n*, num_samples)."""
+        return self.posterior(num_samples, key=key)(jnp.asarray(xs))
+
+    def predict(
+        self,
+        xs,
+        num_samples: int = 64,
+        key: Optional[jax.Array] = None,
+    ) -> tuple:
+        """Posterior mean (representer weights, no MC error) and MC variance."""
+        post = self.posterior(num_samples, key=key)
+        return post.sample_mean_and_var(jnp.asarray(xs))

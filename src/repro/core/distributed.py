@@ -21,6 +21,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from .kernels_fn import KernelParams, gram
+from .solvers.spec import CG, SpecLike, as_spec
 
 
 def _local_block_matvec(params, x_local, x_all, v_all, jitter, row_offset):
@@ -100,3 +101,30 @@ def distributed_cg(
 
 def shard_training_rows(mesh: Mesh, x: jax.Array, data_axes=("data",)) -> jax.Array:
     return jax.device_put(x, NamedSharding(mesh, P(data_axes, None)))
+
+
+def distributed_solve(
+    params: KernelParams,
+    x: jax.Array,
+    b: jax.Array,
+    mesh: Mesh,
+    spec: SpecLike = "cg",
+    data_axes=("data",),
+) -> jax.Array:
+    """Spec-driven front door for sharded solves (same SolverSpec API as solve()).
+
+    Only CG specs have a distributed implementation today; the stochastic solvers'
+    row gathers are served by the elastic path (train/elastic.py) instead.
+    """
+    s = as_spec(spec)
+    if not isinstance(s, CG):
+        raise NotImplementedError(
+            f"distributed solves currently support CG specs only; got {s.name!r}"
+        )
+    if s.precond is not None:
+        raise NotImplementedError(
+            "preconditioning is not supported in the distributed path yet"
+        )
+    return distributed_cg(
+        params, x, b, mesh, data_axes, max_iters=s.max_iters, tol=s.tol
+    )

@@ -14,7 +14,6 @@ with f_X ≈ RFF prior (the Nyström-consistency approximation discussed in §3.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
@@ -22,6 +21,8 @@ import jax.numpy as jnp
 
 from .kernels_fn import KernelParams, gram, matvec
 from .rff import PriorSamples, sample_prior
+from .solvers.base import SolveResult
+from .solvers.spec import CG, SpecLike, as_spec, solve
 
 
 @jax.tree_util.register_dataclass
@@ -41,50 +42,30 @@ class InducingPosterior:
         return self.prior(xs) + kxz @ (self.v_mean[:, None] - self.alpha)
 
 
-def _normal_eq_matvec(
-    params: KernelParams, x: jax.Array, z: jax.Array, u: jax.Array, row_chunk: int
-) -> jax.Array:
-    """(K_ZX K_XZ + σ² K_ZZ) @ u without materialising K_XZ (n×m) when n is large."""
-    kxz_u = matvec(params, x, u, z=z, row_chunk=row_chunk)  # (n, s)
-    kzx_kxz_u = matvec(params, z, kxz_u, z=x, row_chunk=row_chunk)  # (m, s)
-    kzz_u = matvec(params, z, u, z=z, row_chunk=row_chunk)
-    return kzx_kxz_u + params.noise * kzz_u
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NormalEq:
+    """The m×m operator K_ZX K_XZ + σ² K_ZZ, touched only through matvecs.
 
+    A matvec-only operator (no kernel-row gathers), so only CG-family specs can
+    drive it through ``solve()`` — the stochastic solvers need ``op.rows``.
+    """
 
-@partial(jax.jit, static_argnames=("max_iters", "row_chunk"))
-def _solve_inducing_cg(
-    params: KernelParams,
-    x: jax.Array,
-    z: jax.Array,
-    rhs: jax.Array,
-    max_iters: int = 200,
-    tol: float = 1e-3,
-    row_chunk: int = 4096,
-) -> jax.Array:
-    mv = lambda u: _normal_eq_matvec(params, x, z, u, row_chunk)
-    v = jnp.zeros_like(rhs)
-    r = rhs - mv(v)
-    p = r
-    bn = jnp.maximum(jnp.linalg.norm(rhs, axis=0), 1e-30)
-    rz = jnp.sum(r * r, axis=0)
+    x: jax.Array  # (n, d) training inputs
+    z: jax.Array  # (m, d) inducing inputs
+    params: KernelParams
+    row_chunk: int = dataclasses.field(default=4096, metadata=dict(static=True))
 
-    def cond(s):
-        _, r, _, t, _ = s
-        return jnp.logical_and(t < max_iters, jnp.any(jnp.linalg.norm(r, axis=0) / bn > tol))
+    @property
+    def noise(self) -> jax.Array:
+        return self.params.noise
 
-    def body(s):
-        v, r, p, t, rz = s
-        ap = mv(p)
-        pap = jnp.sum(p * ap, axis=0)
-        a = rz / jnp.where(pap > 0, pap, 1.0)
-        v = v + a[None] * p
-        r = r - a[None] * ap
-        rz2 = jnp.sum(r * r, axis=0)
-        p = r + (rz2 / jnp.where(rz > 0, rz, 1.0))[None] * p
-        return v, r, p, t + 1, rz2
-
-    v, *_ = jax.lax.while_loop(cond, body, (v, r, p, 0, rz))
-    return v
+    def mv(self, u: jax.Array) -> jax.Array:
+        """(K_ZX K_XZ + σ² K_ZZ) @ u without materialising K_XZ (n×m)."""
+        kxz_u = matvec(self.params, self.x, u, z=self.z, row_chunk=self.row_chunk)
+        kzx_kxz_u = matvec(self.params, self.z, kxz_u, z=self.x, row_chunk=self.row_chunk)
+        kzz_u = matvec(self.params, self.z, u, z=self.z, row_chunk=self.row_chunk)
+        return kzx_kxz_u + self.params.noise * kzz_u
 
 
 def inducing_posterior(
@@ -96,16 +77,30 @@ def inducing_posterior(
     *,
     num_samples: int = 16,
     num_features: int = 2048,
+    spec: Optional[SpecLike] = None,
     max_iters: int = 200,
+    tol: float = 1e-5,
     row_chunk: int = 4096,
 ) -> InducingPosterior:
+    """Optimal inducing posterior via ``solve()`` on the normal-equations operator.
+
+    ``spec`` must be a matvec-only (CG-family) spec; when omitted it defaults to
+    ``CG(max_iters=max_iters, tol=tol)`` (no preconditioning — the operator is not
+    a Gram matrix). The tight default ``tol`` matters: the normal-equations
+    operator is ill-conditioned (κ(K_XZ)²-ish), so a loose per-column tolerance
+    stops refinement long before the *prediction-space* error is small — spend the
+    whole ``max_iters`` budget instead.
+    """
+    s = as_spec(CG(max_iters=max_iters, tol=tol) if spec is None else spec)
     kp, ke = jax.random.split(key)
     prior = sample_prior(params, kp, num_samples, num_features, x.shape[1])
     f_x = prior(x)
     eps = jnp.sqrt(params.noise) * jax.random.normal(ke, f_x.shape, f_x.dtype)
     targets = jnp.concatenate([y[:, None], f_x + eps], axis=1)  # (n, 1+s)
     rhs = matvec(params, z, targets, z=x, row_chunk=row_chunk)  # K_ZX b: (m, 1+s)
-    sol = _solve_inducing_cg(params, x, z, rhs, max_iters=max_iters, row_chunk=row_chunk)
+    op = NormalEq(x=x, z=z, params=params, row_chunk=row_chunk)
+    res: SolveResult = solve(op, rhs, s, key=key)
+    sol = res.solution
     return InducingPosterior(
         params=params, z=z, prior=prior, v_mean=sol[:, 0], alpha=sol[:, 1:]
     )

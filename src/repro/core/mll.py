@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from .kernels_fn import KernelParams, matvec
 from .rff import sample_prior
 from .solvers.base import Gram
-from .solvers.cg import solve_cg
+from .solvers.spec import SpecLike, coerce_spec, solve
 
 
 def _quad(params: KernelParams, x: jax.Array, u: jax.Array, w: jax.Array) -> jax.Array:
@@ -63,11 +63,17 @@ def mll_grad(
     num_probes: int = 8,
     num_features: int = 1024,
     estimator: str = "pathwise",  # "pathwise" | "hutchinson"
-    solver: Callable = solve_cg,
+    spec: Optional[SpecLike] = None,
     x0: Optional[jax.Array] = None,
+    solver: Optional[Callable] = None,  # deprecated
     **solver_kwargs,
 ) -> MLLGradEstimate:
-    """Estimated ∇_θ log p(y|θ) (ascent direction). θ in log space (KernelParams)."""
+    """Estimated ∇_θ log p(y|θ) (ascent direction). θ in log space (KernelParams).
+
+    Any registered ``SolverSpec`` (instance/class/name) runs the inner solves;
+    the legacy ``solver=fn, **kwargs`` form warns and is mapped to its spec.
+    """
+    s = coerce_spec(spec, solver=solver, **solver_kwargs)
     op = Gram(x=x, params=params)
     n = x.shape[0]
     kp, ke, ks = jax.random.split(key, 3)
@@ -81,10 +87,7 @@ def mll_grad(
         probes = jax.random.normal(ke, (n, num_probes), dtype=x.dtype)
 
     rhs = jnp.concatenate([y[:, None], probes], axis=1)
-    if solver is solve_cg:
-        res = solver(op, rhs, x0, **solver_kwargs)
-    else:
-        res = solver(op, rhs, x0, key=ks, **solver_kwargs)
+    res = solve(op, rhs, s, key=ks, x0=x0)
     sol = jax.lax.stop_gradient(res.solution)
     v_y, alpha = sol[:, 0], sol[:, 1:]
 
@@ -136,11 +139,13 @@ def optimize_mll(
     warm_start: bool = True,
     estimator: str = "pathwise",
     num_probes: int = 8,
-    solver: Callable = solve_cg,
+    spec: Optional[SpecLike] = None,
     callback: Optional[Callable[[int, MLLOptimState], None]] = None,
+    solver: Optional[Callable] = None,  # deprecated
     **solver_kwargs,
 ) -> MLLOptimState:
     """Outer loop: Adam ascent on θ with warm-started inner solves (Ch. 5)."""
+    s = coerce_spec(spec, solver=solver, **solver_kwargs)
     zeros = jax.tree.map(jnp.zeros_like, params)
     st = MLLOptimState(params, zeros, zeros, None, 0, 0)
     for t in range(num_steps):
@@ -155,9 +160,8 @@ def optimize_mll(
             key if warm_start else jax.random.fold_in(key, t),
             num_probes=num_probes,
             estimator=estimator,
-            solver=solver,
+            spec=s,
             x0=st.warm if warm_start else None,
-            **solver_kwargs,
         )
         p, m, v = _tree_adam(st.params, est.grad, st.adam_m, st.adam_v, t, lr)
         warm = jnp.concatenate([est.v_y[:, None], est.alpha], axis=1)

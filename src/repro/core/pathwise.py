@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from .kernels_fn import KernelParams, gram, matvec
 from .rff import PriorSamples, sample_prior
 from .solvers.base import Gram, SolveResult
-from .solvers.cg import solve_cg
+from .solvers.spec import SpecLike, coerce_spec, solve
 
 
 @jax.tree_util.register_dataclass
@@ -56,21 +56,24 @@ class PosteriorFunctions:
         return self.mean(xs), jnp.var(f, axis=1)
 
 
-def pathwise_rhs(
+def pathwise_targets(
     op: Gram,
     y: jax.Array,
     prior: PriorSamples,
     key: jax.Array,
 ) -> tuple[jax.Array, jax.Array]:
-    """Build the batched RHS [y | f_X^1+ε_1 | ... | f_X^s+ε_s] and the noise draws.
+    """Batched targets for the pathwise solve in ``solve()``'s (b, δ) convention.
 
-    Returns (rhs (n, 1+s), eps (n, s)). ε is returned separately so SGD's
-    variance-reduced objective (Eq. 3.6) can move it into the regulariser as δ=ε/σ².
+    Returns (data (n, 1+s), delta (n, 1+s)) with data = [y | f_X^1 .. f_X^s] and
+    δ = [0 | ε_1/σ² .. ε_s/σ²]: the system solved is (K+σ²I)V = data + σ²δ =
+    [y | f_X+ε]. Keeping ε in the δ channel lets SGD apply the Eq. 3.6
+    variance-reduction shift; every other solver folds it into the RHS.
     """
     f_x = prior(op.x)  # (n, s)
     eps = jnp.sqrt(op.noise) * jax.random.normal(key, f_x.shape, dtype=f_x.dtype)
-    rhs = jnp.concatenate([y[:, None], f_x + eps], axis=1)
-    return rhs, eps
+    data = jnp.concatenate([y[:, None], f_x], axis=1)
+    delta = jnp.concatenate([jnp.zeros_like(y)[:, None], eps / op.noise], axis=1)
+    return data, delta
 
 
 def posterior_functions(
@@ -81,24 +84,23 @@ def posterior_functions(
     *,
     num_samples: int = 16,
     num_features: int = 2048,
-    solver: Callable[..., SolveResult] = solve_cg,
+    spec: Optional[SpecLike] = None,
     x0: Optional[jax.Array] = None,
+    solver: Optional[Callable[..., SolveResult]] = None,  # deprecated
     **solver_kwargs,
 ) -> PosteriorFunctions:
-    """End-to-end pathwise posterior: RFF prior + one batched iterative solve."""
+    """End-to-end pathwise posterior: RFF prior + one batched iterative solve.
+
+    ``spec`` is any registered :class:`~repro.core.solvers.spec.SolverSpec`
+    (instance, class, or name like ``"sdd"``); defaults to CG. The legacy
+    ``solver=fn, **kwargs`` form still works but emits a ``DeprecationWarning``.
+    """
+    s = coerce_spec(spec, solver=solver, **solver_kwargs)
     kp, ke, ks = jax.random.split(key, 3)
     op = Gram(x=x, params=params)
     prior = sample_prior(params, kp, num_samples, num_features, x.shape[1])
-    rhs, eps = pathwise_rhs(op, y, prior, ke)
-    if solver is solve_cg:
-        res = solver(op, rhs, x0, **solver_kwargs)
-    elif getattr(solver, "__name__", "") == "solve_sgd":
-        # variance-reduced targets: data target [y | f_X], δ = [0 | ε/σ²]
-        data = rhs.at[:, 1:].add(-eps)
-        delta = jnp.concatenate([jnp.zeros_like(y)[:, None], eps / params.noise], axis=1)
-        res = solver(op, data, x0, key=ks, delta=delta, **solver_kwargs)
-    else:
-        res = solver(op, rhs, x0, key=ks, **solver_kwargs)
+    data, delta = pathwise_targets(op, y, prior, ke)
+    res = solve(op, data, s, key=ks, x0=x0, delta=delta)
     sol = res.solution
     return PosteriorFunctions(
         params=params,

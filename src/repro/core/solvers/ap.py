@@ -29,6 +29,7 @@ def solve_ap(
     key: jax.Array,
     num_steps: int = 2000,
     block_size: int = 512,
+    tol: float = 1e-2,
 ) -> SolveResult:
     b2, squeeze = as_matrix_rhs(b)
     n, s = b2.shape
@@ -54,4 +55,4 @@ def solve_ap(
         return (alpha, r), None
 
     (alpha, _), _ = jax.lax.scan(step, (a0, r0), jnp.arange(num_steps))
-    return finalize(op, alpha, b2, num_steps, squeeze)
+    return finalize(op, alpha, b2, num_steps, squeeze, tol=tol)

@@ -76,8 +76,11 @@ def as_matrix_rhs(b: jax.Array) -> tuple[jax.Array, bool]:
 
 
 def finalize(
-    op: Gram, v: jax.Array, b: jax.Array, iterations, squeeze: bool
+    op: Gram, v: jax.Array, b: jax.Array, iterations, squeeze: bool, *, tol: float
 ) -> SolveResult:
+    """Residual bookkeeping shared by all solvers. ``tol`` is the solver's own
+    relative-residual tolerance, so ``converged`` is meaningful for CG and the
+    stochastic solvers alike (it is *not* a fixed constant)."""
     r = b - op.mv(v)
     rn = jnp.linalg.norm(r, axis=0)
     bn = jnp.maximum(jnp.linalg.norm(b, axis=0), 1e-30)
@@ -87,7 +90,7 @@ def finalize(
         residual_norm=rn,
         rel_residual=rn / bn,
         iterations=jnp.asarray(iterations),
-        converged=jnp.all(rn / bn < 1.0),
+        converged=jnp.all(rn / bn <= tol),
     )
 
 

@@ -13,7 +13,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from .base import Gram, SolveResult, as_matrix_rhs, finalize
+from .base import Gram, SolveResult, as_matrix_rhs, finalize  # noqa: F401 (re-export)
 
 
 @partial(jax.jit, static_argnames=("max_iters", "precond"))
@@ -59,11 +59,4 @@ def solve_cg(
 
     state = (v, r0, z0, z0, jnp.asarray(0), jnp.sum(r0 * z0, axis=0))
     v, r, _, _, t, _ = jax.lax.while_loop(cond, body, state)
-    res = finalize(op, v, b2, t, squeeze)
-    return SolveResult(
-        solution=res.solution,
-        residual_norm=res.residual_norm,
-        rel_residual=res.rel_residual,
-        iterations=t,
-        converged=jnp.all(res.rel_residual <= tol),
-    )
+    return finalize(op, v, b2, t, squeeze, tol=tol)

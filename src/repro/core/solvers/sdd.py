@@ -37,6 +37,7 @@ def solve_sdd(
     step_size_times_n: float = 50.0,
     momentum: float = 0.9,
     averaging: Optional[float] = None,
+    tol: float = 1e-2,
 ) -> SolveResult:
     """Solve (K+σ²I)V = b by stochastic dual descent. b: (n,) or (n,s)."""
     b2, squeeze = as_matrix_rhs(b)
@@ -63,4 +64,4 @@ def solve_sdd(
 
     init = (a0, jnp.zeros_like(a0), a0)
     (alpha, _, avg), _ = jax.lax.scan(step, init, jnp.arange(num_steps))
-    return finalize(op, avg, b2, num_steps, squeeze)
+    return finalize(op, avg, b2, num_steps, squeeze, tol=tol)

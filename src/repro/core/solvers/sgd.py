@@ -48,6 +48,7 @@ def solve_sgd(
     average_tail: float = 0.5,
     delta: Optional[jax.Array] = None,
     grad_clip: float = 0.1,
+    tol: float = 1e-2,
 ) -> SolveResult:
     """Solve (K+σ²I)V = b_data + σ²δ by primal SGD. b/delta: (n,) or (n,s)."""
     b2, squeeze = as_matrix_rhs(b)
@@ -88,4 +89,4 @@ def solve_sgd(
     init = (v0, jnp.zeros_like(v0), jnp.zeros_like(v0), jnp.asarray(0.0))
     (v, _, avg, cnt), _ = jax.lax.scan(step, init, jnp.arange(num_steps))
     v_out = jnp.where(cnt > 0, avg, v)
-    return finalize(op, v_out, b2 + sigma2 * delta2, num_steps, squeeze)
+    return finalize(op, v_out, b2 + sigma2 * delta2, num_steps, squeeze, tol=tol)

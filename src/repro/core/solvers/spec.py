@@ -1,0 +1,372 @@
+"""Declarative solver configuration and the library's single ``solve()`` entry point.
+
+The paper's thesis is that *every* expensive GP computation — pathwise posterior
+samples (Ch. 3), MLL gradients (Ch. 5), Thompson steps (§3.3.2) — reduces to one
+batched multi-RHS linear solve against interchangeable iterative solvers. This module
+makes that interchangeability a first-class API instead of an accident of call sites:
+
+* frozen, pytree-registered spec dataclasses describe *how* to solve
+  (``CG``, ``SGD``, ``SDD``, ``AP``) and how to precondition (``Nystrom``,
+  ``PivotedCholesky``);
+* a registry maps string names (``"cg"``/``"sgd"``/``"sdd"``/``"ap"``) to spec
+  classes so configs, CLIs and serialized runs can name solvers;
+* ``solve(op, b, spec, key=..., x0=..., delta=...)`` uniformly handles PRNG keys,
+  warm starts and preconditioner construction for all of them.
+
+The system solved is always
+
+    (K + σ²I) V = b + σ² δ
+
+where ``delta`` is an optional extra channel: pathwise sampling passes δ = ε/σ² so
+SGD can keep the noise draw out of its mini-batch data-fit term (the Eq. 3.6
+variance-reduction shift); solvers without a native δ channel fold σ²δ into the
+right-hand side, which is algebraically identical.
+
+Specs carry only static (hashable) configuration, so they can cross ``jax.jit``
+boundaries as static arguments and serve as cache keys for compiled solves.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, ClassVar, Dict, Optional, Type, Union
+
+import jax
+
+from ..precond import nystrom_preconditioner, pivoted_cholesky_preconditioner
+from .ap import solve_ap
+from .base import Gram, SolveResult
+from .cg import solve_cg
+from .sdd import solve_sdd
+from .sgd import solve_sgd
+
+
+def _static(default):
+    return dataclasses.field(default=default, metadata=dict(static=True))
+
+
+def _require_gram(op, what: str):
+    if not isinstance(op, Gram):
+        raise TypeError(
+            f"{what} needs the training inputs and kernel hyperparameters, which "
+            f"only a Gram operator carries; got {type(op).__name__}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Preconditioner specs (§2.2.4; built on core/precond.py)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Nystrom:
+    """Uniform-subset Nyström preconditioner: rank-m surrogate + Woodbury apply."""
+
+    rank: int = _static(100)
+
+    def build(self, op: Gram, key: Optional[jax.Array] = None) -> Callable:
+        _require_gram(op, "the Nyström preconditioner")
+        key = jax.random.PRNGKey(0) if key is None else key
+        return nystrom_preconditioner(op.params, op.x, key, rank=self.rank)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PivotedCholesky:
+    """Greedy pivoted-Cholesky preconditioner (paper fidelity; sequential build)."""
+
+    rank: int = _static(100)
+
+    def build(self, op: Gram, key: Optional[jax.Array] = None) -> Callable:
+        _require_gram(op, "the pivoted-Cholesky preconditioner")
+        return pivoted_cholesky_preconditioner(op.params, op.x, rank=self.rank)
+
+
+PrecondSpec = Union[Nystrom, PivotedCholesky]
+# a raw ``r -> M⁻¹r`` callable is also accepted wherever a PrecondSpec fits
+PrecondLike = Union[Nystrom, PivotedCholesky, Callable]
+
+
+# ---------------------------------------------------------------------------
+# Solver specs + registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type["SolverSpec"]] = {}
+
+
+def register_solver(name: str, cls: Optional[type] = None):
+    """Register a spec class under a string name (usable as a decorator).
+
+    Third-party solvers plug in the same way the built-ins do: subclass
+    ``SolverSpec``, implement ``run``, and ``register_solver("mine", MySpec)`` —
+    every consumer (``posterior_functions``, ``mll_grad``, ``thompson_step``, …)
+    then accepts ``spec="mine"`` without being edited.
+    """
+
+    def deco(c: type) -> type:
+        c.name = name
+        _REGISTRY[name] = c
+        return c
+
+    return deco(cls) if cls is not None else deco
+
+
+def get_solver(name: str) -> Type["SolverSpec"]:
+    """String → spec class lookup for configs/CLIs; raises on unknown names."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver {name!r}; registered solvers: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def registered_solvers() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+class SolverSpec:
+    """Base class for declarative solver configs.
+
+    Subclasses are frozen dataclasses whose fields are all static (hashable), so a
+    spec instance can be a ``jax.jit`` static argument or a dict key. ``run`` maps
+    the spec onto the underlying solver function; consumers never call it directly
+    — they go through ``solve()``.
+    """
+
+    name: ClassVar[str] = "?"
+    requires_key: ClassVar[bool] = False  # stochastic solvers need a PRNG key
+    needs_rows: ClassVar[bool] = False  # needs op.rows (kernel row gathers)
+
+    def run(
+        self,
+        op,
+        b: jax.Array,
+        *,
+        key: Optional[jax.Array] = None,
+        x0: Optional[jax.Array] = None,
+        delta: Optional[jax.Array] = None,
+    ) -> SolveResult:
+        raise NotImplementedError
+
+
+def _fold_delta(op, b: jax.Array, delta: Optional[jax.Array]) -> jax.Array:
+    """Fold the δ channel into the RHS: (K+σ²I)V = b + σ²δ."""
+    return b if delta is None else b + op.noise * delta
+
+
+@register_solver("cg")
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CG(SolverSpec):
+    """Conjugate gradients (§2.2.4), optionally preconditioned.
+
+    ``precond`` is a preconditioner spec (built fresh per solve, since it depends
+    on the hyperparameters) or a prebuilt ``r -> M⁻¹r`` callable. A spec-valued
+    ``precond`` makes every solve pass a fresh closure to the jitted CG (closures
+    hash by identity as static args ⇒ recompile per call); inside a hot outer
+    loop with *fixed* hyperparameters, prebuild the callable once and pass that
+    instead.
+    """
+
+    max_iters: int = _static(1000)
+    tol: float = _static(1e-2)
+    precond: Optional[PrecondLike] = _static(None)
+
+    def run(self, op, b, *, key=None, x0=None, delta=None) -> SolveResult:
+        pc = self.precond
+        if pc is not None and not callable(pc):
+            pc = pc.build(op, key)
+        return solve_cg(
+            op, _fold_delta(op, b, delta), x0,
+            max_iters=self.max_iters, tol=self.tol, precond=pc,
+        )
+
+
+@register_solver("sgd")
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SGD(SolverSpec):
+    """Primal stochastic gradient descent (Ch. 3).
+
+    The only solver with a *native* δ channel: δ stays in the regulariser
+    (Eq. 3.6) instead of being folded into the data-fit targets, which is the
+    paper's variance-reduction trick for posterior sampling.
+    """
+
+    requires_key: ClassVar[bool] = True
+    needs_rows: ClassVar[bool] = True
+
+    num_steps: int = _static(20_000)
+    batch_size: int = _static(512)
+    num_features: int = _static(100)
+    step_size_times_n: float = _static(0.5)
+    momentum: float = _static(0.9)
+    average_tail: float = _static(0.5)
+    grad_clip: float = _static(0.1)
+    tol: float = _static(1e-2)
+
+    def run(self, op, b, *, key=None, x0=None, delta=None) -> SolveResult:
+        return solve_sgd(
+            op, b, x0, key=key,
+            num_steps=self.num_steps, batch_size=self.batch_size,
+            num_features=self.num_features,
+            step_size_times_n=self.step_size_times_n, momentum=self.momentum,
+            average_tail=self.average_tail, grad_clip=self.grad_clip,
+            delta=delta, tol=self.tol,
+        )
+
+
+@register_solver("sdd")
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SDD(SolverSpec):
+    """Stochastic dual descent (Ch. 4, Algorithm 4.1)."""
+
+    requires_key: ClassVar[bool] = True
+    needs_rows: ClassVar[bool] = True
+
+    num_steps: int = _static(20_000)
+    batch_size: int = _static(512)
+    step_size_times_n: float = _static(50.0)
+    momentum: float = _static(0.9)
+    averaging: Optional[float] = _static(None)
+    tol: float = _static(1e-2)
+
+    def run(self, op, b, *, key=None, x0=None, delta=None) -> SolveResult:
+        return solve_sdd(
+            op, _fold_delta(op, b, delta), x0, key=key,
+            num_steps=self.num_steps, batch_size=self.batch_size,
+            step_size_times_n=self.step_size_times_n, momentum=self.momentum,
+            averaging=self.averaging, tol=self.tol,
+        )
+
+
+@register_solver("ap")
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class AP(SolverSpec):
+    """Alternating projections / randomised block-coordinate descent (§5.1.1)."""
+
+    requires_key: ClassVar[bool] = True
+    needs_rows: ClassVar[bool] = True
+
+    num_steps: int = _static(2000)
+    block_size: int = _static(512)
+    tol: float = _static(1e-2)
+
+    def run(self, op, b, *, key=None, x0=None, delta=None) -> SolveResult:
+        return solve_ap(
+            op, _fold_delta(op, b, delta), x0, key=key,
+            num_steps=self.num_steps, block_size=self.block_size, tol=self.tol,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Normalisation: names / classes / instances / legacy `solver=fn` calls
+# ---------------------------------------------------------------------------
+
+SpecLike = Union[str, SolverSpec, Type[SolverSpec]]
+
+# legacy-shim mapping: old-style `solver=<function>` arguments → spec class
+_LEGACY_SOLVERS: Dict[Callable, Type[SolverSpec]] = {
+    solve_cg: CG,
+    solve_sgd: SGD,
+    solve_sdd: SDD,
+    solve_ap: AP,
+}
+
+
+def as_spec(spec: SpecLike, **overrides: Any) -> SolverSpec:
+    """Normalise a spec instance, spec class, or registered name to an instance.
+
+    ``overrides`` are spec fields applied on top (``as_spec("cg", max_iters=50)``).
+    """
+    if isinstance(spec, str):
+        spec = get_solver(spec)
+    if isinstance(spec, type) and issubclass(spec, SolverSpec):
+        return spec(**overrides)
+    if isinstance(spec, SolverSpec):
+        return dataclasses.replace(spec, **overrides) if overrides else spec
+    raise TypeError(
+        f"expected a SolverSpec, spec class, or registered solver name; got {spec!r}"
+    )
+
+
+def coerce_spec(
+    spec: Optional[SpecLike] = None,
+    *,
+    solver: Optional[Callable] = None,
+    default: SpecLike = "cg",
+    **overrides: Any,
+) -> SolverSpec:
+    """Resolve new-style ``spec=...`` and legacy ``solver=fn, **kwargs`` arguments.
+
+    Consumers (``posterior_functions``, ``mll_grad``, ``thompson_step``, …) route
+    their keyword surface through this single function: the legacy path warns and
+    maps the solver function to its spec class; extra keyword arguments become
+    spec-field overrides in both worlds.
+    """
+    if solver is not None:
+        if spec is not None:
+            raise TypeError("pass either spec=... or the legacy solver=...; not both")
+        cls = _LEGACY_SOLVERS.get(solver)
+        if cls is None:
+            raise TypeError(
+                f"unrecognised legacy solver function {solver!r}; pass a SolverSpec "
+                f"or one of the registered names {sorted(_REGISTRY)} instead"
+            )
+        warnings.warn(
+            f"solver=solve_{cls.name} with per-solver keyword arguments is "
+            f"deprecated; pass spec={cls.__name__}(...) or spec={cls.name!r} instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        spec = cls
+    return as_spec(default if spec is None else spec, **overrides)
+
+
+# ---------------------------------------------------------------------------
+# The single entry point
+# ---------------------------------------------------------------------------
+
+
+def solve(
+    op,
+    b: jax.Array,
+    spec: SpecLike = "cg",
+    *,
+    key: Optional[jax.Array] = None,
+    x0: Optional[jax.Array] = None,
+    delta: Optional[jax.Array] = None,
+    **overrides: Any,
+) -> SolveResult:
+    """Solve (K+σ²I)V = b + σ²δ with any registered solver.
+
+    Args:
+        op: linear operator — a ``Gram``, or any matvec-only operator with ``mv``
+            (and ``noise`` when ``delta`` is used) for CG-family specs.
+        b: right-hand side(s), ``(n,)`` or ``(n, s)``.
+        spec: a ``SolverSpec`` instance, spec class, or registered name
+            (``"cg"``, ``"sgd"``, ``"sdd"``, ``"ap"``).
+        key: PRNG key; required by stochastic solvers, used by CG only to draw the
+            Nyström preconditioner subset.
+        x0: optional warm start (Ch. 5 §5.3), same shape as ``b``.
+        delta: optional δ channel, same shape as ``b`` — the system solved becomes
+            ``(K+σ²I)V = b + σ²δ``, with SGD keeping δ in its regulariser
+            (Eq. 3.6) and everything else folding it into the RHS.
+        **overrides: spec-field overrides, e.g. ``solve(op, b, "cg", max_iters=50)``.
+    """
+    s = as_spec(spec, **overrides)
+    if s.requires_key and key is None:
+        raise ValueError(
+            f"solver {s.name!r} is stochastic: solve(..., key=jax.random.PRNGKey(...))"
+            " is required"
+        )
+    if s.needs_rows and not hasattr(op, "rows"):
+        raise TypeError(
+            f"solver {s.name!r} needs kernel-row access (op.rows); operator "
+            f"{type(op).__name__} only supports matvecs — use a CG spec"
+        )
+    return s.run(op, b, key=key, x0=x0, delta=delta)

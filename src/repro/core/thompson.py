@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from .kernels_fn import KernelParams
 from .pathwise import PosteriorFunctions, posterior_functions
-from .solvers.sdd import solve_sdd
+from .solvers.spec import SpecLike, coerce_spec
 
 
 @dataclasses.dataclass
@@ -90,13 +90,18 @@ def thompson_step(
     *,
     acq_batch: int = 50,
     num_features: int = 1024,
-    solver=solve_sdd,
-    solver_kwargs: Optional[dict] = None,
+    spec: Optional[SpecLike] = None,
     num_candidates: int = 2000,
     num_top: int = 5,
     ascent_steps: int = 30,
     lr: float = 1e-3,
+    solver=None,  # deprecated
+    solver_kwargs: Optional[dict] = None,  # deprecated
 ) -> ThompsonState:
+    """One acquisition round. ``spec`` is any registered SolverSpec (defaults to
+    SDD, the paper's Thompson workhorse); legacy ``solver=fn, solver_kwargs={}``
+    still works but emits a ``DeprecationWarning``."""
+    s = coerce_spec(spec, solver=solver, default="sdd", **(solver_kwargs or {}))
     kd, km, ko = jax.random.split(key, 3)
     post = posterior_functions(
         params,
@@ -105,8 +110,7 @@ def thompson_step(
         kd,
         num_samples=acq_batch,
         num_features=num_features,
-        solver=solver,
-        **(solver_kwargs or {}),
+        spec=s,
     )
     x_new = _maximise_samples(
         post,

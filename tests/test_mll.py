@@ -9,7 +9,7 @@ import pytest
 from repro.core.gp import exact_mll
 from repro.core.kernels_fn import make_params
 from repro.core.mll import mll_grad, optimize_mll
-from repro.core.solvers.cg import solve_cg
+from repro.core.solvers.spec import CG
 
 
 @pytest.fixture(scope="module")
@@ -35,7 +35,7 @@ def test_mll_grad_unbiased(problem, estimator):
     for seed in range(6):
         est = mll_grad(t["p"], t["x"], t["y"], jax.random.PRNGKey(seed),
                        num_probes=64, num_features=4096, estimator=estimator,
-                       max_iters=300, tol=1e-8)
+                       spec=CG(max_iters=300, tol=1e-8))
         gs.append(est.grad)
     mean_g = jax.tree.map(lambda *a: jnp.mean(jnp.stack(a), 0), *gs)
     exact = _exact_grad(t["p"], t["x"], t["y"])
@@ -51,7 +51,7 @@ def test_pathwise_estimator_lower_variance_for_trace(problem):
     iters = {}
     for est in ("pathwise", "hutchinson"):
         r = mll_grad(t["p"], t["x"], t["y"], jax.random.PRNGKey(0), num_probes=16,
-                     estimator=est, max_iters=500, tol=1e-6)
+                     estimator=est, spec=CG(max_iters=500, tol=1e-6))
         iters[est] = int(r.solver_iterations)
     assert iters["pathwise"] <= iters["hutchinson"] + 5  # not worse
 
@@ -61,7 +61,7 @@ def test_optimize_mll_improves_evidence(problem):
     p0 = make_params("se", lengthscale=3.0, signal=0.3, noise=0.8, d=t["d"])
     before = float(exact_mll(p0, t["x"], t["y"]))
     st = optimize_mll(p0, t["x"], t["y"], jax.random.PRNGKey(0), num_steps=15,
-                      lr=0.1, num_probes=8, max_iters=200, tol=1e-6)
+                      lr=0.1, num_probes=8, spec=CG(max_iters=200, tol=1e-6))
     after = float(exact_mll(st.params, t["x"], t["y"]))
     assert after > before + 1.0, (before, after)
 
@@ -71,7 +71,7 @@ def test_warm_start_cuts_total_iterations(problem):
     number of inner solver iterations."""
     t = problem
     p0 = make_params("se", lengthscale=2.0, signal=0.5, noise=0.5, d=t["d"])
-    kw = dict(num_steps=10, lr=0.05, num_probes=8, max_iters=500, tol=1e-4)
+    kw = dict(num_steps=10, lr=0.05, num_probes=8, spec=CG(max_iters=500, tol=1e-4))
     warm = optimize_mll(p0, t["x"], t["y"], jax.random.PRNGKey(0), warm_start=True, **kw)
     cold = optimize_mll(p0, t["x"], t["y"], jax.random.PRNGKey(0), warm_start=False, **kw)
     assert warm.total_solver_iters < cold.total_solver_iters

@@ -7,9 +7,7 @@ import pytest
 from repro.core.gp import exact_posterior, exact_mll
 from repro.core.kernels_fn import make_params, gram
 from repro.core.pathwise import posterior_functions
-from repro.core.solvers.cg import solve_cg
-from repro.core.solvers.sdd import solve_sdd
-from repro.core.solvers.sgd import solve_sgd
+from repro.core.solvers.spec import CG, SDD, SGD
 
 
 @pytest.fixture(scope="module")
@@ -28,7 +26,7 @@ def test_pathwise_cg_moments(small_problem):
     t = small_problem
     pf = posterior_functions(t["p"], t["x"], t["y"], jax.random.PRNGKey(1),
                              num_samples=384, num_features=4096,
-                             solver=solve_cg, max_iters=300, tol=1e-8)
+                             spec=CG(max_iters=300, tol=1e-8))
     f = pf(t["xt"])  # (40, s)
     np.testing.assert_allclose(f.mean(1), t["mu"], atol=5e-2)
     np.testing.assert_allclose(jnp.var(f, axis=1), jnp.diag(t["cov"]), atol=5e-2)
@@ -41,7 +39,7 @@ def test_pathwise_joint_covariance(small_problem):
     t = small_problem
     pf = posterior_functions(t["p"], t["x"], t["y"], jax.random.PRNGKey(2),
                              num_samples=512, num_features=4096,
-                             solver=solve_cg, max_iters=300, tol=1e-8)
+                             spec=CG(max_iters=300, tol=1e-8))
     f = np.asarray(pf(t["xt"][:8]))
     emp = np.cov(f)
     np.testing.assert_allclose(emp, np.asarray(t["cov"])[:8, :8], atol=8e-2)
@@ -50,8 +48,9 @@ def test_pathwise_joint_covariance(small_problem):
 def test_pathwise_sdd_matches_cg(small_problem):
     t = small_problem
     pf = posterior_functions(t["p"], t["x"], t["y"], jax.random.PRNGKey(3),
-                             num_samples=8, solver=solve_sdd, num_steps=20_000,
-                             batch_size=128, step_size_times_n=5.0)
+                             num_samples=8,
+                             spec=SDD(num_steps=20_000, batch_size=128,
+                                      step_size_times_n=5.0))
     np.testing.assert_allclose(pf.mean(t["xt"]), t["mu"], atol=2e-2)
 
 
@@ -59,8 +58,9 @@ def test_sgd_variance_reduced_objective(small_problem):
     """Eq. 3.6: moving ε into the regulariser preserves the optimum (δ-shift)."""
     t = small_problem
     pf = posterior_functions(t["p"], t["x"], t["y"], jax.random.PRNGKey(4),
-                             num_samples=8, solver=solve_sgd, num_steps=15_000,
-                             batch_size=128, step_size_times_n=0.5)
+                             num_samples=8,
+                             spec=SGD(num_steps=15_000, batch_size=128,
+                                      step_size_times_n=0.5))
     np.testing.assert_allclose(pf.mean(t["xt"]), t["mu"], atol=8e-2)
     f = pf(t["xt"])
     assert np.isfinite(np.asarray(f)).all()
@@ -72,7 +72,7 @@ def test_prior_region_reverts_to_prior(small_problem):
     t = small_problem
     pf = posterior_functions(t["p"], t["x"], t["y"], jax.random.PRNGKey(5),
                              num_samples=256, num_features=4096,
-                             solver=solve_cg, max_iters=100)
+                             spec=CG(max_iters=100))
     far = 50.0 + jax.random.normal(jax.random.PRNGKey(6), (10, 2))
     f = pf(far)
     np.testing.assert_allclose(f.mean(1), 0.0, atol=0.2)

@@ -1,0 +1,223 @@
+"""Unified SolverSpec API (core/solvers/spec.py): one solve() entry point,
+registry lookup, δ channel, preconditioner specs, legacy shims, façade."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import IterativeGP
+from repro.core.pathwise import posterior_functions
+from repro.core.solvers.ap import solve_ap
+from repro.core.solvers.base import Gram
+from repro.core.solvers.cg import solve_cg
+from repro.core.solvers.sdd import solve_sdd
+from repro.core.solvers.sgd import solve_sgd
+from repro.core.solvers.spec import (
+    AP,
+    CG,
+    SDD,
+    SGD,
+    Nystrom,
+    PivotedCholesky,
+    SolverSpec,
+    as_spec,
+    coerce_spec,
+    get_solver,
+    register_solver,
+    registered_solvers,
+    solve,
+)
+
+KEY = jax.random.PRNGKey(7)
+
+# (spec, legacy function, legacy kwargs) — solve(op, b, spec, key=KEY) must agree
+# exactly with the direct call, for all four solver families.
+PARITY_CASES = [
+    (CG(max_iters=200, tol=1e-6), solve_cg, dict(max_iters=200, tol=1e-6)),
+    (
+        SGD(num_steps=1500, batch_size=64, step_size_times_n=0.5),
+        solve_sgd,
+        dict(key=KEY, num_steps=1500, batch_size=64, step_size_times_n=0.5),
+    ),
+    (
+        SDD(num_steps=1500, batch_size=64, step_size_times_n=5.0),
+        solve_sdd,
+        dict(key=KEY, num_steps=1500, batch_size=64, step_size_times_n=5.0),
+    ),
+    (
+        AP(num_steps=100, block_size=64),
+        solve_ap,
+        dict(key=KEY, num_steps=100, block_size=64),
+    ),
+]
+
+
+@pytest.mark.parametrize(
+    "spec,fn,kwargs", PARITY_CASES, ids=[c[0].name for c in PARITY_CASES]
+)
+def test_solve_matches_direct_call(toy_regression, spec, fn, kwargs):
+    """solve(op, b, spec) reproduces the legacy direct solver call bit-for-bit
+    (same PRNG key ⇒ same mini-batches / features / blocks)."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    via_spec = solve(op, t["y"], spec, key=KEY)
+    direct = fn(op, t["y"], **kwargs)
+    np.testing.assert_array_equal(
+        np.asarray(via_spec.solution), np.asarray(direct.solution)
+    )
+    assert int(via_spec.iterations) == int(direct.iterations)
+
+
+def test_registry_roundtrip():
+    assert get_solver("cg") is CG
+    assert get_solver("sgd") is SGD
+    assert get_solver("sdd") is SDD
+    assert get_solver("ap") is AP
+    assert set(registered_solvers()) >= {"cg", "sgd", "sdd", "ap"}
+    for name in registered_solvers():
+        assert get_solver(name).name == name
+
+
+def test_registry_unknown_name_errors():
+    with pytest.raises(ValueError, match="unknown solver"):
+        get_solver("cholesky")
+    with pytest.raises(ValueError, match="unknown solver"):
+        as_spec("not-a-solver")
+
+
+def test_register_solver_extension_point(toy_regression):
+    """Third-party specs plug into the same string-lookup path as the built-ins."""
+
+    @register_solver("cg-tight")
+    class TightCG(CG):
+        pass
+
+    try:
+        assert get_solver("cg-tight") is TightCG
+        t = toy_regression
+        op = Gram(x=t["x"], params=t["params"])
+        res = solve(op, t["y"], "cg-tight", max_iters=300, tol=1e-6)
+        np.testing.assert_allclose(res.solution, t["v_star"], atol=1e-3)
+    finally:
+        from repro.core.solvers import spec as spec_mod
+
+        spec_mod._REGISTRY.pop("cg-tight", None)
+
+
+def test_string_spec_with_overrides(toy_regression):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    res = solve(op, t["y"], "cg", max_iters=400, tol=1e-5)
+    np.testing.assert_allclose(res.solution, t["v_star"], atol=1e-3)
+    assert bool(res.converged)
+
+
+def test_stochastic_solver_requires_key(toy_regression):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    for name in ("sgd", "sdd", "ap"):
+        with pytest.raises(ValueError, match="stochastic"):
+            solve(op, t["y"], name)
+
+
+def test_delta_channel_is_uniform(toy_regression):
+    """solve(op, b, spec, delta=δ) solves (K+σ²I)V = b + σ²δ for every solver —
+    folding for CG/SDD/AP, natively (Eq. 3.6) for SGD."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    delta = 0.5 * jnp.ones_like(t["y"])
+    shifted = t["y"] + op.noise * delta
+
+    via_delta = solve(op, t["y"], CG(max_iters=400, tol=1e-8), delta=delta)
+    via_rhs = solve(op, shifted, CG(max_iters=400, tol=1e-8))
+    np.testing.assert_array_equal(
+        np.asarray(via_delta.solution), np.asarray(via_rhs.solution)
+    )
+
+    sgd_spec = SGD(num_steps=8000, batch_size=128, step_size_times_n=0.5)
+    via_sgd = solve(op, t["y"], sgd_spec, key=KEY, delta=delta)
+    ref = jnp.linalg.solve(t["kmat"], shifted)
+    k_test = np.asarray(t["kmat"])  # prediction-space comparison (§3.2.4)
+    pred_err = np.max(np.abs(k_test @ (np.asarray(via_sgd.solution) - np.asarray(ref))))
+    assert pred_err < 0.15, pred_err
+
+
+def test_converged_respects_solver_tol(toy_regression):
+    """finalize() threads the solver's actual tol: a starved budget must report
+    converged=False (previously hard-coded rel < 1.0 ⇒ nearly always True)."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    starved = solve(op, t["y"], CG(max_iters=2, tol=1e-10))
+    assert not bool(starved.converged)
+    starved_sdd = solve(
+        op, t["y"], SDD(num_steps=10, batch_size=32, tol=1e-10), key=KEY
+    )
+    assert not bool(starved_sdd.converged)
+    done = solve(op, t["y"], CG(max_iters=400, tol=1e-4))
+    assert bool(done.converged)
+
+
+@pytest.mark.parametrize("pspec", [Nystrom(rank=100), PivotedCholesky(rank=100)])
+def test_precond_specs(toy_regression, pspec):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    plain = solve(op, t["y"], CG(max_iters=400, tol=1e-6))
+    fast = solve(op, t["y"], CG(max_iters=400, tol=1e-6, precond=pspec), key=KEY)
+    assert int(fast.iterations) <= int(plain.iterations)
+    np.testing.assert_allclose(fast.solution, t["v_star"], atol=5e-3)
+
+
+def test_specs_are_static_hashable_pytrees():
+    spec = CG(max_iters=50, tol=1e-3, precond=Nystrom(rank=10))
+    assert hash(spec) == hash(CG(max_iters=50, tol=1e-3, precond=Nystrom(rank=10)))
+    leaves, treedef = jax.tree_util.tree_flatten(spec)
+    assert leaves == []  # all-static: usable as a jit static argument / cache key
+    assert jax.tree_util.tree_unflatten(treedef, leaves) == spec
+
+
+def test_legacy_solver_shim_warns(toy_regression):
+    t = toy_regression
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        pf = posterior_functions(
+            t["params"], t["x"], t["y"], jax.random.PRNGKey(0),
+            num_samples=2, num_features=128, solver=solve_cg, max_iters=50,
+        )
+    assert pf.alpha.shape == (t["n"], 2)
+    with pytest.warns(DeprecationWarning):
+        coerce_spec(solver=solve_sdd, num_steps=5)
+    with pytest.raises(TypeError, match="not both"):
+        coerce_spec(spec="cg", solver=solve_cg)
+    with pytest.raises(TypeError, match="legacy solver"):
+        coerce_spec(solver=np.linalg.solve)
+
+
+def test_matvec_only_operator_rejects_row_solvers(toy_regression):
+    """Stochastic solvers need op.rows; matvec-only operators get a clear error."""
+    from repro.core.inducing import NormalEq
+
+    t = toy_regression
+    op = NormalEq(x=t["x"], z=t["x"][:32], params=t["params"])
+    rhs = jnp.ones((32, 2))
+    with pytest.raises(TypeError, match="rows"):
+        solve(op, rhs, "sdd", key=KEY)
+    res = solve(op, rhs, CG(max_iters=100, tol=1e-4))
+    assert res.solution.shape == (32, 2)
+
+
+def test_iterative_gp_facade(toy_regression):
+    """fit → optimize → predict in three lines, spec-driven end to end."""
+    t = toy_regression
+    gp = IterativeGP(
+        "matern32", lengthscale=0.8, noise=0.3, spec=CG(max_iters=200, tol=1e-6)
+    )
+    gp.fit(t["x"], t["y"]).optimize(num_steps=2, lr=0.02)
+    mu, var = gp.predict(t["x_test"], num_samples=32)
+    assert mu.shape == (t["x_test"].shape[0],)
+    assert var.shape == mu.shape
+    assert np.isfinite(np.asarray(mu)).all() and (np.asarray(var) >= 0).all()
+    samples = gp.sample(t["x_test"][:5], num_samples=32)
+    assert samples.shape == (5, 32)
+    with pytest.raises(RuntimeError, match="fit"):
+        IterativeGP().predict(t["x_test"])

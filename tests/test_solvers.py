@@ -16,7 +16,9 @@ from repro.core.precond import nystrom_preconditioner, pivoted_cholesky_precondi
 def test_cg_converges_to_dense(toy_regression):
     t = toy_regression
     op = Gram(x=t["x"], params=t["params"])
-    res = solve_cg(op, t["y"], max_iters=400, tol=1e-6)
+    # tol=1e-5: `converged` is judged on the honestly *recomputed* residual, which
+    # sits ~1e-6 above CG's internal recursion residual in float32
+    res = solve_cg(op, t["y"], max_iters=400, tol=1e-5)
     np.testing.assert_allclose(res.solution, t["v_star"], atol=1e-3)
     assert bool(res.converged)
 

@@ -23,12 +23,12 @@ def test_thompson_improves_over_random():
     state = ThompsonState(x=x0, y=y0, best=float(y0.max()))
     best0 = state.best
     for step in range(3):
-        from repro.core.solvers.cg import solve_cg
+        from repro.core.solvers.spec import CG
 
         state = thompson_step(
             p, state, objective, jax.random.fold_in(key, 10 + step),
             acq_batch=16, num_candidates=256, num_top=4, ascent_steps=20,
-            solver=solve_cg, solver_kwargs=dict(max_iters=100),
+            spec=CG(max_iters=100),
         )
     # random-search baseline with the same total evaluation budget
     xr = jax.random.uniform(jax.random.fold_in(key, 99), (3 * 16, d))
