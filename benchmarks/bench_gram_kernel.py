@@ -39,3 +39,26 @@ def run(report: Report, full: bool = False):
                    max_err=err, vmem_kb=round(vmem / 1024, 1),
                    flops_per_byte=round(intensity, 1),
                    fits_vmem=vmem < 16 * 2**20)
+
+    # the differentiable hot path: forward + custom-VJP backward (three fused
+    # Pallas contractions), timed against autodiff through the dense Gram
+    def fused_quad(params):
+        return jnp.sum(v * gram_matvec(p_like(params), x, v, block=256,
+                                       interpret=True))
+
+    def dense_quad(params):
+        from repro.core.kernels_fn import gram
+
+        return jnp.sum(v * (gram(p_like(params), x) @ v))
+
+    def p_like(theta):
+        import dataclasses as dc
+
+        return dc.replace(p, log_lengthscale=theta)
+
+    theta0 = p.log_lengthscale
+    g_fused, dt_f = timed(jax.grad(fused_quad), theta0)
+    g_dense, dt_d = timed(jax.grad(dense_quad), theta0)
+    report.add("gram-kernel-vjp", "fused-vs-dense", f"n={n}",
+               max_err=float(np.abs(np.asarray(g_fused - g_dense)).max()),
+               seconds_fused=round(dt_f, 3), seconds_dense=round(dt_d, 3))

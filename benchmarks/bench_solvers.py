@@ -42,9 +42,14 @@ def run(report: Report, full: bool = False):
             pf, dt = timed(posterior_functions, p, x, y, jax.random.PRNGKey(0),
                            spec=spec, **budget)
             mu, var = pf.sample_mean_and_var(xt)
+            info = pf.solve_info
+            # matvecs = full (K+σ²I) matvecs the solve actually spent (CG: one
+            # per iteration — the seed paid two extra per solve; SGD/SDD: the
+            # single exact-residual check, their loops touch only row blocks)
             report.add("solvers(T3.1/4.1)", method, name,
                        rmse=rmse(mu, yt), nll=nll_gaussian(yt, mu, var),
-                       seconds=round(dt, 2))
+                       seconds=round(dt, 2), iters=int(info.iterations),
+                       matvecs=int(info.matvecs))
         # SVGP baseline (collapsed SGPR with m inducing points)
         z = x[:: max(1, n // 512)][:512]
         post, dt = timed(sgpr, p, x, y, z)
@@ -64,4 +69,5 @@ def run(report: Report, full: bool = False):
                            spec=spec, num_samples=4, num_features=2048)
             mu = pf.mean(xt)
             report.add("solvers-lownoise", method, name, rmse=rmse(mu, yt),
-                       seconds=round(dt, 2))
+                       seconds=round(dt, 2),
+                       matvecs=int(pf.solve_info.matvecs))

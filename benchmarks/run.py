@@ -1,9 +1,18 @@
 """Benchmark harness entry point: `PYTHONPATH=src python -m benchmarks.run [--full]
-[--only bench_solvers,...]`. One module per paper table/figure (DESIGN.md §7)."""
+[--only bench_solvers,...]`. One module per paper table/figure (DESIGN.md §7).
+
+Each bench additionally emits a machine-readable ``BENCH_<name>.json`` into
+``--outdir`` (default ``results/``): wall time, per-row metrics (RMSE/NLL,
+solver iterations, full-Gram-matvec counts where the bench reports them), so the
+performance trajectory is tracked across PRs instead of living in scrollback.
+"""
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import importlib
+import json
+import os
 import time
 import traceback
 
@@ -21,11 +30,24 @@ BENCHES = [
 ]
 
 
+def _dump_bench_json(outdir: str, name: str, payload: dict) -> str:
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-sized datasets")
     ap.add_argument("--only", default=None, help="comma-separated bench names")
-    ap.add_argument("--out", default=None, help="dump rows as JSONL")
+    ap.add_argument("--out", default=None, help="dump all rows as JSONL")
+    ap.add_argument(
+        "--outdir", default="results",
+        help="directory for the per-bench BENCH_<name>.json files",
+    )
     args = ap.parse_args(argv)
 
     names = args.only.split(",") if args.only else BENCHES
@@ -34,6 +56,8 @@ def main(argv=None):
     for name in names:
         print(f"\n=== {name} ===", flush=True)
         t0 = time.time()
+        mark = len(report.rows)
+        ok = True
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
             mod.run(report, full=args.full)
@@ -41,6 +65,19 @@ def main(argv=None):
         except Exception:
             traceback.print_exc()
             failures += 1
+            ok = False
+        path = _dump_bench_json(
+            args.outdir,
+            name,
+            {
+                "bench": name,
+                "ok": ok,
+                "full": bool(args.full),
+                "wall_seconds": round(time.time() - t0, 3),
+                "rows": [dataclasses.asdict(r) for r in report.rows[mark:]],
+            },
+        )
+        print(f"    wrote {path}")
     report.dump(args.out)
     print(f"\n{len(report.rows)} rows; {failures} bench failures")
     return 1 if failures else 0

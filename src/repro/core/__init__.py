@@ -17,11 +17,19 @@ from .solvers.spec import (  # noqa: F401
     PivotedCholesky,
     SolverSpec,
     as_spec,
+    get_precond,
     get_solver,
+    register_precond,
     register_solver,
+    registered_preconds,
     registered_solvers,
     solve,
+    spec_from_dict,
+    spec_from_json,
+    spec_to_dict,
+    spec_to_json,
 )
+from .precond import WoodburyPrecond  # noqa: F401
 from .api import IterativeGP  # noqa: F401
 from .mll import mll_grad, optimize_mll  # noqa: F401
 from .inducing import inducing_posterior  # noqa: F401

@@ -133,6 +133,7 @@ def matvec(
     n = x.shape[0]
     squeeze = v.ndim == 1
     v2 = v[:, None] if squeeze else v
+    row_chunk = min(row_chunk, n)  # never pad small operands up to the chunk size
     pad = (-n) % row_chunk
     xp = jnp.pad(x, ((0, pad), (0, 0)))
     rows = xp.reshape(n // row_chunk + (pad > 0), row_chunk, x.shape[1])

@@ -24,7 +24,8 @@ is provably benign for convex quadratics (§5.3.2) because the solver still conv
 to the θ-dependent optimum.
 
 Gradients of the quadratic forms w.r.t. θ are taken by autodiff through the
-(chunked, never-materialised) kernel matvec with stop-gradient solutions.
+never-materialised kernel matvec (fused Pallas custom-VJP or chunked JAX,
+depending on the solve's backend) with stop-gradient solutions.
 """
 from __future__ import annotations
 
@@ -35,15 +36,23 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .kernels_fn import KernelParams, matvec
+from ..kernels.ops import gram_mv
+from .kernels_fn import KernelParams
 from .rff import sample_prior
 from .solvers.base import Gram
 from .solvers.spec import SpecLike, coerce_spec, solve
 
 
-def _quad(params: KernelParams, x: jax.Array, u: jax.Array, w: jax.Array) -> jax.Array:
-    """uᵀ (K_θ + σ²I) w summed per column, differentiable in θ. u,w: (n,s)."""
-    kw = matvec(params, x, w)  # (n, s)
+def _quad(
+    params: KernelParams, x: jax.Array, u: jax.Array, w: jax.Array,
+    backend: str = "auto",
+) -> jax.Array:
+    """uᵀ (K_θ + σ²I) w summed per column, differentiable in θ. u,w: (n,s).
+
+    Runs through the same backend as the solve, so with ``backend="pallas"``
+    both the quadratic form and its θ-gradient are fused Pallas contractions.
+    """
+    kw = gram_mv(params, x, w, backend=backend)  # (n, s)
     return jnp.sum(u * kw, axis=0) + params.noise * jnp.sum(u * w, axis=0)
 
 
@@ -74,13 +83,15 @@ def mll_grad(
     the legacy ``solver=fn, **kwargs`` form warns and is mapped to its spec.
     """
     s = coerce_spec(spec, solver=solver, **solver_kwargs)
-    op = Gram(x=x, params=params)
+    backend = getattr(s, "backend", None) or "auto"
+    op = Gram(x=x, params=params, backend=backend)
     n = x.shape[0]
     kp, ke, ks = jax.random.split(key, 3)
 
     if estimator == "pathwise":
         prior = sample_prior(params, kp, num_probes, num_features, x.shape[1])
-        f_x = prior(x)
+        # eager, never differentiated through → fused RFF matvec on TPU
+        f_x = prior.with_backend("auto")(x)
         eps = jnp.sqrt(params.noise) * jax.random.normal(ke, f_x.shape, f_x.dtype)
         probes = f_x + eps  # z ~ N(0, A) approx (RFF prior + exact noise)
     else:
@@ -93,13 +104,15 @@ def mll_grad(
 
     def neg_terms(p: KernelParams) -> jax.Array:
         # data fit grad: +½ v_yᵀ ∂A v_y  ⇒ differentiate  ½ v_yᵀ A(θ) v_y
-        fit = 0.5 * _quad(p, x, v_y[:, None], v_y[:, None])[0]
+        fit = 0.5 * _quad(p, x, v_y[:, None], v_y[:, None], backend)[0]
         if estimator == "pathwise":
             # tr(A⁻¹∂A) ≈ mean_j α_jᵀ ∂A α_j  ⇒ differentiate ½ mean α A α
-            tr = 0.5 * jnp.mean(_quad(p, x, alpha, alpha))
+            tr = 0.5 * jnp.mean(_quad(p, x, alpha, alpha, backend))
         else:
             # tr(A⁻¹∂A) ≈ mean_j (A⁻¹z_j)ᵀ ∂A z_j ⇒ differentiate ½ mean α A z
-            tr = 0.5 * jnp.mean(_quad(p, x, alpha, jax.lax.stop_gradient(probes)))
+            tr = 0.5 * jnp.mean(
+                _quad(p, x, alpha, jax.lax.stop_gradient(probes), backend)
+            )
         return fit - tr
 
     g = jax.grad(neg_terms)(params)

@@ -21,7 +21,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from .kernels_fn import KernelParams, gram, matvec
+from ..kernels.ops import gram_mv
+from .kernels_fn import KernelParams
 from .rff import PriorSamples, sample_prior
 from .solvers.base import Gram, SolveResult
 from .solvers.spec import SpecLike, coerce_spec, solve
@@ -30,7 +31,12 @@ from .solvers.spec import SpecLike, coerce_spec, solve
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PosteriorFunctions:
-    """s posterior function samples + the posterior mean, evaluable anywhere."""
+    """s posterior function samples + the posterior mean, evaluable anywhere.
+
+    Evaluation is one cross-covariance matvec K(·, X) @ [weights] through the
+    same backend that drove the solve — the (n*, n) cross-Gram block is never
+    materialised.
+    """
 
     params: KernelParams
     x: jax.Array  # (n, d) training inputs
@@ -38,18 +44,21 @@ class PosteriorFunctions:
     v_mean: jax.Array  # (n,) representer weights of the mean
     alpha: jax.Array  # (n, s) per-sample uncertainty-reduction weights
     solve_info: Optional[SolveResult] = None
+    backend: str = dataclasses.field(default="auto", metadata=dict(static=True))
 
     @property
     def num_samples(self) -> int:
         return self.alpha.shape[1]
 
     def mean(self, xs: jax.Array) -> jax.Array:
-        return matvec(self.params, xs, self.v_mean, z=self.x)
+        return gram_mv(self.params, xs, self.v_mean, z=self.x, backend=self.backend)
 
     def __call__(self, xs: jax.Array) -> jax.Array:
         """Evaluate all samples at xs → (n*, s)."""
-        kxs = gram(self.params, xs, self.x)  # (n*, n)
-        return self.prior(xs) + kxs @ (self.v_mean[:, None] - self.alpha)
+        w = self.v_mean[:, None] - self.alpha  # (n, s)
+        return self.prior(xs) + gram_mv(
+            self.params, xs, w, z=self.x, backend=self.backend
+        )
 
     def sample_mean_and_var(self, xs: jax.Array) -> tuple[jax.Array, jax.Array]:
         f = self(xs)
@@ -69,7 +78,8 @@ def pathwise_targets(
     [y | f_X+ε]. Keeping ε in the δ channel lets SGD apply the Eq. 3.6
     variance-reduction shift; every other solver folds it into the RHS.
     """
-    f_x = prior(op.x)  # (n, s)
+    # eager, never differentiated through → fused RFF matvec on TPU
+    f_x = prior.with_backend("auto")(op.x)  # (n, s)
     eps = jnp.sqrt(op.noise) * jax.random.normal(key, f_x.shape, dtype=f_x.dtype)
     data = jnp.concatenate([y[:, None], f_x], axis=1)
     delta = jnp.concatenate([jnp.zeros_like(y)[:, None], eps / op.noise], axis=1)
@@ -96,8 +106,9 @@ def posterior_functions(
     ``solver=fn, **kwargs`` form still works but emits a ``DeprecationWarning``.
     """
     s = coerce_spec(spec, solver=solver, **solver_kwargs)
+    backend = getattr(s, "backend", None) or "auto"
     kp, ke, ks = jax.random.split(key, 3)
-    op = Gram(x=x, params=params)
+    op = Gram(x=x, params=params, backend=backend)
     prior = sample_prior(params, kp, num_samples, num_features, x.shape[1])
     data, delta = pathwise_targets(op, y, prior, ke)
     res = solve(op, data, s, key=ks, x0=x0, delta=delta)
@@ -109,4 +120,5 @@ def posterior_functions(
         v_mean=sol[:, 0],
         alpha=sol[:, 1:],
         solve_info=res,
+        backend=backend,
     )

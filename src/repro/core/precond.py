@@ -9,6 +9,7 @@ O(n·m) per application:
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Callable
 
@@ -18,18 +19,36 @@ import jax.numpy as jnp
 from .kernels_fn import KernelParams, gram, gram_diag
 
 
-def _woodbury_apply(l: jax.Array, sigma2: jax.Array) -> Callable[[jax.Array], jax.Array]:
-    """r ↦ (L Lᵀ + σ²I)⁻¹ r with L: (n, m)."""
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class WoodburyPrecond:
+    """r ↦ (L Lᵀ + σ²I)⁻¹ r as a *pytree* of arrays, not a closure.
+
+    Being a registered pytree means a preconditioner can cross ``jax.jit``
+    boundaries as a traced argument: rebuilding one of the same rank (e.g. after
+    a hyperparameter step) produces the same treedef and shapes, so the compiled
+    CG solve is reused instead of retraced — the seed's closure-as-static-arg
+    design recompiled the solve on every rebuild.
+    """
+
+    l: jax.Array  # (n, m) low-rank factor, K ≈ L Lᵀ
+    chol: jax.Array  # (m, m) lower Cholesky of LᵀL + σ²I
+    sigma2: jax.Array  # () noise variance
+
+    @property
+    def rank(self) -> int:
+        return self.l.shape[1]
+
+    def __call__(self, r: jax.Array) -> jax.Array:
+        sol = jax.scipy.linalg.cho_solve((self.chol, True), self.l.T @ r)
+        return (r - self.l @ sol) / self.sigma2
+
+
+def _woodbury_apply(l: jax.Array, sigma2: jax.Array) -> WoodburyPrecond:
+    """Build the Woodbury apply for L: (n, m)."""
     m = l.shape[1]
     inner = l.T @ l + sigma2 * jnp.eye(m, dtype=l.dtype)  # (m, m)
-    chol = jnp.linalg.cholesky(inner)
-
-    def apply(r: jax.Array) -> jax.Array:
-        lr = l.T @ r
-        sol = jax.scipy.linalg.cho_solve((chol, True), lr)
-        return (r - l @ sol) / sigma2
-
-    return apply
+    return WoodburyPrecond(l=l, chol=jnp.linalg.cholesky(inner), sigma2=jnp.asarray(sigma2))
 
 
 def nystrom_preconditioner(

@@ -53,12 +53,42 @@ def make_fourier_features(
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PriorSamples:
-    """s prior function samples f^(i)(·) = Φ(·) w_i, evaluable anywhere."""
+    """s prior function samples f^(i)(·) = Φ(·) w_i, evaluable anywhere.
+
+    ``backend`` selects the evaluation path: ``"features"`` (default)
+    materialises Φ(x) and matmuls — differentiable everywhere; ``"auto"``
+    evaluates through the fused Pallas RFF matvec on TPU (the (n × 2m) feature
+    matrix never hits HBM — kernels/rff_matvec.py) and through features
+    elsewhere; ``"fused"`` forces the Pallas kernel (interpret mode off-TPU).
+
+    The fused path has no transpose rule, so it must not be differentiated
+    *through* — the default stays ``"features"`` because user-facing posterior
+    samples are (e.g. Thompson sampling gradient-ascends through them). The
+    eager, never-differentiated prior evaluations (MLL probes, pathwise solve
+    targets) opt in to ``"auto"`` via ``with_backend``.
+    """
 
     ff: FourierFeatures
     w: jax.Array  # (num_features, s)
+    backend: str = dataclasses.field(default="features", metadata=dict(static=True))
+
+    def with_backend(self, backend: str) -> "PriorSamples":
+        return dataclasses.replace(self, backend=backend)
 
     def __call__(self, x: jax.Array) -> jax.Array:
+        if self.backend == "fused" and not self.ff.paired:
+            raise ValueError(
+                "the fused RFF matvec only implements the paired sin/cos "
+                "feature map; use paired features or backend='features'"
+            )
+        use_fused = self.ff.paired and (
+            self.backend == "fused"
+            or (self.backend == "auto" and jax.default_backend() == "tpu")
+        )
+        if use_fused:
+            from ..kernels.ops import rff_matvec  # deferred: pallas import
+
+            return rff_matvec(x, self.ff.omega, self.w, signal=self.ff.signal)
         return self.ff.features(x) @ self.w  # (n, s)
 
 

@@ -4,50 +4,67 @@ Batched over right-hand sides (each RHS runs its own CG recursion; they share th
 matvec, so the dominant cost is one fused multi-RHS Gram matvec per iteration — this is
 exactly why the Ch. 5 pathwise estimator batches [y | samples | probes] together).
 Supports warm starts (Ch. 5 §5.3) and a fixed iteration budget (§5.4 early stopping).
+
+Matvec economy (this is the library's hottest loop — every full Gram matvec is
+O(n²·s) flops):
+
+* zero warm starts skip the initial residual matvec (r₀ = b, not b − A·0);
+* the residual norm is carried in the loop state — computed once per iteration,
+  not in both ``cond`` and ``body``;
+* ``finalize`` reuses the recursion's tracked residual instead of recomputing
+  b − A v, saving one more full matvec per solve.
+
+Pytree preconditioners (``core.precond.WoodburyPrecond``) are traced arguments,
+so rebuilding a preconditioner of the same rank for new hyperparameters hits the
+compiled-solve cache instead of retracing (the seed passed the apply *closure*
+as a static argument — every rebuild recompiled the whole solve). Raw callables
+still work but retrace per closure identity; ``cg_trace_count()`` exposes the
+retrace counter for tests.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional
+import dataclasses
+from typing import Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from .base import Gram, SolveResult, as_matrix_rhs, finalize  # noqa: F401 (re-export)
 
+_TRACE_COUNT = 0  # number of times the jitted CG core has been (re)traced
 
-@partial(jax.jit, static_argnames=("max_iters", "precond"))
-def solve_cg(
-    op: Gram,
-    b: jax.Array,
-    x0: Optional[jax.Array] = None,
-    *,
-    max_iters: int = 1000,
-    tol: float = 1e-2,
-    precond: Optional[Callable[[jax.Array], jax.Array]] = None,
-) -> SolveResult:
-    """Solve (K+σ²I) V = B. b: (n,) or (n,s). tol is on the *relative* residual."""
-    b2, squeeze = as_matrix_rhs(b)
-    n, s = b2.shape
-    v = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
+
+def cg_trace_count() -> int:
+    return _TRACE_COUNT
+
+
+def _cg_impl(op, b2, v0, precond, *, max_iters, tol, x0_is_none, squeeze):
+    global _TRACE_COUNT
+    _TRACE_COUNT += 1
     minv = precond if precond is not None else (lambda r: r)
 
-    r0 = b2 - op.mv(v)
+    if x0_is_none:
+        r0 = b2  # v0 == 0 ⇒ the initial residual is free (no A·0 matvec)
+        init_mv = 0
+    else:
+        r0 = b2 - op.mv(v0)
+        init_mv = 1
     z0 = minv(r0)
     bn = jnp.maximum(jnp.linalg.norm(b2, axis=0), 1e-30)
+    rn0 = jnp.linalg.norm(r0, axis=0)
 
     def cond(state):
-        _, r, _, _, t, _ = state
-        rel = jnp.linalg.norm(r, axis=0) / bn
-        return jnp.logical_and(t < max_iters, jnp.any(rel > tol))
+        _, _, _, _, t, _, rn = state
+        return jnp.logical_and(t < max_iters, jnp.any(rn / bn > tol))
 
     def body(state):
-        v, r, z, p, t, rz = state
+        v, r, z, p, t, rz, rn = state
         ap = op.mv(p)
         pap = jnp.sum(p * ap, axis=0)
         alpha = rz / jnp.where(pap > 0, pap, 1.0)
-        # freeze converged columns (alpha→0) to avoid round-off churn
-        active = jnp.linalg.norm(r, axis=0) / bn > tol
+        # freeze converged columns (alpha→0) to avoid round-off churn; judged on
+        # the carried residual norm — no second norm computation per iteration
+        active = rn / bn > tol
         alpha = jnp.where(active, alpha, 0.0)
         v = v + alpha[None, :] * p
         r = r - alpha[None, :] * ap
@@ -55,8 +72,43 @@ def solve_cg(
         rz_new = jnp.sum(r * z, axis=0)
         beta = rz_new / jnp.where(rz > 0, rz, 1.0)
         p = z + beta[None, :] * p
-        return v, r, z, p, t + 1, rz_new
+        return v, r, z, p, t + 1, rz_new, jnp.linalg.norm(r, axis=0)
 
-    state = (v, r0, z0, z0, jnp.asarray(0), jnp.sum(r0 * z0, axis=0))
-    v, r, _, _, t, _ = jax.lax.while_loop(cond, body, state)
-    return finalize(op, v, b2, t, squeeze, tol=tol)
+    state = (v0, r0, z0, z0, jnp.asarray(0), jnp.sum(r0 * z0, axis=0), rn0)
+    v, r, _, _, t, _, _ = jax.lax.while_loop(cond, body, state)
+    # one matvec per iteration + the optional warm-start residual; the tracked
+    # recursion residual r IS b − A v, so finalize adds no extra matvec
+    return finalize(
+        op, v, b2, t, squeeze, tol=tol, residual=r, matvecs=init_mv + t
+    )
+
+
+_STATICS = ("max_iters", "tol", "x0_is_none", "squeeze")
+_cg_jit = jax.jit(_cg_impl, static_argnames=_STATICS)
+_cg_jit_closure = jax.jit(_cg_impl, static_argnames=_STATICS + ("precond",))
+
+
+def solve_cg(
+    op: Gram,
+    b: jax.Array,
+    x0: Optional[jax.Array] = None,
+    *,
+    max_iters: int = 1000,
+    tol: float = 1e-2,
+    precond: Optional[Union[Callable[[jax.Array], jax.Array], object]] = None,
+) -> SolveResult:
+    """Solve (K+σ²I) V = B. b: (n,) or (n,s). tol is on the *relative* residual.
+
+    ``precond`` is an ``r → M⁻¹r`` apply: a pytree dataclass (e.g.
+    ``WoodburyPrecond``) rides through jit as a traced argument — rebuilds of the
+    same rank/shape reuse the compiled solve — while a plain closure is a static
+    argument and recompiles per identity (legacy behaviour).
+    """
+    b2, squeeze = as_matrix_rhs(b)
+    v0 = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
+    kw = dict(
+        max_iters=max_iters, tol=float(tol), x0_is_none=x0 is None, squeeze=squeeze
+    )
+    if precond is None or dataclasses.is_dataclass(precond):
+        return _cg_jit(op, b2, v0, precond, **kw)
+    return _cg_jit_closure(op, b2, v0, precond, **kw)

@@ -52,9 +52,9 @@ def solve_sdd(
         alpha, vel, avg = carry
         idx = jax.random.randint(jax.random.fold_in(key, t), (batch_size,), 0, n)
         look = alpha + momentum * vel  # Nesterov lookahead
-        rows = op.rows(idx)  # (p, n) = k_i rows
-        # (k_i + σ² e_i)ᵀ look − b_i   (full dual gradient coordinate — Eq. 4.25)
-        resid = rows @ look + sigma2 * look[idx] - b2[idx]  # (p, s)
+        # (k_i + σ² e_i)ᵀ look − b_i   (full dual gradient coordinate — Eq. 4.25);
+        # fused row-block matvec: the (p, n) panel k_i never hits HBM
+        resid = op.rows_mv(idx, look) + sigma2 * look[idx] - b2[idx]  # (p, s)
         g_scaled = (n / batch_size) * resid
         vel = momentum * vel
         vel = vel.at[idx].add(-beta * g_scaled)

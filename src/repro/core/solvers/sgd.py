@@ -68,9 +68,10 @@ def solve_sgd(
         ki, kf = jax.random.split(kb)
         idx = jax.random.randint(ki, (batch_size,), 0, n)
         look = v + momentum * mom  # Nesterov lookahead
-        rows = op.rows(idx)  # (p, n)
-        err = rows @ look - b2[idx]  # (p, s)
-        g_fit = (n / batch_size) * (rows.T @ err)
+        # fused row-block matvecs: the (p, n) panel K[idx, :] is never
+        # materialised — one forward and one transposed contraction per step
+        err = op.rows_mv(idx, look) - b2[idx]  # (p, s)
+        g_fit = (n / batch_size) * op.rows_t_mv(idx, err)
         omega = spectral_sample(op.params, kf, num_features, d)
         phi = jnp.sqrt(op.params.signal / num_features) * jnp.concatenate(
             [jnp.sin(op.x @ omega.T), jnp.cos(op.x @ omega.T)], axis=-1

@@ -28,11 +28,13 @@ boundaries as static arguments and serve as cache keys for compiled solves.
 from __future__ import annotations
 
 import dataclasses
+import json
 import warnings
 from typing import Any, Callable, ClassVar, Dict, Optional, Type, Union
 
 import jax
 
+from ...kernels.ops import BACKENDS
 from ..precond import nystrom_preconditioner, pivoted_cholesky_preconditioner
 from .ap import solve_ap
 from .base import Gram, SolveResult
@@ -57,10 +59,53 @@ def _require_gram(op, what: str):
 # Preconditioner specs (§2.2.4; built on core/precond.py)
 # ---------------------------------------------------------------------------
 
+_PRECOND_REGISTRY: Dict[str, type] = {}
 
+
+def register_precond(name: str, cls: Optional[type] = None):
+    """Register a preconditioner spec class under a string name (decorator)."""
+
+    def deco(c: type) -> type:
+        c.name = name
+        _PRECOND_REGISTRY[name] = c
+        return c
+
+    return deco(cls) if cls is not None else deco
+
+
+def get_precond(name: str) -> type:
+    try:
+        return _PRECOND_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown preconditioner {name!r}; registered: {sorted(_PRECOND_REGISTRY)}"
+        ) from None
+
+
+def registered_preconds() -> tuple:
+    return tuple(sorted(_PRECOND_REGISTRY))
+
+
+class _JsonSpecMixin:
+    """``to_json``/``from_json`` shared by solver and preconditioner specs.
+
+    Specs are static dataclasses, so serialization is just their fields; nested
+    preconditioner specs are tagged dicts. Prebuilt apply callables are runtime
+    objects and refuse to serialize.
+    """
+
+    def to_json(self, **dumps_kwargs: Any) -> str:
+        return json.dumps(_spec_to_dict(self), **dumps_kwargs)
+
+    @staticmethod
+    def from_json(s: str) -> "Any":
+        return spec_from_dict(json.loads(s))
+
+
+@register_precond("nystrom")
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class Nystrom:
+class Nystrom(_JsonSpecMixin):
     """Uniform-subset Nyström preconditioner: rank-m surrogate + Woodbury apply."""
 
     rank: int = _static(100)
@@ -71,9 +116,10 @@ class Nystrom:
         return nystrom_preconditioner(op.params, op.x, key, rank=self.rank)
 
 
+@register_precond("pivoted_cholesky")
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class PivotedCholesky:
+class PivotedCholesky(_JsonSpecMixin):
     """Greedy pivoted-Cholesky preconditioner (paper fidelity; sequential build)."""
 
     rank: int = _static(100)
@@ -126,18 +172,24 @@ def registered_solvers() -> tuple:
     return tuple(sorted(_REGISTRY))
 
 
-class SolverSpec:
+class SolverSpec(_JsonSpecMixin):
     """Base class for declarative solver configs.
 
     Subclasses are frozen dataclasses whose fields are all static (hashable), so a
     spec instance can be a ``jax.jit`` static argument or a dict key. ``run`` maps
     the spec onto the underlying solver function; consumers never call it directly
     — they go through ``solve()``.
+
+    All built-in specs carry a ``backend`` field pinning the Gram-matvec backend
+    (``"pallas"``/``"chunked"``/``"dense"``/``"auto"``; ``None`` inherits the
+    operator's own setting) — ``solve()`` applies it to ``Gram`` operators, so
+    ``CG(backend="pallas")`` runs every matvec of the solve through the fused
+    differentiable Pallas kernel.
     """
 
     name: ClassVar[str] = "?"
     requires_key: ClassVar[bool] = False  # stochastic solvers need a PRNG key
-    needs_rows: ClassVar[bool] = False  # needs op.rows (kernel row gathers)
+    needs_rows: ClassVar[bool] = False  # needs op.rows_mv (kernel row matvecs)
 
     def run(
         self,
@@ -163,16 +215,17 @@ class CG(SolverSpec):
     """Conjugate gradients (§2.2.4), optionally preconditioned.
 
     ``precond`` is a preconditioner spec (built fresh per solve, since it depends
-    on the hyperparameters) or a prebuilt ``r -> M⁻¹r`` callable. A spec-valued
-    ``precond`` makes every solve pass a fresh closure to the jitted CG (closures
-    hash by identity as static args ⇒ recompile per call); inside a hot outer
-    loop with *fixed* hyperparameters, prebuild the callable once and pass that
-    instead.
+    on the hyperparameters) or a prebuilt ``r -> M⁻¹r`` apply. Spec builds
+    return ``WoodburyPrecond`` pytrees, which ride through the jitted CG as
+    traced arguments — rebuilding one of the same rank reuses the compiled
+    solve, so spec-valued preconds are safe inside hot outer loops. Only raw
+    closures (legacy) are static arguments and recompile per identity.
     """
 
     max_iters: int = _static(1000)
     tol: float = _static(1e-2)
     precond: Optional[PrecondLike] = _static(None)
+    backend: Optional[str] = _static(None)
 
     def run(self, op, b, *, key=None, x0=None, delta=None) -> SolveResult:
         pc = self.precond
@@ -206,6 +259,7 @@ class SGD(SolverSpec):
     average_tail: float = _static(0.5)
     grad_clip: float = _static(0.1)
     tol: float = _static(1e-2)
+    backend: Optional[str] = _static(None)
 
     def run(self, op, b, *, key=None, x0=None, delta=None) -> SolveResult:
         return solve_sgd(
@@ -233,6 +287,7 @@ class SDD(SolverSpec):
     momentum: float = _static(0.9)
     averaging: Optional[float] = _static(None)
     tol: float = _static(1e-2)
+    backend: Optional[str] = _static(None)
 
     def run(self, op, b, *, key=None, x0=None, delta=None) -> SolveResult:
         return solve_sdd(
@@ -255,12 +310,72 @@ class AP(SolverSpec):
     num_steps: int = _static(2000)
     block_size: int = _static(512)
     tol: float = _static(1e-2)
+    backend: Optional[str] = _static(None)
 
     def run(self, op, b, *, key=None, x0=None, delta=None) -> SolveResult:
         return solve_ap(
             op, _fold_delta(op, b, delta), x0, key=key,
             num_steps=self.num_steps, block_size=self.block_size, tol=self.tol,
         )
+
+
+# ---------------------------------------------------------------------------
+# JSON serialization — run configs, CLIs and the benchmark harness are
+# file-drivable (ROADMAP item): every spec is a tagged dict of its fields.
+# ---------------------------------------------------------------------------
+
+
+def _spec_to_dict(spec) -> Dict[str, Any]:
+    if not dataclasses.is_dataclass(spec):
+        raise TypeError(f"expected a spec dataclass, got {spec!r}")
+    tag = "precond" if type(spec) in _PRECOND_REGISTRY.values() else "solver"
+    if spec.name not in (_PRECOND_REGISTRY if tag == "precond" else _REGISTRY):
+        raise TypeError(
+            f"{type(spec).__name__} is not a registered spec; register it with "
+            f"register_{tag}(name) before serializing"
+        )
+    d: Dict[str, Any] = {tag: spec.name}
+    for f in dataclasses.fields(spec):
+        v = getattr(spec, f.name)
+        if f.name == "precond" and v is not None:
+            if callable(v) and not dataclasses.is_dataclass(v):
+                raise TypeError(
+                    "a prebuilt preconditioner apply is a runtime object and "
+                    "cannot be serialized; use a Nystrom/PivotedCholesky spec"
+                )
+            v = _spec_to_dict(v)
+        d[f.name] = v
+    return d
+
+
+def spec_to_dict(spec) -> Dict[str, Any]:
+    """Spec (solver or preconditioner) → plain JSON-compatible dict."""
+    return _spec_to_dict(spec)
+
+
+def spec_from_dict(d: Dict[str, Any]):
+    """Tagged dict → spec instance (inverse of :func:`spec_to_dict`)."""
+    d = dict(d)
+    if "solver" in d:
+        cls: type = get_solver(d.pop("solver"))
+    elif "precond" in d:
+        cls = get_precond(d.pop("precond"))
+    else:
+        raise ValueError(
+            "spec dict must be tagged with a 'solver' or 'precond' name; "
+            f"got keys {sorted(d)}"
+        )
+    if isinstance(d.get("precond"), dict):
+        d["precond"] = spec_from_dict(d["precond"])
+    return cls(**d)
+
+
+def spec_to_json(spec, **dumps_kwargs: Any) -> str:
+    return json.dumps(_spec_to_dict(spec), **dumps_kwargs)
+
+
+def spec_from_json(s: str):
+    return spec_from_dict(json.loads(s))
 
 
 # ---------------------------------------------------------------------------
@@ -359,14 +474,22 @@ def solve(
         **overrides: spec-field overrides, e.g. ``solve(op, b, "cg", max_iters=50)``.
     """
     s = as_spec(spec, **overrides)
+    backend = getattr(s, "backend", None)
+    if backend is not None:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+        if isinstance(op, Gram) and op.backend != backend:
+            # the spec pins the Gram-matvec backend for this solve
+            op = dataclasses.replace(op, backend=backend)
     if s.requires_key and key is None:
         raise ValueError(
             f"solver {s.name!r} is stochastic: solve(..., key=jax.random.PRNGKey(...))"
             " is required"
         )
-    if s.needs_rows and not hasattr(op, "rows"):
+    if s.needs_rows and not (hasattr(op, "rows_mv") and hasattr(op, "rows_t_mv")):
         raise TypeError(
-            f"solver {s.name!r} needs kernel-row access (op.rows); operator "
+            f"solver {s.name!r} needs fused kernel-row matvecs "
+            f"(op.rows_mv/op.rows_t_mv, and op.block_at for AP); operator "
             f"{type(op).__name__} only supports matvecs — use a CG spec"
         )
     return s.run(op, b, key=key, x0=x0, delta=delta)

@@ -1,20 +1,76 @@
-"""Jit'd public wrappers around the Pallas kernels: padding, lengthscale folding,
-GQA head expansion, and interpret-mode dispatch (CPU validation vs TPU execution).
+"""Jit'd public wrappers around the Pallas kernels — and the library's Gram-matvec
+backend-selection layer.
+
+Every Gram-matvec in the library routes through :func:`gram_mv` (full matvecs) or
+:func:`gram_rows_matvec` (row-block matvecs), which dispatch on a ``backend``
+string:
+
+* ``"pallas"``  — the fused, differentiable Pallas kernel (gram_matvec.py):
+  K tiles built in VMEM, never materialised in HBM. Compiled on TPU, interpret
+  mode elsewhere. Raises for kernels without a distance-as-matmul form
+  (``tanimoto``).
+* ``"chunked"`` — the pure-JAX row-chunked matvec (core/kernels_fn.py):
+  O(chunk·m) memory, any kernel kind, autodiff throughout.
+* ``"dense"``   — materialise K and multiply (small-n reference / tests).
+* ``"auto"``    — Pallas when running on TPU (interpret mode is slower than
+  chunked XLA on CPU), chunked otherwise; always chunked for ``tanimoto``.
+
+All paths are differentiable w.r.t. the hyperparameters: the Pallas path wraps a
+``jax.custom_vjp`` whose backward pass is itself fused Pallas contractions, with
+σ_f², lengthscale and jitter folded in *outside* the custom-VJP core so their
+gradients flow through ordinary autodiff.
+
+``MATVEC_TRACE_COUNTS`` records how many Gram matvecs each backend dispatched
+(counted when the op is staged, i.e. per trace or eager call) — used by tests and
+benchmarks to prove the hot path never silently falls back.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from .gram_matvec import gram_matvec_pallas
+from .gram_matvec import PALLAS_KINDS, gram_matvec_fused
 from .rff_matvec import rff_matvec_pallas
 from .flash_attention import flash_attention_pallas
+
+BACKENDS = ("auto", "pallas", "chunked", "dense")
+
+# backend -> number of Gram matvecs dispatched (staged into a trace or run
+# eagerly). A solve that never touches "chunked" proves the fused path is the
+# hot path — see tests/test_backends_and_counts.py.
+MATVEC_TRACE_COUNTS = {"pallas": 0, "chunked": 0, "dense": 0}
+
+
+def reset_matvec_trace_counts() -> None:
+    for k in MATVEC_TRACE_COUNTS:
+        MATVEC_TRACE_COUNTS[k] = 0
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_backend(backend: str = "auto", kind: str = "se") -> str:
+    """Normalise a backend request to a concrete backend for kernel ``kind``.
+
+    ``auto`` picks the fused Pallas kernel on TPU and the chunked JAX matvec
+    elsewhere, and silently falls back to chunked for kinds the Pallas kernel
+    cannot express (``tanimoto`` has no distance-as-matmul form). Requesting
+    ``pallas`` explicitly for such a kind is an error.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if backend == "auto":
+        if kind not in PALLAS_KINDS:
+            return "chunked"
+        return "pallas" if _on_tpu() else "chunked"
+    if backend == "pallas" and kind not in PALLAS_KINDS:
+        raise ValueError(
+            f"kernel kind {kind!r} is not supported by the fused Pallas backend "
+            f"(no distance-as-matmul form); supported kinds: {PALLAS_KINDS}. "
+            f"Use backend='chunked', or backend='auto' to fall back automatically."
+        )
+    return backend
 
 
 def _pad_rows(a: jax.Array, mult: int) -> jax.Array:
@@ -22,38 +78,118 @@ def _pad_rows(a: jax.Array, mult: int) -> jax.Array:
     return a if pad == 0 else jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
 
 
-def gram_matvec(params, x, v, z=None, *, jitter=None, block=256, interpret=None):
-    """(σ_f² k(x,z) + jitter I) @ v — Pallas fused Gram matvec (see gram_matvec.py).
-
-    params: core.kernels_fn.KernelParams. v: (m,) or (m,s).
-    """
+def _pallas_gram_mv(params, x, v2, z, block, interpret):
     interpret = (not _on_tpu()) if interpret is None else interpret
-    squeeze = v.ndim == 1
-    v2 = v[:, None] if squeeze else v
     ls = params.lengthscale
     xs = x / ls
-    zs = xs if z is None else z / ls
-    n, m = xs.shape[0], zs.shape[0]
-    jit_val = 0.0 if jitter is None else float(jitter)
+    zs = None if z is None else z / ls
+    n = xs.shape[0]
     xp = _pad_rows(xs, block)
-    zp = _pad_rows(zs, block)
+    zp = xp if zs is None else _pad_rows(zs, block)
     vp = _pad_rows(v2, block)
-    out = gram_matvec_pallas(
-        xp,
-        zp,
-        vp,
-        kind=params.kind,
-        signal=float(params.signal),
-        jitter=jit_val,
-        block_m=block,
-        block_n=block,
-        interpret=interpret,
-    )[:n]
+    out = gram_matvec_fused(params.kind, block, block, bool(interpret), xp, zp, vp)
+    return params.signal * out[:n]
+
+
+def gram_mv(
+    params,
+    x: jax.Array,
+    v: jax.Array,
+    z=None,
+    *,
+    jitter=None,
+    backend: str = "auto",
+    block: int = 256,
+    row_chunk: int = 2048,
+    interpret=None,
+) -> jax.Array:
+    """(σ_f² k(x, z) + jitter·I) @ v through the selected backend — THE Gram
+    matvec entry point; differentiable w.r.t. ``params`` on every backend.
+
+    params: core.kernels_fn.KernelParams. v: (m,) or (m, s). ``jitter`` (typically
+    σ²) is applied as ``out + jitter·v`` outside the kernels, valid only for the
+    symmetric z-is-None case.
+    """
+    from ..core.kernels_fn import gram, matvec  # deferred: avoid core<->kernels cycle
+
+    if jitter is not None and z is not None:
+        raise ValueError(
+            "jitter adds jitter·I, which only makes sense for the symmetric "
+            "K(x, x) operator — drop jitter for cross-Gram matvecs (z given)"
+        )
+    bk = resolve_backend(backend, params.kind)
+    MATVEC_TRACE_COUNTS[bk] += 1
+    squeeze = v.ndim == 1
+    v2 = v[:, None] if squeeze else v
+    if bk == "pallas":
+        out = _pallas_gram_mv(params, x, v2, z, block, interpret)
+    elif bk == "chunked":
+        out = matvec(params, x, v2, z=z, row_chunk=row_chunk)
+    else:
+        out = gram(params, x, z) @ v2
+    if jitter is not None:
+        out = out + jitter * v2
     return out[:, 0] if squeeze else out
 
 
+def gram_rows_matvec(
+    params,
+    x: jax.Array,
+    idx: jax.Array,
+    u: jax.Array,
+    *,
+    transpose: bool = False,
+    backend: str = "auto",
+    block: int = 256,
+    row_chunk: int = 2048,
+    interpret=None,
+) -> jax.Array:
+    """Fused row-block matvec: K[idx, :] @ u, or K[idx, :]ᵀ @ u with ``transpose``.
+
+    The SGD/SDD/AP primitive (Wu et al. 2023). On the Pallas backend the |idx|×n
+    row panel never exists in HBM — only the gathered x[idx] (|idx|×d) does, and
+    the panel is built tile-by-tile in VMEM. The chunked/dense backends
+    materialise the panel once per call (a solver batch is small, |idx| ≪ n, so
+    this is the seed's memory envelope and avoids recomputing kernel entries —
+    fusion only pays when HBM bandwidth is the bottleneck). u: (n, s) (or
+    (|idx|, s) with ``transpose``).
+    """
+    from ..core.kernels_fn import gram  # deferred: avoid core<->kernels cycle
+
+    bk = resolve_backend(backend, params.kind)
+    xi = x[idx]
+    if bk == "pallas":
+        if transpose:
+            return gram_mv(
+                params, x, u, z=xi, backend="pallas", block=block,
+                interpret=interpret,
+            )
+        return gram_mv(
+            params, xi, u, z=x, backend="pallas", block=block, interpret=interpret,
+        )
+    MATVEC_TRACE_COUNTS[bk] += 1
+    panel = gram(params, xi, x)  # (|idx|, n)
+    return panel.T @ u if transpose else panel @ u
+
+
+def gram_matvec(params, x, v, z=None, *, jitter=None, block=256, interpret=None):
+    """(σ_f² k(x,z) + jitter I) @ v — Pallas fused Gram matvec (see gram_matvec.py).
+
+    Thin ``backend="pallas"`` pin over :func:`gram_mv`, kept as the conventional
+    name for kernel tests and benchmarks.
+    """
+    return gram_mv(
+        params, x, v, z=z, jitter=jitter, backend="pallas", block=block,
+        interpret=interpret,
+    )
+
+
 def rff_matvec(x, omega, w, *, signal=1.0, block=256, interpret=None):
-    """Φ(x) @ w (paired sin/cos RFF) — fused, feature matrix never in HBM."""
+    """Φ(x) @ w (paired sin/cos RFF) — fused, feature matrix never in HBM.
+
+    ``signal`` (σ_f²) may be a traced array: the kernel runs with unit signal
+    and the √(σ_f²/m) normalisation is applied outside, in plain JAX.
+    """
     interpret = (not _on_tpu()) if interpret is None else interpret
     n = x.shape[0]
     m_true = omega.shape[0]
@@ -71,12 +207,12 @@ def rff_matvec(x, omega, w, *, signal=1.0, block=256, interpret=None):
             axis=0,
         )
     m_pad = m_true + pad_f
-    signal_adj = float(signal) * m_pad / m_true  # sqrt(adj/m_pad) == sqrt(signal/m_true)
     out = rff_matvec_pallas(
-        xp, omega, w, signal=signal_adj, block_m=block, block_f=block,
+        xp, omega, w, signal=1.0, block_m=block, block_f=block,
         interpret=interpret,
     )[:n]
-    return out
+    # kernel scale is sqrt(1/m_pad); rescale to sqrt(signal/m_true)
+    return out * jnp.sqrt(signal * (m_pad / m_true))
 
 
 def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128, interpret=None):

@@ -1,0 +1,205 @@
+"""Matvec economy and backend plumbing.
+
+Proves the PR's perf claims structurally:
+
+* every solver's executed full-Gram-matvec count (via instrumented operators and
+  ``jax.debug.callback``) matches ``SolveResult.matvecs`` — CG spends exactly one
+  matvec per iteration (the seed paid iters + 2: an A·0 warm-start residual and a
+  recomputed finalize residual), AP spends zero;
+* ``optimize_mll`` with a Pallas-pinned spec never touches the chunked path;
+* rebuilding a same-rank preconditioner reuses the compiled CG solve (the seed
+  retraced on every rebuild because the apply closure was a static argument).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernels_fn import make_params
+from repro.core.mll import optimize_mll
+from repro.core.precond import WoodburyPrecond, nystrom_preconditioner
+from repro.core.solvers.base import Gram, matvec_counts, reset_matvec_counts
+from repro.core.solvers.cg import cg_trace_count, solve_cg
+from repro.core.solvers.spec import AP, CG, SDD, SGD, Nystrom, solve
+from repro.kernels.ops import MATVEC_TRACE_COUNTS, reset_matvec_trace_counts
+
+
+def _instrumented(t, **kw):
+    return Gram(x=t["x"], params=t["params"], instrument=True, **kw)
+
+
+def _counts_after(fn):
+    reset_matvec_counts()
+    res = fn()
+    jax.block_until_ready(res.solution)
+    jax.effects_barrier()
+    return res, matvec_counts()
+
+
+def test_cg_matvecs_one_per_iteration(toy_regression):
+    """Cold-started CG: exactly max_iters full matvecs — no A·0 residual, no
+    recomputed finalize residual (the seed spent max_iters + 2)."""
+    t = toy_regression
+    op = _instrumented(t)
+    iters = 7
+    res, counts = _counts_after(
+        lambda: solve_cg(op, t["y"], max_iters=iters, tol=0.0)
+    )
+    assert int(res.iterations) == iters
+    assert counts["mv"] == iters
+    assert int(res.matvecs) == counts["mv"]
+
+
+def test_cg_warm_start_costs_one_extra_matvec(toy_regression):
+    t = toy_regression
+    op = _instrumented(t)
+    iters = 5
+    x0 = jnp.ones_like(t["y"])
+    res, counts = _counts_after(
+        lambda: solve_cg(op, t["y"], x0, max_iters=iters, tol=0.0)
+    )
+    assert counts["mv"] == iters + 1  # the b − A x₀ residual
+    assert int(res.matvecs) == counts["mv"]
+
+
+def test_ap_solve_spends_zero_full_matvecs(toy_regression):
+    """AP maintains its residual incrementally: a cold-started solve touches the
+    Gram operator only through row-block matvecs (the seed spent 2 full ones)."""
+    t = toy_regression
+    op = _instrumented(t)
+    res, counts = _counts_after(
+        lambda: solve(op, t["y"], AP(num_steps=20, block_size=32),
+                      key=jax.random.PRNGKey(0))
+    )
+    assert counts["mv"] == 0
+    assert counts["rows"] == 20  # one fused transposed row matvec per step
+    assert int(res.matvecs) == 0
+    assert float(res.rel_residual.max()) < 1.0  # tracked residual is real
+
+
+@pytest.mark.parametrize(
+    "spec,rows_per_step",
+    [
+        (SGD(num_steps=15, batch_size=32, num_features=16), 2),
+        (SDD(num_steps=15, batch_size=32), 1),
+    ],
+    ids=["sgd", "sdd"],
+)
+def test_stochastic_solvers_spend_one_full_matvec(toy_regression, spec, rows_per_step):
+    """SGD/SDD loops touch only row blocks; the single full matvec is the exact
+    final-residual check in finalize (their only source of an honest
+    ``converged`` flag — not redundant work)."""
+    t = toy_regression
+    op = _instrumented(t)
+    res, counts = _counts_after(
+        lambda: solve(op, t["y"], spec, key=jax.random.PRNGKey(1))
+    )
+    assert counts["mv"] == 1
+    assert counts["rows"] == 15 * rows_per_step
+    assert int(res.matvecs) == 1
+
+
+def test_solve_result_matvecs_consistent_across_solvers(toy_regression):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    key = jax.random.PRNGKey(2)
+    assert int(solve(op, t["y"], CG(max_iters=9, tol=0.0)).matvecs) == 9
+    assert int(solve(op, t["y"], AP(num_steps=5, block_size=16), key=key).matvecs) == 0
+    assert int(
+        solve(op, t["y"], SGD(num_steps=5, batch_size=16, num_features=8),
+              key=key).matvecs
+    ) == 1
+    assert int(
+        solve(op, t["y"], SDD(num_steps=5, batch_size=16), key=key).matvecs
+    ) == 1
+
+
+# ---------------------------------------------------------------------------
+# Backend pinning
+# ---------------------------------------------------------------------------
+
+
+def test_spec_pins_backend_on_gram(toy_regression):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    reset_matvec_trace_counts()
+    res = solve(op, t["y"], CG(max_iters=30, tol=1e-4, backend="dense"))
+    assert MATVEC_TRACE_COUNTS["dense"] > 0
+    assert MATVEC_TRACE_COUNTS["chunked"] == 0
+    np.testing.assert_allclose(res.solution, t["v_star"], atol=5e-2)
+    with pytest.raises(ValueError, match="unknown backend"):
+        solve(op, t["y"], CG(backend="cublas"))
+
+
+def test_backends_produce_same_solution(toy_regression):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"], block=64)
+    sols = {}
+    for backend in ("chunked", "dense", "pallas"):
+        res = solve(op, t["y"], CG(max_iters=100, tol=1e-6, backend=backend))
+        sols[backend] = np.asarray(res.solution)
+    np.testing.assert_allclose(sols["chunked"], sols["dense"], atol=2e-4)
+    np.testing.assert_allclose(sols["chunked"], sols["pallas"], atol=2e-4)
+
+
+def test_optimize_mll_pallas_never_touches_chunked():
+    """The acceptance check: a Pallas-pinned spec drives the *entire* outer MLL
+    loop — inner solves, quadratic forms, and their gradients — through the
+    fused kernel; the chunked path is never even staged."""
+    key = jax.random.PRNGKey(0)
+    n, d = 72, 2
+    x = jax.random.normal(key, (n, d))
+    y = jnp.sin(2.0 * x[:, 0]) + 0.1 * jax.random.normal(
+        jax.random.fold_in(key, 1), (n,)
+    )
+    p0 = make_params("se", lengthscale=1.5, signal=0.8, noise=0.4, d=d)
+    reset_matvec_trace_counts()
+    st = optimize_mll(
+        p0, x, y, jax.random.PRNGKey(1), num_steps=2, lr=0.05, num_probes=2,
+        spec=CG(max_iters=25, tol=1e-4, backend="pallas"),
+    )
+    assert MATVEC_TRACE_COUNTS["chunked"] == 0
+    assert MATVEC_TRACE_COUNTS["dense"] == 0
+    assert MATVEC_TRACE_COUNTS["pallas"] > 0
+    assert st.total_solver_iters > 0
+    for leaf in jax.tree.leaves(st.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+# ---------------------------------------------------------------------------
+# Compiled-solve cache: preconditioner rebuilds must not retrace
+# ---------------------------------------------------------------------------
+
+
+def test_precond_rebuild_hits_compiled_solve_cache(toy_regression):
+    """A preconditioner is a pytree of arrays, so rebuilding one of the same
+    rank (fresh subset, perturbed hyperparameters) reuses the compiled CG —
+    the seed's closure-as-static-argument design retraced every time."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    pc1 = nystrom_preconditioner(t["params"], t["x"], jax.random.PRNGKey(0), rank=32)
+    assert isinstance(pc1, WoodburyPrecond)
+    solve_cg(op, t["y"], max_iters=40, tol=1e-6, precond=pc1)
+    before = cg_trace_count()
+    # fresh build: different subset, same rank/shapes → same treedef → cache hit
+    pc2 = nystrom_preconditioner(t["params"], t["x"], jax.random.PRNGKey(9), rank=32)
+    res = solve_cg(op, t["y"], max_iters=40, tol=1e-6, precond=pc2)
+    assert cg_trace_count() == before, "same-rank precond rebuild retraced CG"
+    np.testing.assert_allclose(res.solution, t["v_star"], atol=5e-3)
+    # a different rank changes shapes and may legitimately retrace
+    pc3 = nystrom_preconditioner(t["params"], t["x"], jax.random.PRNGKey(1), rank=16)
+    solve_cg(op, t["y"], max_iters=40, tol=1e-6, precond=pc3)
+
+
+def test_precond_spec_resolve_does_not_retrace(toy_regression):
+    """End to end through solve(): repeated solves with a spec-built
+    preconditioner (rebuilt fresh each call) reuse the compiled solve."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    spec = CG(max_iters=40, tol=1e-6, precond=Nystrom(rank=24))
+    solve(op, t["y"], spec, key=jax.random.PRNGKey(0))
+    before = cg_trace_count()
+    for seed in range(1, 4):
+        res = solve(op, t["y"], spec, key=jax.random.PRNGKey(seed))
+    assert cg_trace_count() == before
+    np.testing.assert_allclose(res.solution, t["v_star"], atol=5e-3)

@@ -221,3 +221,69 @@ def test_iterative_gp_facade(toy_regression):
     assert samples.shape == (5, 32)
     with pytest.raises(RuntimeError, match="fit"):
         IterativeGP().predict(t["x_test"])
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip (ROADMAP item): run configs and the benchmark harness are
+# file-drivable — every registered spec class must survive to_json/from_json.
+# ---------------------------------------------------------------------------
+
+from repro.core.solvers.spec import (  # noqa: E402
+    get_precond,
+    registered_preconds,
+    spec_from_dict,
+    spec_from_json,
+    spec_to_dict,
+    spec_to_json,
+)
+
+
+def test_every_registered_solver_spec_roundtrips_json():
+    for name in registered_solvers():
+        spec = get_solver(name)()  # defaults
+        again = SolverSpec.from_json(spec.to_json())
+        assert again == spec and type(again) is type(spec)
+
+
+def test_every_registered_precond_spec_roundtrips_json():
+    assert set(registered_preconds()) >= {"nystrom", "pivoted_cholesky"}
+    for name in registered_preconds():
+        pspec = get_precond(name)(rank=37)
+        again = spec_from_json(pspec.to_json())
+        assert again == pspec and type(again) is type(pspec)
+
+
+def test_spec_json_roundtrip_nested_and_nondefault():
+    spec = CG(max_iters=123, tol=3e-5, precond=Nystrom(rank=17), backend="pallas")
+    s = spec_to_json(spec)
+    again = spec_from_json(s)
+    assert again == spec
+    assert again.precond == Nystrom(rank=17)
+    assert again.backend == "pallas"
+    d = spec_to_dict(spec)
+    assert d["solver"] == "cg" and d["precond"]["precond"] == "nystrom"
+    assert spec_from_dict(d) == spec
+    # stochastic spec with non-default fields
+    sdd = SDD(num_steps=77, batch_size=19, step_size_times_n=3.5, backend="chunked")
+    assert spec_from_json(sdd.to_json()) == sdd
+
+
+def test_spec_json_rejects_runtime_objects_and_bad_tags():
+    prebuilt = lambda r: r  # noqa: E731 — a prebuilt apply closure
+    with pytest.raises(TypeError, match="cannot be serialized"):
+        spec_to_json(CG(precond=prebuilt))
+    with pytest.raises(ValueError, match="unknown solver"):
+        spec_from_dict({"solver": "cholesky"})
+    with pytest.raises(ValueError, match="unknown preconditioner"):
+        spec_from_dict({"precond": "ilu"})
+    with pytest.raises(ValueError, match="tagged"):
+        spec_from_dict({"max_iters": 3})
+
+
+def test_spec_json_drives_solve(toy_regression):
+    """A file-loaded spec runs a solve exactly like the in-memory original."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    spec = spec_from_json('{"solver": "cg", "max_iters": 300, "tol": 1e-6}')
+    res = solve(op, t["y"], spec)
+    np.testing.assert_allclose(res.solution, t["v_star"], atol=1e-3)
