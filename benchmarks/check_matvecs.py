@@ -1,0 +1,97 @@
+"""Matvec-count regression gate (CI step): run bench_solvers in smoke mode and
+fail if any counted full-Gram-matvec total exceeds the committed baseline in
+``results/BENCH_bench_solvers.json``.
+
+Matvec counts are the structural perf guarantee of the solver layer (CG spends
+exactly one matvec per iteration, SGD/SDD exactly one, AP zero — see
+``docs/solvers.md``); a refactor that silently reintroduces an A·0 warm-start
+residual or a recomputed finalize residual shows up here as counts drifting
+above the baseline, long before wall-clock noise would reveal it. Smoke mode
+keeps the committed problem sizes and CG specs (so CG iteration counts are
+comparable) and only cuts the stochastic solvers' step budgets, whose matvec
+count is independent of steps.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.check_matvecs \
+        [--baseline results/BENCH_bench_solvers.json] [--slack 0.15]
+
+``--slack`` tolerates small cross-platform CG iteration jitter (fp32 reduction
+order): measured > ceil(baseline · (1 + slack)) fails.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+from . import bench_solvers
+from .common import Report
+
+
+def _matvec_rows(rows) -> dict:
+    """{(table, method, dataset): matvecs} for rows that report a count."""
+    out = {}
+    for r in rows:
+        metrics = r["metrics"] if isinstance(r, dict) else r.metrics
+        if "matvecs" in metrics:
+            key = tuple(
+                (r[k] if isinstance(r, dict) else getattr(r, k))
+                for k in ("table", "method", "dataset")
+            )
+            out[key] = int(metrics["matvecs"])
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--baseline", default="results/BENCH_bench_solvers.json",
+        help="committed bench_solvers JSON to gate against",
+    )
+    ap.add_argument(
+        "--slack", type=float, default=0.15,
+        help="fractional headroom over the baseline before failing",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = _matvec_rows(json.load(f)["rows"])
+    if not baseline:
+        print(f"ERROR: no matvec counts in {args.baseline}", file=sys.stderr)
+        return 2
+
+    report = Report()
+    bench_solvers.run(report, full=False, smoke=True)
+    measured = _matvec_rows(report.rows)
+
+    compared = 0
+    failures = []
+    print(f"\nmatvec gate vs {args.baseline} (slack {args.slack:.0%}):")
+    for key, base in sorted(baseline.items()):
+        if key not in measured:
+            continue
+        compared += 1
+        allowed = math.ceil(base * (1.0 + args.slack))
+        got = measured[key]
+        status = "ok" if got <= allowed else "REGRESSION"
+        print(f"  {'/'.join(key):45s} baseline={base:4d} allowed={allowed:4d} "
+              f"measured={got:4d}  {status}")
+        if got > allowed:
+            failures.append((key, base, got))
+
+    if compared == 0:
+        print("ERROR: no comparable rows between baseline and smoke run",
+              file=sys.stderr)
+        return 2
+    if failures:
+        print(f"\n{len(failures)} matvec-count regression(s):", file=sys.stderr)
+        for key, base, got in failures:
+            print(f"  {'/'.join(key)}: {base} -> {got}", file=sys.stderr)
+        return 1
+    print(f"\nall {compared} matvec counts within baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

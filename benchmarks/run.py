@@ -11,6 +11,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import importlib
+import inspect
 import json
 import os
 import time
@@ -42,6 +43,12 @@ def _dump_bench_json(outdir: str, name: str, payload: dict) -> str:
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-sized datasets")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI-sized run for benches that support it (bench_solvers: same "
+        "problem sizes, slashed stochastic step budgets — matvec counts stay "
+        "baseline-comparable, RMSE rows do not)",
+    )
     ap.add_argument("--only", default=None, help="comma-separated bench names")
     ap.add_argument("--out", default=None, help="dump all rows as JSONL")
     ap.add_argument(
@@ -60,7 +67,10 @@ def main(argv=None):
         ok = True
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            mod.run(report, full=args.full)
+            kwargs = {"full": args.full}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            mod.run(report, **kwargs)
             print(f"=== {name} done in {time.time()-t0:.0f}s ===")
         except Exception:
             traceback.print_exc()

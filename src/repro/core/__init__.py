@@ -1,9 +1,22 @@
 """Core GP library — the paper's contribution (see DESIGN.md §1)."""
 from .kernels_fn import KernelParams, make_params, gram, matvec  # noqa: F401
+from .operators import (  # noqa: F401
+    Gram,
+    LatentKroneckerOp,
+    LinearOperator,
+    NormalEq,
+    OPTIONAL_CAPABILITIES,
+    ShardedGram,
+    capabilities,
+    matvec_counts,
+    require_capabilities,
+    reset_matvec_counts,
+    supports,
+)
 from .rff import sample_prior, make_fourier_features  # noqa: F401
 from .gp import exact_posterior, exact_mll  # noqa: F401
 from .pathwise import posterior_functions, PosteriorFunctions  # noqa: F401
-from .solvers.base import Gram, SolveResult  # noqa: F401
+from .solvers.base import SolveResult  # noqa: F401
 from .solvers.cg import solve_cg  # noqa: F401
 from .solvers.sgd import solve_sgd  # noqa: F401
 from .solvers.sdd import solve_sdd  # noqa: F401
@@ -33,5 +46,6 @@ from .precond import WoodburyPrecond  # noqa: F401
 from .api import IterativeGP  # noqa: F401
 from .mll import mll_grad, optimize_mll  # noqa: F401
 from .inducing import inducing_posterior  # noqa: F401
-from .kronecker import make_lkgp, lkgp_posterior, lkgp_solve_cg, break_even_density  # noqa: F401
-from .svgp import sgpr, sgpr_elbo  # noqa: F401
+from .kronecker import make_lkgp, lkgp_posterior, break_even_density  # noqa: F401
+from .distributed import distributed_solve, shard_training_rows  # noqa: F401
+from .svgp import sgpr, sgpr_elbo, sgpr_iterative  # noqa: F401

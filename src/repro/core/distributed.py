@@ -1,102 +1,33 @@
-"""Distributed GP inference (DESIGN.md §2): shard_map block-row Gram matvec + CG.
+"""Distributed GP inference (DESIGN.md §2): ShardedGram through the unified solve().
 
 The training rows X are sharded over the mesh's ``data`` axis (and ``pod`` when
-multi-pod) — a block-row distribution of K. Each device computes its K-block matvec
-without materialising the block (chunked, or the Pallas kernel on TPU); the result is
-already row-sharded, and CG's scalar reductions become ``psum``s over the data axes.
-The RHS batch dimension (samples/probes) can additionally shard over ``model``.
+multi-pod) — a block-row distribution of K, wrapped as the
+:class:`~repro.core.operators.ShardedGram` LinearOperator. Each device computes
+its K-block matvec without materialising the block through the same backend
+dispatch as the single-host path (fused Pallas kernel on TPU, chunked JAX
+elsewhere — ``pallas``/``chunked``/``dense`` threaded through the shards), and
+the solver's reductions become ``psum``/``all_gather`` collectives over the data
+axes.
 
-Memory per device: O(n_local · chunk) — the paper's linear-memory claim, per device.
-The solver iterations are bulk-synchronous (CG semantics); SGD/SDD steps tolerate
-stale coordinates and are used for straggler-tolerant mode (train/elastic.py).
+Because ShardedGram implements the full capability set — including the sharded
+row-gather primitives ``rows_mv``/``rows_t_mv``/``block_at`` — ANY SolverSpec
+runs distributed: CG (with Nyström/pivoted-Cholesky preconditioning via
+``precond_factor``), SGD, SDD and AP, all with warm starts, the δ channel and
+matvec accounting. Memory per device: O(n_local · chunk) — the paper's
+linear-memory claim, per device. CG iterations are bulk-synchronous; SGD/SDD
+steps tolerate stale coordinates and back the straggler-tolerant mode.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
 
-from .kernels_fn import KernelParams, gram
-from .solvers.spec import CG, SpecLike, as_spec
-
-
-def _local_block_matvec(params, x_local, x_all, v_all, jitter, row_offset):
-    """K(x_local, x_all) @ v + jitter * v_local — never materialises the block."""
-    out = gram(params, x_local, x_all) @ v_all
-    n_local = x_local.shape[0]
-    v_local = jax.lax.dynamic_slice_in_dim(v_all, row_offset, n_local, axis=0)
-    return out + jitter * v_local
-
-
-def make_distributed_matvec(mesh: Mesh, data_axes=("data",)):
-    """Returns mv(params, x_sharded, v_replicated) -> (K+σ²I)v, row-sharded inputs.
-
-    x is sharded over `data_axes`; v is replicated; output is replicated (all-gather).
-    """
-    axes = data_axes if isinstance(data_axes, tuple) else (data_axes,)
-
-    def mv(params: KernelParams, x: jax.Array, v: jax.Array) -> jax.Array:
-        def body(x_local, v_all):
-            idx = jax.lax.axis_index(axes)
-            n_local = x_local.shape[0]
-            x_all = jax.lax.all_gather(x_local, axes, tiled=True)
-            out_local = _local_block_matvec(
-                params, x_local, x_all, v_all, params.noise, idx * n_local
-            )
-            return jax.lax.all_gather(out_local, axes, tiled=True)
-
-        spec_x = P(axes, None)
-        spec_v = P(None, None) if v.ndim == 2 else P(None)
-        return shard_map(
-            body,
-            mesh=mesh,
-            in_specs=(spec_x, spec_v),
-            out_specs=spec_v,
-            check_rep=False,
-        )(x, v)
-
-    return mv
-
-
-@partial(jax.jit, static_argnames=("mesh", "data_axes", "max_iters"))
-def distributed_cg(
-    params: KernelParams,
-    x: jax.Array,
-    b: jax.Array,
-    mesh: Mesh,
-    data_axes=("data",),
-    max_iters: int = 200,
-    tol: float = 1e-3,
-) -> jax.Array:
-    """CG where the matvec is sharded over the mesh. x row-sharded, b replicated."""
-    mv = make_distributed_matvec(mesh, data_axes)
-    b2 = b[:, None] if b.ndim == 1 else b
-    v = jnp.zeros_like(b2)
-    r = b2 - mv(params, x, v)
-    p = r
-    rz = jnp.sum(r * r, axis=0)
-    bn = jnp.maximum(jnp.linalg.norm(b2, axis=0), 1e-30)
-
-    def cond(s):
-        _, r, _, t, _ = s
-        return jnp.logical_and(t < max_iters, jnp.any(jnp.linalg.norm(r, axis=0) / bn > tol))
-
-    def body(s):
-        v, r, p, t, rz = s
-        ap = mv(params, x, p)
-        a = rz / jnp.maximum(jnp.sum(p * ap, axis=0), 1e-30)
-        v = v + a[None] * p
-        r = r - a[None] * ap
-        rz2 = jnp.sum(r * r, axis=0)
-        p = r + (rz2 / jnp.maximum(rz, 1e-30))[None] * p
-        return v, r, p, t + 1, rz2
-
-    v, *_ = jax.lax.while_loop(cond, body, (v, r, p, 0, rz))
-    return v[:, 0] if b.ndim == 1 else v
+from .kernels_fn import KernelParams
+from .operators import ShardedGram
+from .solvers.base import SolveResult
+from .solvers.spec import SpecLike, solve
 
 
 def shard_training_rows(mesh: Mesh, x: jax.Array, data_axes=("data",)) -> jax.Array:
@@ -110,21 +41,25 @@ def distributed_solve(
     mesh: Mesh,
     spec: SpecLike = "cg",
     data_axes=("data",),
-) -> jax.Array:
-    """Spec-driven front door for sharded solves (same SolverSpec API as solve()).
+    *,
+    key: Optional[jax.Array] = None,
+    x0: Optional[jax.Array] = None,
+    delta: Optional[jax.Array] = None,
+    backend: str = "auto",
+    row_chunk: int = 2048,
+) -> SolveResult:
+    """Spec-driven front door for sharded solves — ``solve(ShardedGram, …)``.
 
-    Only CG specs have a distributed implementation today; the stochastic solvers'
-    row gathers are served by the elastic path (train/elastic.py) instead.
+    ``x`` should be row-sharded over ``data_axes`` (see
+    :func:`shard_training_rows`); ``b`` (and ``x0``/``delta``) are replicated.
+    Any registered SolverSpec works — stochastic specs need ``key=`` exactly as
+    in the single-host ``solve()`` — and the spec's ``backend`` field pins the
+    per-shard kernel backend. Returns the full :class:`SolveResult` (solution,
+    residuals, iteration and matvec counts).
     """
-    s = as_spec(spec)
-    if not isinstance(s, CG):
-        raise NotImplementedError(
-            f"distributed solves currently support CG specs only; got {s.name!r}"
-        )
-    if s.precond is not None:
-        raise NotImplementedError(
-            "preconditioning is not supported in the distributed path yet"
-        )
-    return distributed_cg(
-        params, x, b, mesh, data_axes, max_iters=s.max_iters, tol=s.tol
+    axes = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+    op = ShardedGram(
+        x=x, params=params, mesh=mesh, data_axes=axes, backend=backend,
+        row_chunk=row_chunk,
     )
+    return solve(op, b, spec, key=key, x0=x0, delta=delta)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from .kernels_fn import KernelParams, gram, matvec
+from .operators import NormalEq  # noqa: F401 (re-export: NormalEq lives in operators)
 from .rff import PriorSamples, sample_prior
 from .solvers.base import SolveResult
 from .solvers.spec import CG, SpecLike, as_spec, solve
@@ -40,32 +41,6 @@ class InducingPosterior:
     def __call__(self, xs: jax.Array) -> jax.Array:
         kxz = gram(self.params, xs, self.z)
         return self.prior(xs) + kxz @ (self.v_mean[:, None] - self.alpha)
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class NormalEq:
-    """The m×m operator K_ZX K_XZ + σ² K_ZZ, touched only through matvecs.
-
-    A matvec-only operator (no kernel-row gathers), so only CG-family specs can
-    drive it through ``solve()`` — the stochastic solvers need ``op.rows``.
-    """
-
-    x: jax.Array  # (n, d) training inputs
-    z: jax.Array  # (m, d) inducing inputs
-    params: KernelParams
-    row_chunk: int = dataclasses.field(default=4096, metadata=dict(static=True))
-
-    @property
-    def noise(self) -> jax.Array:
-        return self.params.noise
-
-    def mv(self, u: jax.Array) -> jax.Array:
-        """(K_ZX K_XZ + σ² K_ZZ) @ u without materialising K_XZ (n×m)."""
-        kxz_u = matvec(self.params, self.x, u, z=self.z, row_chunk=self.row_chunk)
-        kzx_kxz_u = matvec(self.params, self.z, kxz_u, z=self.x, row_chunk=self.row_chunk)
-        kzz_u = matvec(self.params, self.z, u, z=self.z, row_chunk=self.row_chunk)
-        return kzx_kxz_u + self.params.noise * kzz_u
 
 
 def inducing_posterior(

@@ -11,9 +11,13 @@ which destroys factorised decompositions but PRESERVES fast matvecs:
 
     (K_obs + σ²I) v = P_M vec(K₁ V K₂ᵀ) + σ² v,   V = unvec(P_Mᵀ v)
 
-costing O(n₁n₂(n₁+n₂)) instead of O(n_obs²). Iterative solvers (any of core/solvers)
-plus pathwise conditioning then give posterior samples: prior samples on the full grid
-are cheap via the Kronecker Cholesky (L₁ ⊗ L₂) w (Eq. 2.73, §6.2.4) — no RFF needed.
+costing O(n₁n₂(n₁+n₂)) instead of O(n_obs²). The operator enters the solver layer
+as :class:`~repro.core.operators.LatentKroneckerOp` — ``lkgp_posterior`` routes its
+batched system through the unified ``solve()`` entry point, so any CG-family
+SolverSpec (preconditioning aside), warm starts, backend pinning and matvec
+accounting apply to the structured matvec unchanged. Pathwise conditioning then
+gives posterior samples: prior samples on the full grid are cheap via the
+Kronecker Cholesky (L₁ ⊗ L₂) w (Eq. 2.73, §6.2.4) — no RFF needed.
 
 Break-even (§6.2.6): LKGP matvec beats the direct O(n_obs²) = (ρ n₁n₂)² matvec when
 the observed density ρ = n_obs/(n₁n₂) exceeds ρ* = sqrt((n₁+n₂)/(n₁n₂)); below that,
@@ -23,13 +27,15 @@ and benchmarks/bench_kronecker.py verifies it against measured FLOPs.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from .kernels_fn import KernelParams, gram
+from .operators import LatentKroneckerOp
+from .solvers.base import SolveResult
+from .solvers.spec import CG, SpecLike, as_spec, solve
 
 
 @jax.tree_util.register_dataclass
@@ -92,56 +98,36 @@ class LatentKroneckerGP:
         return out[..., 0] if squeeze else out
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
-def lkgp_solve_cg(
-    gp: LatentKroneckerGP, b: jax.Array, max_iters: int = 500, tol: float = 1e-4
-) -> jax.Array:
-    """CG on the LKGP operator (same recursion as solvers/cg but structured matvec)."""
-    b2 = b[:, None] if b.ndim == 1 else b
-    v = jnp.zeros_like(b2)
-    r = b2 - gp.mv(v)
-    p = r
-    rz = jnp.sum(r * r, axis=0)
-    bn = jnp.maximum(jnp.linalg.norm(b2, axis=0), 1e-30)
-
-    def cond(s):
-        _, r, _, t, _ = s
-        return jnp.logical_and(t < max_iters, jnp.any(jnp.linalg.norm(r, axis=0) / bn > tol))
-
-    def body(s):
-        v, r, p, t, rz = s
-        ap = gp.mv(p)
-        a = rz / jnp.maximum(jnp.sum(p * ap, axis=0), 1e-30)
-        v = v + a[None] * p
-        r = r - a[None] * ap
-        rz2 = jnp.sum(r * r, axis=0)
-        p = r + (rz2 / jnp.maximum(rz, 1e-30))[None] * p
-        return v, r, p, t + 1, rz2
-
-    v, *_ = jax.lax.while_loop(cond, body, (v, r, p, 0, rz))
-    return v[:, 0] if b.ndim == 1 else v
-
-
 def lkgp_posterior(
     gp: LatentKroneckerGP,
     y_obs: jax.Array,
     key: jax.Array,
     *,
     num_samples: int = 8,
-    max_iters: int = 500,
+    max_iters: Optional[int] = None,
+    spec: Optional[SpecLike] = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Pathwise posterior on the FULL grid (§6.2.4).
+    """Pathwise posterior on the FULL grid (§6.2.4), solver-spec driven.
 
-    Returns (mean (n1,n2), samples (n1,n2,s)). One batched solve for
-    [y | f_obs + ε], then f_full + K_{grid,obs}(v − α).
+    Returns (mean (n1,n2), samples (n1,n2,s)). One batched ``solve()`` on the
+    :class:`~repro.core.operators.LatentKroneckerOp` for [y | f_obs + ε], then
+    f_full + K_{grid,obs}(v − α). ``spec`` must be a matvec-only (CG-family)
+    spec — the structured operator has no row-block capabilities — and defaults
+    to ``CG(max_iters=500, tol=1e-4)``. An explicit ``max_iters`` overrides the
+    spec's budget in both cases (a spec without that field raises).
     """
+    if spec is None:
+        s = CG(max_iters=500 if max_iters is None else max_iters, tol=1e-4)
+    else:
+        s = as_spec(spec) if max_iters is None else as_spec(spec, max_iters=max_iters)
     f_grid = gp.prior_sample_grid(key, num_samples)  # (n1, n2, s)
     f_obs = gp.project_down(f_grid)
     eps = jnp.sqrt(gp.noise) * jax.random.normal(
         jax.random.fold_in(key, 1), f_obs.shape, f_obs.dtype
     )
     rhs = jnp.concatenate([y_obs[:, None], f_obs + eps], axis=1)
-    sol = lkgp_solve_cg(gp, rhs, max_iters=max_iters)
+    res: SolveResult = solve(LatentKroneckerOp(gp=gp), rhs, s, key=key)
+    sol = res.solution
     v_mean, alpha = sol[:, :1], sol[:, 1:]
     mean = gp.cross_mv(v_mean)[..., 0]
     update = gp.cross_mv(v_mean - alpha)  # (n1, n2, s)

@@ -40,7 +40,7 @@ from ..kernels.ops import gram_mv
 from .kernels_fn import KernelParams
 from .rff import sample_prior
 from .solvers.base import Gram
-from .solvers.spec import SpecLike, coerce_spec, solve
+from .solvers.spec import SpecLike, as_spec, solve
 
 
 def _quad(
@@ -74,15 +74,14 @@ def mll_grad(
     estimator: str = "pathwise",  # "pathwise" | "hutchinson"
     spec: Optional[SpecLike] = None,
     x0: Optional[jax.Array] = None,
-    solver: Optional[Callable] = None,  # deprecated
-    **solver_kwargs,
+    **spec_overrides,
 ) -> MLLGradEstimate:
     """Estimated ∇_θ log p(y|θ) (ascent direction). θ in log space (KernelParams).
 
     Any registered ``SolverSpec`` (instance/class/name) runs the inner solves;
-    the legacy ``solver=fn, **kwargs`` form warns and is mapped to its spec.
+    extra keyword arguments are spec-field overrides.
     """
-    s = coerce_spec(spec, solver=solver, **solver_kwargs)
+    s = as_spec("cg" if spec is None else spec, **spec_overrides)
     backend = getattr(s, "backend", None) or "auto"
     op = Gram(x=x, params=params, backend=backend)
     n = x.shape[0]
@@ -154,11 +153,10 @@ def optimize_mll(
     num_probes: int = 8,
     spec: Optional[SpecLike] = None,
     callback: Optional[Callable[[int, MLLOptimState], None]] = None,
-    solver: Optional[Callable] = None,  # deprecated
-    **solver_kwargs,
+    **spec_overrides,
 ) -> MLLOptimState:
     """Outer loop: Adam ascent on θ with warm-started inner solves (Ch. 5)."""
-    s = coerce_spec(spec, solver=solver, **solver_kwargs)
+    s = as_spec("cg" if spec is None else spec, **spec_overrides)
     zeros = jax.tree.map(jnp.zeros_like, params)
     st = MLLOptimState(params, zeros, zeros, None, 0, 0)
     for t in range(num_steps):

@@ -1,0 +1,521 @@
+"""One operator abstraction from Gram to Kronecker to sharded: ``LinearOperator``.
+
+Every expensive GP computation in this library reduces to solving
+
+    (K + σ²I) V = B
+
+against a positive-definite coefficient matrix that is only ever *touched through
+matvecs*.  This module makes "the matrix" a first-class protocol so the solver
+layer (core/solvers) is operator-agnostic: dense-free Gram matvecs, inducing-point
+normal equations, latent-Kronecker structure (Ch. 6) and mesh-sharded block-row
+operators all flow through the same ``solve()`` entry point with the same
+SolverSpec benefits (preconditioning, warm starts, matvec accounting, backend
+pinning, JSON-drivable configs).
+
+The protocol (see :class:`LinearOperator`):
+
+required
+    ``shape``        — ``(n, n)`` of the square system matrix A;
+    ``mv(v)``        — ``A @ v`` for ``v`` of shape ``(n,)`` or ``(n, s)``;
+    ``diag_part()``  — ``diag(A)`` (Jacobi scaling, diagnostics);
+    ``noise``        — the σ² of the ``K + σ²I`` split (δ-channel folding).
+
+optional capabilities (declared by *defining the method*; absence is detected by
+``hasattr`` — the base class deliberately does not stub them out)
+    ``rows_mv(idx, u)``    — ``K[idx, :] @ u`` (SGD/SDD data-fit primitive);
+    ``rows_t_mv(idx, u)``  — ``K[idx, :]ᵀ @ u`` (SGD regulariser pullback, AP
+                             residual update);
+    ``block_at(idx)``      — ``K[idx, idx]`` principal block (AP's exact
+                             sub-solve);
+    ``precond_factor(rank, key=, method=)`` — an ``(n, m)`` low-rank factor L
+                             with ``K ≈ L Lᵀ`` (Nyström / pivoted-Cholesky
+                             preconditioner construction).
+
+Solver specs declare which capabilities they consume (``SolverSpec.needs``) and
+``solve()`` verifies them up front — a spec requesting row blocks from a
+matvec-only operator raises a :class:`TypeError` naming the missing capability
+instead of an ``AttributeError`` deep inside a scan.
+
+All concrete operators are frozen, pytree-registered dataclasses: hyperparameters
+and inputs are traced leaves (same treedef + shapes ⇒ compiled solves are
+reused), while meshes, backends and chunk sizes are static fields.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..kernels.ops import gram_mv, gram_rows_matvec
+from .kernels_fn import KernelParams, gram, gram_diag, matvec
+
+if TYPE_CHECKING:  # runtime import would cycle: kronecker → solvers.spec → here
+    from .kronecker import LatentKroneckerGP
+
+
+# ---------------------------------------------------------------------------
+# Capability dispatch
+# ---------------------------------------------------------------------------
+
+#: Capabilities beyond the required ``mv``/``shape``/``diag_part``/``noise``.
+OPTIONAL_CAPABILITIES = ("rows_mv", "rows_t_mv", "block_at", "precond_factor")
+
+
+def supports(op, *caps: str) -> bool:
+    """True iff ``op`` provides every named capability (method or attribute)."""
+    return all(callable(getattr(op, c, None)) or hasattr(op, c) for c in caps)
+
+
+def capabilities(op) -> tuple:
+    """The optional capabilities ``op`` provides (sorted, for error messages)."""
+    return tuple(c for c in OPTIONAL_CAPABILITIES if supports(op, c))
+
+
+def require_capabilities(op, caps, *, consumer: str) -> None:
+    """Raise a clear ``TypeError`` if ``op`` lacks any of ``caps``.
+
+    ``consumer`` names who is asking (a solver spec, a preconditioner build) so
+    the error reads as a capability mismatch, not a missing attribute.
+    """
+    missing = tuple(c for c in caps if not supports(op, c))
+    if missing:
+        have = capabilities(op)
+        raise TypeError(
+            f"{consumer} needs operator capabilities {missing} that "
+            f"{type(op).__name__} does not provide (optional capabilities it "
+            f"has: {have or '()'}). Matvec-only operators support CG-family "
+            f"specs; SGD/SDD/AP need row-block access (rows_mv/rows_t_mv/"
+            f"block_at)."
+        )
+
+
+class LinearOperator:
+    """Protocol base for the square operators ``solve()`` accepts.
+
+    Subclasses are frozen ``@jax.tree_util.register_dataclass`` dataclasses.
+    They must implement ``shape``, ``mv``, ``diag_part`` and ``noise``; the
+    optional capabilities in :data:`OPTIONAL_CAPABILITIES` are declared simply
+    by defining the method (absence is how ``solve()`` knows to refuse a spec
+    that needs them). Duck-typed operators that never subclass this also work —
+    the protocol is structural, the base class is documentation plus default
+    errors.
+    """
+
+    @property
+    def shape(self) -> tuple:
+        raise NotImplementedError(f"{type(self).__name__} must define shape")
+
+    @property
+    def noise(self) -> jax.Array:
+        raise NotImplementedError(f"{type(self).__name__} must define noise")
+
+    def mv(self, v: jax.Array) -> jax.Array:
+        raise NotImplementedError(f"{type(self).__name__} must define mv")
+
+    def diag_part(self) -> jax.Array:
+        raise NotImplementedError(f"{type(self).__name__} must define diag_part")
+
+    def dense(self) -> jax.Array:
+        """Materialised A — O(n²); reference/tests only. Default: n matvecs."""
+        n = self.shape[0]
+        return self.mv(jnp.eye(n))
+
+
+# ---------------------------------------------------------------------------
+# Runtime (post-compilation) matvec counters, bumped via jax.debug.callback from
+# instrumented operators — unlike trace-time counts these reflect what the
+# hardware actually executed, including every while_loop/scan iteration.
+# ---------------------------------------------------------------------------
+
+_RUNTIME_COUNTS = {"mv": 0, "rows": 0}
+
+
+def reset_matvec_counts() -> None:
+    for k in _RUNTIME_COUNTS:
+        _RUNTIME_COUNTS[k] = 0
+
+
+def matvec_counts() -> dict:
+    """{"mv": full operator matvecs, "rows": row-block matvecs} executed by
+    instrumented operators since the last reset."""
+    return dict(_RUNTIME_COUNTS)
+
+
+def _bump_mv(_):
+    _RUNTIME_COUNTS["mv"] += 1
+
+
+def _bump_rows(_):
+    _RUNTIME_COUNTS["rows"] += 1
+
+
+class _InstrumentedOp(LinearOperator):
+    """Shared ``instrument=True`` plumbing (host-callback matvec counters)."""
+
+    def _count(self, fn, out: jax.Array) -> None:
+        if self.instrument:
+            # operand-dependent so the callback stays inside loop bodies
+            jax.debug.callback(fn, out.ravel()[0])
+
+
+# ---------------------------------------------------------------------------
+# Gram — the workhorse (K(X,X) + σ²I) operator
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Gram(_InstrumentedOp):
+    """The linear operator A = K(X,X) + σ² I, touched only through matvecs.
+
+    Implements the full capability set: fused row-block matvecs (``rows_mv``/
+    ``rows_t_mv``/``block_at``) back the stochastic solvers, and
+    ``precond_factor`` backs Nyström / pivoted-Cholesky preconditioner specs.
+
+    ``backend`` selects the matvec implementation (see kernels/ops.py):
+    ``"auto"`` (fused Pallas on TPU, chunked JAX elsewhere), ``"pallas"``,
+    ``"chunked"``, or ``"dense"``. Solver specs can pin it per solve
+    (``CG(backend="pallas")``). ``instrument=True`` counts executed matvecs via
+    ``matvec_counts()`` (tests/benchmarks; adds a host callback per matvec).
+    """
+
+    x: jax.Array  # (n, d) training inputs
+    params: KernelParams
+    row_chunk: int = dataclasses.field(default=2048, metadata=dict(static=True))
+    backend: str = dataclasses.field(default="auto", metadata=dict(static=True))
+    block: int = dataclasses.field(default=256, metadata=dict(static=True))
+    instrument: bool = dataclasses.field(default=False, metadata=dict(static=True))
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def shape(self) -> tuple:
+        return (self.x.shape[0], self.x.shape[0])
+
+    @property
+    def noise(self) -> jax.Array:
+        return self.params.noise
+
+    def mv(self, v: jax.Array) -> jax.Array:
+        """(K + σ²I) @ v without materialising K. v: (n,) or (n,s)."""
+        out = gram_mv(
+            self.params, self.x, v, jitter=self.noise, backend=self.backend,
+            block=self.block, row_chunk=self.row_chunk,
+        )
+        self._count(_bump_mv, out)
+        return out
+
+    def mv_k(self, v: jax.Array) -> jax.Array:
+        """K @ v (no jitter)."""
+        out = gram_mv(
+            self.params, self.x, v, backend=self.backend, block=self.block,
+            row_chunk=self.row_chunk,
+        )
+        self._count(_bump_mv, out)
+        return out
+
+    def diag_part(self) -> jax.Array:
+        """diag(K + σ²I) — (n,)."""
+        return gram_diag(self.params, self.x) + self.noise
+
+    def rows_mv(self, idx: jax.Array, u: jax.Array) -> jax.Array:
+        """K[idx, :] @ u — fused row-block matvec, the panel never materialised.
+
+        The SGD/SDD/AP data-fit primitive: O(|idx|·d) gathered inputs instead of
+        an O(|idx|·n) HBM panel. u: (n,) or (n, s) → (|idx|, s-like).
+        """
+        out = gram_rows_matvec(
+            self.params, self.x, idx, u, backend=self.backend, block=self.block,
+            row_chunk=self.row_chunk,
+        )
+        self._count(_bump_rows, out)
+        return out
+
+    def rows_t_mv(self, idx: jax.Array, u: jax.Array) -> jax.Array:
+        """K[idx, :]ᵀ @ u = K[:, idx] @ u — transposed fused row-block matvec.
+        u: (|idx|,) or (|idx|, s) → (n, s-like)."""
+        out = gram_rows_matvec(
+            self.params, self.x, idx, u, transpose=True, backend=self.backend,
+            block=self.block, row_chunk=self.row_chunk,
+        )
+        self._count(_bump_rows, out)
+        return out
+
+    def block_at(self, idx: jax.Array) -> jax.Array:
+        """K[idx, idx] — the |idx|×|idx| principal block (AP's exact sub-solve)."""
+        return gram(self.params, self.x[idx], self.x[idx])
+
+    def rows(self, idx: jax.Array) -> jax.Array:
+        """K[idx, :] materialised — O(|idx|·n) memory. Legacy primitive; solvers
+        use the fused ``rows_mv``/``rows_t_mv``/``block_at`` instead."""
+        return gram(self.params, self.x[idx], self.x)
+
+    def precond_factor(
+        self, rank: int, key: Optional[jax.Array] = None, method: str = "nystrom"
+    ) -> jax.Array:
+        """(n, rank) factor L with K ≈ L Lᵀ for Woodbury preconditioning."""
+        from .precond import low_rank_factor  # deferred: precond imports operators
+
+        return low_rank_factor(self.params, self.x, rank, key=key, method=method)
+
+    def dense(self) -> jax.Array:
+        """Materialised K + σ²I (tests / small-n reference only)."""
+        return gram(self.params, self.x) + self.noise * jnp.eye(self.n, dtype=self.x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# NormalEq — inducing-point normal equations (§3.2.3), matvec-only
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class NormalEq(LinearOperator):
+    """The m×m operator K_ZX K_XZ + σ² K_ZZ, touched only through matvecs.
+
+    A matvec-only operator (no kernel-row capabilities), so only CG-family specs
+    can drive it through ``solve()`` — the stochastic solvers raise a capability
+    error. Used by ``inducing_posterior`` (Eqs. 3.23/3.24) and the iterative
+    SGPR path (``svgp.sgpr_iterative``): note (K_ZX K_XZ + σ²K_ZZ) = σ²·B with
+    B the Titsias matrix K_ZZ + σ⁻²K_ZX K_XZ.
+
+    ``ridge`` adds ridge·I to the operator (a traced leaf, so changing it does
+    not retrace solves) — the iterative SGPR path uses it to reproduce the dense
+    path's fp32-stabilising ridge exactly, since the two would otherwise
+    converge to visibly different solutions in the κ(K_XZ)²-amplified
+    directions.
+    """
+
+    x: jax.Array  # (n, d) training inputs
+    z: jax.Array  # (m, d) inducing inputs
+    params: KernelParams
+    ridge: jax.Array = 0.0  # additive ridge·I (traced; 0 = the pure operator)
+    row_chunk: int = dataclasses.field(default=4096, metadata=dict(static=True))
+
+    @property
+    def shape(self) -> tuple:
+        return (self.z.shape[0], self.z.shape[0])
+
+    @property
+    def noise(self) -> jax.Array:
+        return self.params.noise
+
+    def mv(self, u: jax.Array) -> jax.Array:
+        """(K_ZX K_XZ + σ² K_ZZ + ridge·I) @ u without materialising K_XZ (n×m)."""
+        kxz_u = matvec(self.params, self.x, u, z=self.z, row_chunk=self.row_chunk)
+        kzx_kxz_u = matvec(self.params, self.z, kxz_u, z=self.x, row_chunk=self.row_chunk)
+        kzz_u = matvec(self.params, self.z, u, z=self.z, row_chunk=self.row_chunk)
+        return kzx_kxz_u + self.params.noise * kzz_u + self.ridge * u
+
+    def diag_part(self) -> jax.Array:
+        """diag(K_ZX K_XZ) + σ²·diag(K_ZZ) + ridge, in row chunks of X."""
+        n = self.x.shape[0]
+        chunk = min(self.row_chunk, n)
+        pad = (-n) % chunk
+        xp = jnp.pad(self.x, ((0, pad), (0, 0)))
+        rows = xp.reshape(-1, chunk, self.x.shape[1])
+
+        def col_sq(xc):  # Σ_i k(x_i, z_j)² over the chunk (padded rows: see below)
+            return jnp.sum(gram(self.params, xc, self.z) ** 2, axis=0)
+
+        sq = jnp.sum(jax.lax.map(col_sq, rows), axis=0)
+        if pad:  # padded (zero) rows contribute k(0, z_j)² — subtract them
+            sq = sq - pad * gram(self.params, jnp.zeros((1, self.x.shape[1])), self.z)[0] ** 2
+        return sq + self.params.noise * gram_diag(self.params, self.z) + self.ridge
+
+
+# ---------------------------------------------------------------------------
+# LatentKroneckerOp — Ch. 6 structured operator
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LatentKroneckerOp(_InstrumentedOp):
+    """(P_M (K₁ ⊗ K₂) P_Mᵀ + σ²I) as a LinearOperator (§6.2.2–6.2.3).
+
+    Wraps a :class:`~repro.core.kronecker.LatentKroneckerGP`: the matvec costs
+    O(n₁n₂(n₁+n₂)) through the latent Kronecker identity instead of O(n_obs²),
+    and the whole solver layer (CG warm starts, matvec accounting, spec configs)
+    applies unchanged. Matvec-only: row gathers of the projected product kernel
+    would each cost a full structured matvec, so SGD/SDD/AP specs are refused
+    with a capability error.
+    """
+
+    gp: "LatentKroneckerGP"
+    instrument: bool = dataclasses.field(default=False, metadata=dict(static=True))
+
+    @property
+    def shape(self) -> tuple:
+        n_obs = self.gp.obs_idx.shape[0]
+        return (n_obs, n_obs)
+
+    @property
+    def noise(self) -> jax.Array:
+        return self.gp.noise
+
+    def mv(self, v: jax.Array) -> jax.Array:
+        """(K_obs + σ²I) @ v via the latent Kronecker matvec (§6.2.3)."""
+        out = self.gp.mv(v)
+        self._count(_bump_mv, out)
+        return out
+
+    def diag_part(self) -> jax.Array:
+        """diag(K_obs) + σ² = d₁[i₁]·d₂[i₂] at each observed grid index + σ²."""
+        n1, n2 = self.gp.shape
+        d1 = gram_diag(self.gp.params1, self.gp.grid1)
+        d2 = gram_diag(self.gp.params2, self.gp.grid2)
+        i1 = self.gp.obs_idx // n2
+        i2 = self.gp.obs_idx % n2
+        return d1[i1] * d2[i2] + self.gp.noise
+
+
+# ---------------------------------------------------------------------------
+# ShardedGram — mesh-aware block-row Gram operator
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedGram(_InstrumentedOp):
+    """(K(X,X) + σ²I) with training rows sharded over mesh ``data_axes``.
+
+    A block-row distribution of K: each device computes its K-block matvec
+    without materialising the block — the local contraction runs through the
+    same backend dispatch as :class:`Gram` (``pallas``/``chunked``/``dense``),
+    so the fused Pallas kernel is threaded through the shards — and results are
+    combined with ``all_gather``/``psum`` collectives. Vectors (RHS batches,
+    iterates) are replicated.
+
+    Implements the full capability set, including the *sharded row-gather*
+    primitives that let SGD/SDD/AP specs run distributed: ``rows_mv`` psum-
+    reduces per-device column-block contributions K(x[idx], x_local) @ u_local,
+    ``rows_t_mv`` all-gathers per-device row blocks, and ``block_at`` gathers
+    the |idx|×|idx| principal block from the global (sharded) inputs.
+
+    Memory per device: O(n_local · chunk) — the paper's linear-memory claim,
+    per device.
+    """
+
+    x: jax.Array  # (n, d) training inputs, row-sharded over data_axes
+    params: KernelParams
+    mesh: Mesh = dataclasses.field(metadata=dict(static=True))
+    data_axes: tuple = dataclasses.field(default=("data",), metadata=dict(static=True))
+    row_chunk: int = dataclasses.field(default=2048, metadata=dict(static=True))
+    backend: str = dataclasses.field(default="auto", metadata=dict(static=True))
+    block: int = dataclasses.field(default=256, metadata=dict(static=True))
+    instrument: bool = dataclasses.field(default=False, metadata=dict(static=True))
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def shape(self) -> tuple:
+        return (self.x.shape[0], self.x.shape[0])
+
+    @property
+    def noise(self) -> jax.Array:
+        return self.params.noise
+
+    def _local_mv(self, x_local, x_other, v):
+        """K(x_local, x_other) @ v through the backend dispatch (no jitter)."""
+        return gram_mv(
+            self.params, x_local, v, z=x_other, backend=self.backend,
+            block=self.block, row_chunk=self.row_chunk,
+        )
+
+    def mv(self, v: jax.Array) -> jax.Array:
+        """(K + σ²I) @ v: per-device block-row matvec + all_gather. v replicated."""
+        axes = self.data_axes
+        squeeze = v.ndim == 1
+        v2 = v[:, None] if squeeze else v
+
+        def body(x_local, v_all):
+            i = jax.lax.axis_index(axes)
+            n_local = x_local.shape[0]
+            x_all = jax.lax.all_gather(x_local, axes, tiled=True)
+            out = self._local_mv(x_local, x_all, v_all)
+            v_local = jax.lax.dynamic_slice_in_dim(v_all, i * n_local, n_local, axis=0)
+            out = out + self.params.noise * v_local
+            return jax.lax.all_gather(out, axes, tiled=True)
+
+        out = shard_map(
+            body, mesh=self.mesh, in_specs=(P(axes, None), P(None, None)),
+            out_specs=P(None, None), check_rep=False,
+        )(self.x, v2)
+        self._count(_bump_mv, out)
+        return out[:, 0] if squeeze else out
+
+    def rows_mv(self, idx: jax.Array, u: jax.Array) -> jax.Array:
+        """K[idx, :] @ u — sharded row-gather: each device contracts its column
+        block K(x[idx], x_local) @ u_local; a psum over the data axes reduces.
+        idx and u are replicated; output is replicated (|idx|, s-like)."""
+        axes = self.data_axes
+        squeeze = u.ndim == 1
+        u2 = u[:, None] if squeeze else u
+
+        def body(x_local, idx_rep, u_all):
+            i = jax.lax.axis_index(axes)
+            n_local = x_local.shape[0]
+            x_all = jax.lax.all_gather(x_local, axes, tiled=True)
+            xi = x_all[idx_rep]  # (|idx|, d)
+            u_local = jax.lax.dynamic_slice_in_dim(u_all, i * n_local, n_local, axis=0)
+            part = self._local_mv(xi, x_local, u_local)
+            return jax.lax.psum(part, axes)
+
+        out = shard_map(
+            body, mesh=self.mesh, in_specs=(P(axes, None), P(None), P(None, None)),
+            out_specs=P(None, None), check_rep=False,
+        )(self.x, idx, u2)
+        self._count(_bump_rows, out)
+        return out[:, 0] if squeeze else out
+
+    def rows_t_mv(self, idx: jax.Array, u: jax.Array) -> jax.Array:
+        """K[idx, :]ᵀ @ u = K[:, idx] @ u — each device computes its row block
+        K(x_local, x[idx]) @ u and the blocks are all-gathered. → (n, s-like)."""
+        axes = self.data_axes
+        squeeze = u.ndim == 1
+        u2 = u[:, None] if squeeze else u
+
+        def body(x_local, idx_rep, u_rep):
+            x_all = jax.lax.all_gather(x_local, axes, tiled=True)
+            xi = x_all[idx_rep]
+            out_local = self._local_mv(x_local, xi, u_rep)
+            return jax.lax.all_gather(out_local, axes, tiled=True)
+
+        out = shard_map(
+            body, mesh=self.mesh, in_specs=(P(axes, None), P(None), P(None, None)),
+            out_specs=P(None, None), check_rep=False,
+        )(self.x, idx, u2)
+        self._count(_bump_rows, out)
+        return out[:, 0] if squeeze else out
+
+    def block_at(self, idx: jax.Array) -> jax.Array:
+        """K[idx, idx] — gathered from the global (sharded) inputs; the |idx|×d
+        gather and |idx|² block are small and land replicated."""
+        xi = jnp.take(self.x, idx, axis=0)
+        return gram(self.params, xi, xi)
+
+    def diag_part(self) -> jax.Array:
+        return gram_diag(self.params, self.x) + self.noise
+
+    def precond_factor(
+        self, rank: int, key: Optional[jax.Array] = None, method: str = "nystrom"
+    ) -> jax.Array:
+        """(n, rank) factor for Woodbury preconditioning; computed under global
+        sharding semantics (the n×rank factor is the preconditioner's memory
+        footprint either way)."""
+        from .precond import low_rank_factor  # deferred: precond imports operators
+
+        return low_rank_factor(self.params, self.x, rank, key=key, method=method)
+
+    def dense(self) -> jax.Array:
+        """Materialised K + σ²I (tests / small-n reference only)."""
+        return gram(self.params, self.x) + self.noise * jnp.eye(self.n, dtype=self.x.dtype)

@@ -16,7 +16,7 @@ tractable (§3.3.2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +25,7 @@ from ..kernels.ops import gram_mv
 from .kernels_fn import KernelParams
 from .rff import PriorSamples, sample_prior
 from .solvers.base import Gram, SolveResult
-from .solvers.spec import SpecLike, coerce_spec, solve
+from .solvers.spec import SpecLike, as_spec, solve
 
 
 @jax.tree_util.register_dataclass
@@ -96,16 +96,15 @@ def posterior_functions(
     num_features: int = 2048,
     spec: Optional[SpecLike] = None,
     x0: Optional[jax.Array] = None,
-    solver: Optional[Callable[..., SolveResult]] = None,  # deprecated
-    **solver_kwargs,
+    **spec_overrides,
 ) -> PosteriorFunctions:
     """End-to-end pathwise posterior: RFF prior + one batched iterative solve.
 
     ``spec`` is any registered :class:`~repro.core.solvers.spec.SolverSpec`
-    (instance, class, or name like ``"sdd"``); defaults to CG. The legacy
-    ``solver=fn, **kwargs`` form still works but emits a ``DeprecationWarning``.
+    (instance, class, or name like ``"sdd"``); defaults to CG. Extra keyword
+    arguments are spec-field overrides (``spec="cg", max_iters=50``).
     """
-    s = coerce_spec(spec, solver=solver, **solver_kwargs)
+    s = as_spec("cg" if spec is None else spec, **spec_overrides)
     backend = getattr(s, "backend", None) or "auto"
     kp, ke, ks = jax.random.split(key, 3)
     op = Gram(x=x, params=params, backend=backend)

@@ -6,29 +6,41 @@ O(n·m) per application:
   * ``nystrom``: uniform-subset Nyström (TPU default — one m×m eig + matmuls).
   * ``pivoted_cholesky``: greedy diagonal pivoting (paper fidelity; sequential,
     latency-bound — kept for benchmark parity, see DESIGN.md §2).
+
+Factor construction is an *operator capability*: preconditioner specs call
+``op.precond_factor(rank, key=, method=)`` (see core/operators.py), which routes
+here via :func:`low_rank_factor` — so any operator that can produce a low-rank
+factor of its K part (``Gram``, ``ShardedGram``) is preconditionable, and
+matvec-only operators raise a clear capability error instead of a type check on
+``Gram``.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from .kernels_fn import KernelParams, gram, gram_diag
+from .operators import LinearOperator
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class WoodburyPrecond:
-    """r ↦ (L Lᵀ + σ²I)⁻¹ r as a *pytree* of arrays, not a closure.
+class WoodburyPrecond(LinearOperator):
+    """The surrogate M = L Lᵀ + σ²I as a *pytree* LinearOperator, not a closure.
 
-    Being a registered pytree means a preconditioner can cross ``jax.jit``
-    boundaries as a traced argument: rebuilding one of the same rank (e.g. after
-    a hyperparameter step) produces the same treedef and shapes, so the compiled
-    CG solve is reused instead of retraced — the seed's closure-as-static-arg
-    design recompiled the solve on every rebuild.
+    Protocol convention: ``mv`` is the FORWARD apply M @ v (every operator's
+    ``mv`` is A @ v — ``solve(woodbury, b, "cg")`` legitimately solves MV = b),
+    while ``__call__`` is the preconditioner-apply convention r ↦ M⁻¹r (the
+    Woodbury solve), which is what CG consumes. Being a registered pytree means
+    a preconditioner can cross ``jax.jit`` boundaries as a traced argument:
+    rebuilding one of the same rank (e.g. after a hyperparameter step) produces
+    the same treedef and shapes, so the compiled CG solve is reused instead of
+    retraced — the seed's closure-as-static-arg design recompiled the solve on
+    every rebuild.
     """
 
     l: jax.Array  # (n, m) low-rank factor, K ≈ L Lᵀ
@@ -39,7 +51,24 @@ class WoodburyPrecond:
     def rank(self) -> int:
         return self.l.shape[1]
 
+    @property
+    def shape(self) -> tuple:
+        return (self.l.shape[0], self.l.shape[0])
+
+    @property
+    def noise(self) -> jax.Array:
+        return self.sigma2
+
+    def mv(self, v: jax.Array) -> jax.Array:
+        """M @ v = L(Lᵀv) + σ²v — the protocol's forward apply."""
+        return self.l @ (self.l.T @ v) + self.sigma2 * v
+
+    def diag_part(self) -> jax.Array:
+        """diag(M) = Σ_j L² + σ²."""
+        return jnp.sum(self.l * self.l, axis=1) + self.sigma2
+
     def __call__(self, r: jax.Array) -> jax.Array:
+        """M⁻¹ @ r via Woodbury: (r − L (LᵀL + σ²I)⁻¹ Lᵀ r) / σ²."""
         sol = jax.scipy.linalg.cho_solve((self.chol, True), self.l.T @ r)
         return (r - self.l @ sol) / self.sigma2
 
@@ -51,16 +80,27 @@ def _woodbury_apply(l: jax.Array, sigma2: jax.Array) -> WoodburyPrecond:
     return WoodburyPrecond(l=l, chol=jnp.linalg.cholesky(inner), sigma2=jnp.asarray(sigma2))
 
 
-def nystrom_preconditioner(
+def woodbury_from_factor(l: jax.Array, sigma2) -> WoodburyPrecond:
+    """Public alias: (n, m) factor L with K ≈ LLᵀ → the (LLᵀ + σ²I)⁻¹ apply."""
+    return _woodbury_apply(l, sigma2)
+
+
+def nystrom_factor(
     params: KernelParams, x: jax.Array, key: jax.Array, rank: int = 100
-) -> Callable[[jax.Array], jax.Array]:
+) -> jax.Array:
+    """(n, rank) Nyström factor L = K_xz K_zz^{-1/2} from a uniform subset."""
     n = x.shape[0]
     idx = jax.random.choice(key, n, (min(rank, n),), replace=False)
     z = x[idx]
     kzz = gram(params, z) + 1e-6 * jnp.eye(z.shape[0], dtype=x.dtype)
     kxz = gram(params, x, z)
-    l = kxz @ jnp.linalg.cholesky(jnp.linalg.inv(kzz))  # K_xz K_zz^{-1/2}
-    return _woodbury_apply(l, params.noise)
+    return kxz @ jnp.linalg.cholesky(jnp.linalg.inv(kzz))
+
+
+def nystrom_preconditioner(
+    params: KernelParams, x: jax.Array, key: jax.Array, rank: int = 100
+) -> Callable[[jax.Array], jax.Array]:
+    return _woodbury_apply(nystrom_factor(params, x, key, rank), params.noise)
 
 
 @partial(jax.jit, static_argnames=("rank",))
@@ -91,3 +131,27 @@ def pivoted_cholesky_preconditioner(
 ) -> Callable[[jax.Array], jax.Array]:
     l = _pivoted_cholesky_factor(params, x, rank)
     return _woodbury_apply(l, params.noise)
+
+
+PRECOND_FACTOR_METHODS = ("nystrom", "pivoted_cholesky")
+
+
+def low_rank_factor(
+    params: KernelParams,
+    x: jax.Array,
+    rank: int,
+    *,
+    key: Optional[jax.Array] = None,
+    method: str = "nystrom",
+) -> jax.Array:
+    """(n, rank) factor L with K(x, x) ≈ L Lᵀ — the ``precond_factor`` backend
+    shared by ``Gram`` and ``ShardedGram``."""
+    if method == "nystrom":
+        key = jax.random.PRNGKey(0) if key is None else key
+        return nystrom_factor(params, x, key, rank)
+    if method == "pivoted_cholesky":
+        return _pivoted_cholesky_factor(params, x, rank)
+    raise ValueError(
+        f"unknown precond factor method {method!r}; expected one of "
+        f"{PRECOND_FACTOR_METHODS}"
+    )

@@ -2,14 +2,19 @@
 
 Everything the paper does reduces to solving, for a batch of right-hand sides B,
 
-    (K_XX + σ² I) V = B,      B = [y − μ | f_X + ε (s samples) | z_1.. z_p (probes)]
+    A V = B,      B = [y − μ | f_X + ε (s samples) | z_1.. z_p (probes)]
 
 with a positive-definite coefficient matrix that is only ever *touched through
-matvecs*. ``Gram`` wraps the training inputs + hyperparameters and provides
-backend-dispatched matvecs (fused Pallas / chunked JAX / dense — see
-kernels/ops.py) and fused row-block matvecs; every solver (cg/sgd/sdd/ap)
-consumes this interface, takes an optional warm-start V₀ (Ch. 5 §5.3), and
-returns a ``SolveResult`` that reports how many full Gram matvecs it spent.
+matvecs*. Solvers consume the :class:`~repro.core.operators.LinearOperator`
+protocol (``mv``/``shape``/``diag_part``/``noise`` plus the optional row-block
+capabilities ``rows_mv``/``rows_t_mv``/``block_at``), so the same cg/sgd/sdd/ap
+code drives dense-free Gram operators, inducing-point normal equations, latent
+Kronecker structure, and mesh-sharded operators alike. Each solver takes an
+optional warm-start V₀ (Ch. 5 §5.3) and returns a ``SolveResult`` that reports
+how many full operator matvecs it spent.
+
+``Gram`` and the runtime matvec counters live in core/operators.py and are
+re-exported here for backward compatibility.
 """
 from __future__ import annotations
 
@@ -19,120 +24,12 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from ...kernels.ops import gram_mv, gram_rows_matvec
-from ..kernels_fn import KernelParams, gram
-
-
-# Runtime (post-compilation) matvec counters, bumped via jax.debug.callback from
-# instrumented Gram operators — unlike trace-time counts these reflect what the
-# hardware actually executed, including every while_loop/scan iteration.
-_RUNTIME_COUNTS = {"mv": 0, "rows": 0}
-
-
-def reset_matvec_counts() -> None:
-    for k in _RUNTIME_COUNTS:
-        _RUNTIME_COUNTS[k] = 0
-
-
-def matvec_counts() -> dict:
-    """{"mv": full Gram matvecs, "rows": row-block matvecs} executed by
-    instrumented Gram operators since the last reset."""
-    return dict(_RUNTIME_COUNTS)
-
-
-def _bump_mv(_):
-    _RUNTIME_COUNTS["mv"] += 1
-
-
-def _bump_rows(_):
-    _RUNTIME_COUNTS["rows"] += 1
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class Gram:
-    """The linear operator A = K(X,X) + σ² I, touched only through matvecs.
-
-    ``backend`` selects the matvec implementation (see kernels/ops.py):
-    ``"auto"`` (fused Pallas on TPU, chunked JAX elsewhere), ``"pallas"``,
-    ``"chunked"``, or ``"dense"``. Solver specs can pin it per solve
-    (``CG(backend="pallas")``). ``instrument=True`` counts executed matvecs via
-    ``matvec_counts()`` (tests/benchmarks; adds a host callback per matvec).
-    """
-
-    x: jax.Array  # (n, d) training inputs
-    params: KernelParams
-    row_chunk: int = dataclasses.field(default=2048, metadata=dict(static=True))
-    backend: str = dataclasses.field(default="auto", metadata=dict(static=True))
-    block: int = dataclasses.field(default=256, metadata=dict(static=True))
-    instrument: bool = dataclasses.field(default=False, metadata=dict(static=True))
-
-    @property
-    def n(self) -> int:
-        return self.x.shape[0]
-
-    @property
-    def noise(self) -> jax.Array:
-        return self.params.noise
-
-    def _count(self, fn, out: jax.Array) -> None:
-        if self.instrument:
-            # operand-dependent so the callback stays inside loop bodies
-            jax.debug.callback(fn, out.ravel()[0])
-
-    def mv(self, v: jax.Array) -> jax.Array:
-        """(K + σ²I) @ v without materialising K. v: (n,) or (n,s)."""
-        out = gram_mv(
-            self.params, self.x, v, jitter=self.noise, backend=self.backend,
-            block=self.block, row_chunk=self.row_chunk,
-        )
-        self._count(_bump_mv, out)
-        return out
-
-    def mv_k(self, v: jax.Array) -> jax.Array:
-        """K @ v (no jitter)."""
-        out = gram_mv(
-            self.params, self.x, v, backend=self.backend, block=self.block,
-            row_chunk=self.row_chunk,
-        )
-        self._count(_bump_mv, out)
-        return out
-
-    def rows_mv(self, idx: jax.Array, u: jax.Array) -> jax.Array:
-        """K[idx, :] @ u — fused row-block matvec, the panel never materialised.
-
-        The SGD/SDD/AP data-fit primitive: O(|idx|·d) gathered inputs instead of
-        an O(|idx|·n) HBM panel. u: (n,) or (n, s) → (|idx|, s-like).
-        """
-        out = gram_rows_matvec(
-            self.params, self.x, idx, u, backend=self.backend, block=self.block,
-            row_chunk=self.row_chunk,
-        )
-        self._count(_bump_rows, out)
-        return out
-
-    def rows_t_mv(self, idx: jax.Array, u: jax.Array) -> jax.Array:
-        """K[idx, :]ᵀ @ u = K[:, idx] @ u — transposed fused row-block matvec.
-        u: (|idx|,) or (|idx|, s) → (n, s-like)."""
-        out = gram_rows_matvec(
-            self.params, self.x, idx, u, transpose=True, backend=self.backend,
-            block=self.block, row_chunk=self.row_chunk,
-        )
-        self._count(_bump_rows, out)
-        return out
-
-    def block_at(self, idx: jax.Array) -> jax.Array:
-        """K[idx, idx] — the |idx|×|idx| principal block (AP's exact sub-solve)."""
-        return gram(self.params, self.x[idx], self.x[idx])
-
-    def rows(self, idx: jax.Array) -> jax.Array:
-        """K[idx, :] materialised — O(|idx|·n) memory. Legacy primitive; solvers
-        use the fused ``rows_mv``/``rows_t_mv``/``block_at`` instead."""
-        return gram(self.params, self.x[idx], self.x)
-
-    def dense(self) -> jax.Array:
-        """Materialised K + σ²I (tests / small-n reference only)."""
-        return gram(self.params, self.x) + self.noise * jnp.eye(self.n, dtype=self.x.dtype)
+from ..operators import (  # noqa: F401 (re-exports: legacy import path)
+    Gram,
+    LinearOperator,
+    matvec_counts,
+    reset_matvec_counts,
+)
 
 
 @jax.tree_util.register_dataclass
@@ -143,7 +40,7 @@ class SolveResult:
     rel_residual: jax.Array  # (s,) ||A v − b|| / ||b||
     iterations: jax.Array  # () number of iterations executed
     converged: jax.Array  # () bool — all RHS under tolerance
-    matvecs: jax.Array = 0  # () full Gram matvecs spent (excl. row-block gathers)
+    matvecs: jax.Array = 0  # () full operator matvecs spent (excl. row-block gathers)
 
 
 def as_matrix_rhs(b: jax.Array) -> tuple[jax.Array, bool]:
@@ -153,7 +50,7 @@ def as_matrix_rhs(b: jax.Array) -> tuple[jax.Array, bool]:
 
 
 def finalize(
-    op: Gram,
+    op: LinearOperator,
     v: jax.Array,
     b: jax.Array,
     iterations,
@@ -169,8 +66,8 @@ def finalize(
 
     Solvers that track the residual (CG, AP) pass it as ``residual`` and skip the
     redundant full matvec the seed implementation paid here on every solve;
-    ``matvecs`` is the solver's own count of full Gram matvecs, incremented by
-    one when the residual has to be recomputed.
+    ``matvecs`` is the solver's own count of full operator matvecs, incremented
+    by one when the residual has to be recomputed.
     """
     if residual is None:
         residual = b - op.mv(v)

@@ -1,9 +1,13 @@
 """Method of conjugate gradients with optional preconditioning (§2.2.4, Eq. 2.78).
 
-Batched over right-hand sides (each RHS runs its own CG recursion; they share the
-matvec, so the dominant cost is one fused multi-RHS Gram matvec per iteration — this is
-exactly why the Ch. 5 pathwise estimator batches [y | samples | probes] together).
-Supports warm starts (Ch. 5 §5.3) and a fixed iteration budget (§5.4 early stopping).
+Operator-agnostic: consumes any ``LinearOperator`` through ``mv`` alone — the
+dense-free ``Gram``, the inducing-point ``NormalEq``, the latent-Kronecker
+operator (Ch. 6), and the mesh-sharded ``ShardedGram`` all run this exact
+recursion. Batched over right-hand sides (each RHS runs its own CG recursion;
+they share the matvec, so the dominant cost is one fused multi-RHS matvec per
+iteration — this is exactly why the Ch. 5 pathwise estimator batches
+[y | samples | probes] together). Supports warm starts (Ch. 5 §5.3) and a fixed
+iteration budget (§5.4 early stopping).
 
 Matvec economy (this is the library's hottest loop — every full Gram matvec is
 O(n²·s) flops):
@@ -29,7 +33,7 @@ from typing import Callable, Optional, Union
 import jax
 import jax.numpy as jnp
 
-from .base import Gram, SolveResult, as_matrix_rhs, finalize  # noqa: F401 (re-export)
+from .base import Gram, LinearOperator, SolveResult, as_matrix_rhs, finalize  # noqa: F401 (re-export)
 
 _TRACE_COUNT = 0  # number of times the jitted CG core has been (re)traced
 
@@ -89,7 +93,7 @@ _cg_jit_closure = jax.jit(_cg_impl, static_argnames=_STATICS + ("precond",))
 
 
 def solve_cg(
-    op: Gram,
+    op: LinearOperator,
     b: jax.Array,
     x0: Optional[jax.Array] = None,
     *,

@@ -22,12 +22,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .base import Gram, SolveResult, as_matrix_rhs, finalize
+from .base import LinearOperator, SolveResult, as_matrix_rhs, finalize
 
 
 @partial(jax.jit, static_argnames=("num_steps", "batch_size"))
 def solve_sdd(
-    op: Gram,
+    op: LinearOperator,
     b: jax.Array,
     x0: Optional[jax.Array] = None,
     *,

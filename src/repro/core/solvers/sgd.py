@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels_fn import spectral_sample
-from .base import Gram, SolveResult, as_matrix_rhs, finalize
+from .base import LinearOperator, SolveResult, as_matrix_rhs, finalize
 
 
 @partial(
@@ -35,7 +35,7 @@ from .base import Gram, SolveResult, as_matrix_rhs, finalize
     static_argnames=("num_steps", "batch_size", "num_features", "average_tail"),
 )
 def solve_sgd(
-    op: Gram,
+    op: LinearOperator,
     b: jax.Array,
     x0: Optional[jax.Array] = None,
     *,

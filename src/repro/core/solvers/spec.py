@@ -1,9 +1,10 @@
 """Declarative solver configuration and the library's single ``solve()`` entry point.
 
 The paper's thesis is that *every* expensive GP computation — pathwise posterior
-samples (Ch. 3), MLL gradients (Ch. 5), Thompson steps (§3.3.2) — reduces to one
-batched multi-RHS linear solve against interchangeable iterative solvers. This module
-makes that interchangeability a first-class API instead of an accident of call sites:
+samples (Ch. 3), MLL gradients (Ch. 5), Thompson steps (§3.3.2), latent-Kronecker
+posteriors (Ch. 6), distributed solves — reduces to one batched multi-RHS linear
+solve against interchangeable iterative solvers. This module makes that
+interchangeability a first-class API instead of an accident of call sites:
 
 * frozen, pytree-registered spec dataclasses describe *how* to solve
   (``CG``, ``SGD``, ``SDD``, ``AP``) and how to precondition (``Nystrom``,
@@ -11,7 +12,13 @@ makes that interchangeability a first-class API instead of an accident of call s
 * a registry maps string names (``"cg"``/``"sgd"``/``"sdd"``/``"ap"``) to spec
   classes so configs, CLIs and serialized runs can name solvers;
 * ``solve(op, b, spec, key=..., x0=..., delta=...)`` uniformly handles PRNG keys,
-  warm starts and preconditioner construction for all of them.
+  warm starts and preconditioner construction for all of them, for ANY
+  :class:`~repro.core.operators.LinearOperator` — ``Gram``, ``NormalEq``,
+  ``LatentKroneckerOp``, ``ShardedGram``, or a third-party operator.
+
+Specs declare the operator capabilities they consume (``SolverSpec.needs``) and
+``solve()`` verifies them up front: a spec requesting row blocks from a
+matvec-only operator raises a clear ``TypeError`` naming the missing capability.
 
 The system solved is always
 
@@ -29,15 +36,15 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import warnings
-from typing import Any, Callable, ClassVar, Dict, Optional, Type, Union
+from typing import Any, Callable, ClassVar, Dict, Optional, Tuple, Type, Union
 
 import jax
 
 from ...kernels.ops import BACKENDS
-from ..precond import nystrom_preconditioner, pivoted_cholesky_preconditioner
+from ..operators import require_capabilities
+from ..precond import woodbury_from_factor
 from .ap import solve_ap
-from .base import Gram, SolveResult
+from .base import SolveResult
 from .cg import solve_cg
 from .sdd import solve_sdd
 from .sgd import solve_sgd
@@ -45,14 +52,6 @@ from .sgd import solve_sgd
 
 def _static(default):
     return dataclasses.field(default=default, metadata=dict(static=True))
-
-
-def _require_gram(op, what: str):
-    if not isinstance(op, Gram):
-        raise TypeError(
-            f"{what} needs the training inputs and kernel hyperparameters, which "
-            f"only a Gram operator carries; got {type(op).__name__}"
-        )
 
 
 # ---------------------------------------------------------------------------
@@ -102,31 +101,39 @@ class _JsonSpecMixin:
         return spec_from_dict(json.loads(s))
 
 
+class _FactorPrecondSpec(_JsonSpecMixin):
+    """Preconditioner specs built from an operator's ``precond_factor``
+    capability: L = op.precond_factor(rank, method=...) with K ≈ LLᵀ, wrapped in
+    the Woodbury apply (LLᵀ + σ²I)⁻¹."""
+
+    method: ClassVar[str] = "?"
+
+    def build(self, op, key: Optional[jax.Array] = None) -> Callable:
+        require_capabilities(
+            op, ("precond_factor",), consumer=f"the {self.name!r} preconditioner"
+        )
+        l = op.precond_factor(self.rank, key=key, method=self.method)
+        return woodbury_from_factor(l, op.noise)
+
+
 @register_precond("nystrom")
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class Nystrom(_JsonSpecMixin):
+class Nystrom(_FactorPrecondSpec):
     """Uniform-subset Nyström preconditioner: rank-m surrogate + Woodbury apply."""
 
+    method: ClassVar[str] = "nystrom"
     rank: int = _static(100)
-
-    def build(self, op: Gram, key: Optional[jax.Array] = None) -> Callable:
-        _require_gram(op, "the Nyström preconditioner")
-        key = jax.random.PRNGKey(0) if key is None else key
-        return nystrom_preconditioner(op.params, op.x, key, rank=self.rank)
 
 
 @register_precond("pivoted_cholesky")
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class PivotedCholesky(_JsonSpecMixin):
+class PivotedCholesky(_FactorPrecondSpec):
     """Greedy pivoted-Cholesky preconditioner (paper fidelity; sequential build)."""
 
+    method: ClassVar[str] = "pivoted_cholesky"
     rank: int = _static(100)
-
-    def build(self, op: Gram, key: Optional[jax.Array] = None) -> Callable:
-        _require_gram(op, "the pivoted-Cholesky preconditioner")
-        return pivoted_cholesky_preconditioner(op.params, op.x, rank=self.rank)
 
 
 PrecondSpec = Union[Nystrom, PivotedCholesky]
@@ -180,16 +187,23 @@ class SolverSpec(_JsonSpecMixin):
     the spec onto the underlying solver function; consumers never call it directly
     — they go through ``solve()``.
 
-    All built-in specs carry a ``backend`` field pinning the Gram-matvec backend
-    (``"pallas"``/``"chunked"``/``"dense"``/``"auto"``; ``None`` inherits the
-    operator's own setting) — ``solve()`` applies it to ``Gram`` operators, so
-    ``CG(backend="pallas")`` runs every matvec of the solve through the fused
-    differentiable Pallas kernel.
+    ``needs`` declares the operator capabilities the solver consumes beyond the
+    required ``mv``/``shape``/``diag_part``/``noise`` (see core/operators.py) —
+    ``solve()`` verifies them before dispatch, so an SGD spec pointed at a
+    matvec-only operator fails with a capability error, not an ``AttributeError``
+    inside a scan.
+
+    All built-in specs carry a ``backend`` field pinning the kernel-matvec
+    backend (``"pallas"``/``"chunked"``/``"dense"``/``"auto"``; ``None`` inherits
+    the operator's own setting) — ``solve()`` applies it to any operator with a
+    ``backend`` field (``Gram``, ``ShardedGram``), so ``CG(backend="pallas")``
+    runs every matvec of the solve through the fused differentiable Pallas
+    kernel, including through the shards of a distributed solve.
     """
 
     name: ClassVar[str] = "?"
     requires_key: ClassVar[bool] = False  # stochastic solvers need a PRNG key
-    needs_rows: ClassVar[bool] = False  # needs op.rows_mv (kernel row matvecs)
+    needs: ClassVar[Tuple[str, ...]] = ()  # operator capabilities beyond mv
 
     def run(
         self,
@@ -216,10 +230,11 @@ class CG(SolverSpec):
 
     ``precond`` is a preconditioner spec (built fresh per solve, since it depends
     on the hyperparameters) or a prebuilt ``r -> M⁻¹r`` apply. Spec builds
-    return ``WoodburyPrecond`` pytrees, which ride through the jitted CG as
-    traced arguments — rebuilding one of the same rank reuses the compiled
-    solve, so spec-valued preconds are safe inside hot outer loops. Only raw
-    closures (legacy) are static arguments and recompile per identity.
+    call the operator's ``precond_factor`` capability and return
+    ``WoodburyPrecond`` pytrees, which ride through the jitted CG as traced
+    arguments — rebuilding one of the same rank reuses the compiled solve, so
+    spec-valued preconds are safe inside hot outer loops. Only raw closures
+    (legacy) are static arguments and recompile per identity.
     """
 
     max_iters: int = _static(1000)
@@ -246,10 +261,14 @@ class SGD(SolverSpec):
     The only solver with a *native* δ channel: δ stays in the regulariser
     (Eq. 3.6) instead of being folded into the data-fit targets, which is the
     paper's variance-reduction trick for posterior sampling.
+
+    Beyond row-block access, the RFF regulariser samples frequencies from the
+    operator's kernel and evaluates features on its inputs, so the operator must
+    also expose ``x`` and ``params`` (``Gram`` and ``ShardedGram`` do).
     """
 
     requires_key: ClassVar[bool] = True
-    needs_rows: ClassVar[bool] = True
+    needs: ClassVar[Tuple[str, ...]] = ("rows_mv", "rows_t_mv", "x", "params")
 
     num_steps: int = _static(20_000)
     batch_size: int = _static(512)
@@ -279,7 +298,7 @@ class SDD(SolverSpec):
     """Stochastic dual descent (Ch. 4, Algorithm 4.1)."""
 
     requires_key: ClassVar[bool] = True
-    needs_rows: ClassVar[bool] = True
+    needs: ClassVar[Tuple[str, ...]] = ("rows_mv",)
 
     num_steps: int = _static(20_000)
     batch_size: int = _static(512)
@@ -305,7 +324,7 @@ class AP(SolverSpec):
     """Alternating projections / randomised block-coordinate descent (§5.1.1)."""
 
     requires_key: ClassVar[bool] = True
-    needs_rows: ClassVar[bool] = True
+    needs: ClassVar[Tuple[str, ...]] = ("rows_t_mv", "block_at")
 
     num_steps: int = _static(2000)
     block_size: int = _static(512)
@@ -379,18 +398,10 @@ def spec_from_json(s: str):
 
 
 # ---------------------------------------------------------------------------
-# Normalisation: names / classes / instances / legacy `solver=fn` calls
+# Normalisation: names / classes / instances
 # ---------------------------------------------------------------------------
 
 SpecLike = Union[str, SolverSpec, Type[SolverSpec]]
-
-# legacy-shim mapping: old-style `solver=<function>` arguments → spec class
-_LEGACY_SOLVERS: Dict[Callable, Type[SolverSpec]] = {
-    solve_cg: CG,
-    solve_sgd: SGD,
-    solve_sdd: SDD,
-    solve_ap: AP,
-}
 
 
 def as_spec(spec: SpecLike, **overrides: Any) -> SolverSpec:
@@ -409,39 +420,6 @@ def as_spec(spec: SpecLike, **overrides: Any) -> SolverSpec:
     )
 
 
-def coerce_spec(
-    spec: Optional[SpecLike] = None,
-    *,
-    solver: Optional[Callable] = None,
-    default: SpecLike = "cg",
-    **overrides: Any,
-) -> SolverSpec:
-    """Resolve new-style ``spec=...`` and legacy ``solver=fn, **kwargs`` arguments.
-
-    Consumers (``posterior_functions``, ``mll_grad``, ``thompson_step``, …) route
-    their keyword surface through this single function: the legacy path warns and
-    maps the solver function to its spec class; extra keyword arguments become
-    spec-field overrides in both worlds.
-    """
-    if solver is not None:
-        if spec is not None:
-            raise TypeError("pass either spec=... or the legacy solver=...; not both")
-        cls = _LEGACY_SOLVERS.get(solver)
-        if cls is None:
-            raise TypeError(
-                f"unrecognised legacy solver function {solver!r}; pass a SolverSpec "
-                f"or one of the registered names {sorted(_REGISTRY)} instead"
-            )
-        warnings.warn(
-            f"solver=solve_{cls.name} with per-solver keyword arguments is "
-            f"deprecated; pass spec={cls.__name__}(...) or spec={cls.name!r} instead",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-        spec = cls
-    return as_spec(default if spec is None else spec, **overrides)
-
-
 # ---------------------------------------------------------------------------
 # The single entry point
 # ---------------------------------------------------------------------------
@@ -457,11 +435,14 @@ def solve(
     delta: Optional[jax.Array] = None,
     **overrides: Any,
 ) -> SolveResult:
-    """Solve (K+σ²I)V = b + σ²δ with any registered solver.
+    """Solve (K+σ²I)V = b + σ²δ with any registered solver on any operator.
 
     Args:
-        op: linear operator — a ``Gram``, or any matvec-only operator with ``mv``
-            (and ``noise`` when ``delta`` is used) for CG-family specs.
+        op: a :class:`~repro.core.operators.LinearOperator` — ``Gram``,
+            ``NormalEq``, ``LatentKroneckerOp``, ``ShardedGram``, or any
+            operator implementing the protocol. Capability dispatch: the spec's
+            ``needs`` (row-block access for SGD/SDD/AP, ``precond_factor`` for
+            preconditioner builds) are verified up front with a clear error.
         b: right-hand side(s), ``(n,)`` or ``(n, s)``.
         spec: a ``SolverSpec`` instance, spec class, or registered name
             (``"cg"``, ``"sgd"``, ``"sdd"``, ``"ap"``).
@@ -478,18 +459,16 @@ def solve(
     if backend is not None:
         if backend not in BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
-        if isinstance(op, Gram) and op.backend != backend:
-            # the spec pins the Gram-matvec backend for this solve
+        if (
+            dataclasses.is_dataclass(op)
+            and getattr(op, "backend", backend) != backend
+        ):
+            # the spec pins the kernel-matvec backend for this solve
             op = dataclasses.replace(op, backend=backend)
     if s.requires_key and key is None:
         raise ValueError(
             f"solver {s.name!r} is stochastic: solve(..., key=jax.random.PRNGKey(...))"
             " is required"
         )
-    if s.needs_rows and not (hasattr(op, "rows_mv") and hasattr(op, "rows_t_mv")):
-        raise TypeError(
-            f"solver {s.name!r} needs fused kernel-row matvecs "
-            f"(op.rows_mv/op.rows_t_mv, and op.block_at for AP); operator "
-            f"{type(op).__name__} only supports matvecs — use a CG spec"
-        )
+    require_capabilities(op, s.needs, consumer=f"solver {s.name!r}")
     return s.run(op, b, key=key, x0=x0, delta=delta)

@@ -2,6 +2,13 @@
 
 * ``sgpr``: Titsias (2009) collapsed bound  L_SGPR(Z) = log N(y|0, Q_XX+σ²I) − tr-term
   (Eq. 2.47) with the exact optimal q; predictive Eqs. 2.49/2.50.
+* ``sgpr_iterative``: the same posterior with every application of the Titsias
+  matrix B = K_ZZ + σ⁻²K_ZX K_XZ routed through the unified ``solve()`` on the
+  matvec-only :class:`~repro.core.operators.NormalEq` operator (note
+  σ²·B = K_ZX K_XZ + σ²K_ZZ) — the n×m cross-covariance and the m×m B are never
+  materialised, so the dense-Cholesky O(n·m²) assembly becomes O(n·m) per solver
+  iteration and any CG-family SolverSpec (warm starts, matvec accounting, JSON
+  configs) drives it.
 * ``svgp_fit``: Hensman et al. (2013) stochastic variational inference with explicit
   (m, S) posterior and natural-gradient steps (Eqs. 2.53/2.54) on mini-batches.
 
@@ -11,12 +18,14 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from .kernels_fn import KernelParams, gram
+from .kernels_fn import KernelParams, gram, matvec
+from .operators import NormalEq
+from .solvers.spec import CG, SolverSpec, SpecLike, as_spec, solve
 
 
 class SGPRPosterior(NamedTuple):
@@ -54,6 +63,71 @@ def sgpr(params: KernelParams, x: jax.Array, y: jax.Array, z: jax.Array) -> SGPR
         chol_b=chol_b,
         chol_kzz=jnp.linalg.cholesky(kzz),
         proj_y=proj_y,
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class IterativeSGPRPosterior:
+    """SGPR posterior whose B⁻¹ applications run through ``solve(NormalEq, …)``.
+
+    Predictive equations (Eqs. 2.49/2.50) need B⁻¹ twice: once for the
+    projected-mean weights (done at construction) and once per prediction batch
+    for the variance quadratic k_sZ B⁻¹ k_Zs. Both are iterative solves against
+    the m×m normal-equations operator — only K_ZZ's m×m Cholesky (for the
+    Q_XX-correction term) is ever factorised densely.
+    """
+
+    params: KernelParams
+    z: jax.Array  # (m, d) inducing inputs
+    chol_kzz: jax.Array  # (m, m) lower Cholesky of K_ZZ (+ stabilising jitter)
+    proj_y: jax.Array  # (m,) = σ⁻² B⁻¹ K_ZX y, via solve(NormalEq, K_ZX y)
+    op: NormalEq  # σ²·B, touched only through matvecs
+    spec: SolverSpec  # CG-family spec driving the B⁻¹ applications
+
+    def mean(self, xs: jax.Array) -> jax.Array:
+        return gram(self.params, xs, self.z) @ self.proj_y
+
+    def var(self, xs: jax.Array) -> jax.Array:
+        kxz = gram(self.params, xs, self.z)  # (n*, m)
+        a = jax.scipy.linalg.solve_triangular(self.chol_kzz, kxz.T, lower=True)
+        # k_sZ B⁻¹ k_Zs = σ² · k_sZ (σ²B)⁻¹ k_Zs — one batched NormalEq solve
+        u = solve(self.op, kxz.T, self.spec).solution  # (m, n*)
+        quad = self.params.noise * jnp.sum(kxz.T * u, axis=0)
+        kss = self.params.signal * jnp.ones(xs.shape[0])
+        return kss - jnp.sum(a * a, axis=0) + quad
+
+
+def sgpr_iterative(
+    params: KernelParams,
+    x: jax.Array,
+    y: jax.Array,
+    z: jax.Array,
+    *,
+    spec: Optional[SpecLike] = None,
+    key: Optional[jax.Array] = None,
+    row_chunk: int = 4096,
+) -> IterativeSGPRPosterior:
+    """Titsias posterior via iterative solves — the ``solve()``-backed SGPR path.
+
+    ``spec`` must be a matvec-only (CG-family) spec; the default
+    ``CG(max_iters=400, tol=1e-6)`` is deliberately tight because the
+    normal-equations operator is ill-conditioned (κ(K_XZ)²-ish) and a loose
+    per-column tolerance stops refinement long before the *prediction-space*
+    error is small.
+    """
+    s = as_spec(CG(max_iters=400, tol=1e-6) if spec is None else spec)
+    m = z.shape[0]
+    op = NormalEq(x=x, z=z, params=params, row_chunk=row_chunk)
+    # reproduce the dense path's fp32-stabilising ridge on B exactly:
+    # B_r = B + 3e-5·tr(B)/m · I  ⇔  σ²B_r = NormalEq + 3e-5·tr(NormalEq)/m · I
+    op = dataclasses.replace(op, ridge=3e-5 * jnp.sum(op.diag_part()) / m)
+    rhs = matvec(params, z, y, z=x, row_chunk=row_chunk)  # K_ZX y, chunked
+    proj_y = solve(op, rhs, s, key=key).solution  # = σ⁻² B⁻¹ K_ZX y
+    kzz = gram(params, z) + 1e-5 * params.signal * jnp.eye(m)
+    return IterativeSGPRPosterior(
+        params=params, z=z, chol_kzz=jnp.linalg.cholesky(kzz), proj_y=proj_y,
+        op=op, spec=s,
     )
 
 

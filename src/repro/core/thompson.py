@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from .kernels_fn import KernelParams
 from .pathwise import PosteriorFunctions, posterior_functions
-from .solvers.spec import SpecLike, coerce_spec
+from .solvers.spec import SpecLike, as_spec
 
 
 @dataclasses.dataclass
@@ -95,13 +95,12 @@ def thompson_step(
     num_top: int = 5,
     ascent_steps: int = 30,
     lr: float = 1e-3,
-    solver=None,  # deprecated
-    solver_kwargs: Optional[dict] = None,  # deprecated
+    **spec_overrides,
 ) -> ThompsonState:
     """One acquisition round. ``spec`` is any registered SolverSpec (defaults to
-    SDD, the paper's Thompson workhorse); legacy ``solver=fn, solver_kwargs={}``
-    still works but emits a ``DeprecationWarning``."""
-    s = coerce_spec(spec, solver=solver, default="sdd", **(solver_kwargs or {}))
+    SDD, the paper's Thompson workhorse); extra keyword arguments are spec-field
+    overrides."""
+    s = as_spec("sdd" if spec is None else spec, **spec_overrides)
     kd, km, ko = jax.random.split(key, 3)
     post = posterior_functions(
         params,

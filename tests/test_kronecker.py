@@ -10,8 +10,10 @@ from hypothesis import given, settings, strategies as st
 from repro.core.gp import exact_posterior
 from repro.core.kernels_fn import gram, make_params
 from repro.core.kronecker import (
-    break_even_density, lkgp_matvec_flops, lkgp_posterior, lkgp_solve_cg, make_lkgp,
+    break_even_density, lkgp_matvec_flops, lkgp_posterior, make_lkgp,
 )
+from repro.core.operators import LatentKroneckerOp
+from repro.core.solvers.spec import CG, solve
 
 
 def _make_problem(n1=12, n2=9, density=0.7, seed=0):
@@ -36,14 +38,17 @@ def test_lkgp_matvec_matches_dense():
 
 
 def test_lkgp_solve_matches_dense():
+    """solve(LatentKroneckerOp, b, CG) — the structured operator goes through the
+    unified solver layer (the private lkgp_solve_cg loop is gone)."""
     gp, _ = _make_problem()
     rng = np.random.default_rng(2)
     b = jnp.asarray(rng.normal(size=len(np.asarray(gp.obs_idx))).astype(np.float32))
-    sol = lkgp_solve_cg(gp, b, max_iters=500, tol=1e-8)
+    res = solve(LatentKroneckerOp(gp=gp), b, CG(max_iters=500, tol=1e-8))
     kfull = np.kron(np.asarray(gp.k1()), np.asarray(gp.k2()))
     idx = np.asarray(gp.obs_idx)
     kobs = kfull[np.ix_(idx, idx)] + 0.05 * np.eye(len(idx))
-    np.testing.assert_allclose(sol, np.linalg.solve(kobs, np.asarray(b)), atol=1e-3)
+    np.testing.assert_allclose(res.solution, np.linalg.solve(kobs, np.asarray(b)), atol=1e-3)
+    assert int(res.matvecs) == int(res.iterations)  # cold CG: 1 matvec/iter
 
 
 def test_lkgp_posterior_matches_exact_gp():

@@ -90,15 +90,17 @@ def test_hlo_analyzer_loop_multipliers():
     assert prof.collective_counts == {"all-gather": 1}
 
 
-def test_distributed_cg_subprocess():
-    """distributed_cg under shard_map on 8 virtual devices == dense solve.
-    Runs in a subprocess so the 8-device platform doesn't leak into this one."""
+def test_distributed_solve_subprocess():
+    """distributed_solve = solve(ShardedGram, …) on 8 virtual devices == dense
+    solve, with SolveResult matvec accounting intact. Runs in a subprocess so
+    the 8-device platform doesn't leak into this one."""
     code = textwrap.dedent("""
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
-        from repro.core.distributed import distributed_cg, shard_training_rows
+        from repro.core.distributed import distributed_solve, shard_training_rows
         from repro.core.kernels_fn import make_params, gram
+        from repro.core.solvers.spec import CG
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         n, d = 256, 3
         key = jax.random.PRNGKey(0)
@@ -106,10 +108,12 @@ def test_distributed_cg_subprocess():
         y = jnp.sin(x.sum(-1))
         p = make_params("se", lengthscale=1.0, noise=0.2, d=d)
         xs = shard_training_rows(mesh, x)
-        v = distributed_cg(p, xs, y, mesh, max_iters=300, tol=1e-8)
+        res = distributed_solve(p, xs, y, mesh, spec=CG(max_iters=300, tol=1e-8))
         ref = jnp.linalg.solve(gram(p, x) + p.noise * jnp.eye(n), y)
-        err = float(jnp.linalg.norm(v - ref))
+        err = float(jnp.linalg.norm(res.solution - ref))
         assert err < 1e-2, err
+        assert int(res.matvecs) == int(res.iterations), (res.matvecs, res.iterations)
+        assert bool(res.converged)
         print("OK", err)
     """)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True,

@@ -23,7 +23,6 @@ from repro.core.solvers.spec import (
     PivotedCholesky,
     SolverSpec,
     as_spec,
-    coerce_spec,
     get_solver,
     register_solver,
     registered_solvers,
@@ -177,30 +176,35 @@ def test_specs_are_static_hashable_pytrees():
     assert jax.tree_util.tree_unflatten(treedef, leaves) == spec
 
 
-def test_legacy_solver_shim_warns(toy_regression):
+def test_legacy_solver_kwarg_removed(toy_regression):
+    """The PR-1 `solver=fn` deprecation shims are gone after one release cycle:
+    consumers take spec= only, and coerce_spec no longer exists."""
     t = toy_regression
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        pf = posterior_functions(
+    with pytest.raises(TypeError):
+        posterior_functions(
             t["params"], t["x"], t["y"], jax.random.PRNGKey(0),
-            num_samples=2, num_features=128, solver=solve_cg, max_iters=50,
+            num_samples=2, num_features=128, solver=solve_cg,
         )
+    import repro.core.solvers.spec as spec_mod
+
+    assert not hasattr(spec_mod, "coerce_spec")
+    # spec-field overrides through **kwargs still work
+    pf = posterior_functions(
+        t["params"], t["x"], t["y"], jax.random.PRNGKey(0),
+        num_samples=2, num_features=128, spec="cg", max_iters=50,
+    )
     assert pf.alpha.shape == (t["n"], 2)
-    with pytest.warns(DeprecationWarning):
-        coerce_spec(solver=solve_sdd, num_steps=5)
-    with pytest.raises(TypeError, match="not both"):
-        coerce_spec(spec="cg", solver=solve_cg)
-    with pytest.raises(TypeError, match="legacy solver"):
-        coerce_spec(solver=np.linalg.solve)
 
 
 def test_matvec_only_operator_rejects_row_solvers(toy_regression):
-    """Stochastic solvers need op.rows; matvec-only operators get a clear error."""
+    """Stochastic solvers need row-block capabilities; matvec-only operators get
+    a clear capability error (NormalEq stays importable from core.inducing)."""
     from repro.core.inducing import NormalEq
 
     t = toy_regression
     op = NormalEq(x=t["x"], z=t["x"][:32], params=t["params"])
     rhs = jnp.ones((32, 2))
-    with pytest.raises(TypeError, match="rows"):
+    with pytest.raises(TypeError, match="rows_mv"):
         solve(op, rhs, "sdd", key=KEY)
     res = solve(op, rhs, CG(max_iters=100, tol=1e-4))
     assert res.solution.shape == (32, 2)
