@@ -1,22 +1,26 @@
-"""Matvec-count regression gate (CI step): run bench_solvers in smoke mode and
-fail if any counted full-Gram-matvec total exceeds the committed baseline in
-``results/BENCH_bench_solvers.json``.
+"""Matvec/iteration-count regression gate (CI step): run bench_solvers and
+bench_mll in smoke mode and fail if any counted total exceeds its committed
+baseline (``results/BENCH_bench_solvers.json``, ``results/BENCH_bench_mll.json``).
 
 Matvec counts are the structural perf guarantee of the solver layer (CG spends
 exactly one matvec per iteration, SGD/SDD exactly one, AP zero — see
 ``docs/solvers.md``); a refactor that silently reintroduces an A·0 warm-start
 residual or a recomputed finalize residual shows up here as counts drifting
-above the baseline, long before wall-clock noise would reveal it. Smoke mode
-keeps the committed problem sizes and CG specs (so CG iteration counts are
-comparable) and only cuts the stochastic solvers' step budgets, whose matvec
-count is independent of steps.
+above the baseline, long before wall-clock noise would reveal it. The bench_mll
+gate adds the Ch. 5 claim: warm-started MLL optimisation totals *fewer* inner
+CG iterations — a change that breaks warm starting (or the pathwise probe
+batching) inflates ``solver_iters`` far past the slack. Smoke modes keep the
+committed problem sizes, PRNG keys and CG specs (so iteration counts are
+comparable) and only cut work the gate does not compare.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.check_matvecs \
-        [--baseline results/BENCH_bench_solvers.json] [--slack 0.15]
+        [--baseline results/BENCH_bench_solvers.json] \
+        [--mll-baseline results/BENCH_bench_mll.json | --skip-mll] \
+        [--slack 0.15]
 
-``--slack`` tolerates small cross-platform CG iteration jitter (fp32 reduction
-order): measured > ceil(baseline · (1 + slack)) fails.
+``--slack`` tolerates small cross-platform jitter (fp32 reduction order):
+measured > ceil(baseline · (1 + slack)) fails.
 """
 from __future__ import annotations
 
@@ -25,29 +29,56 @@ import json
 import math
 import sys
 
-from . import bench_solvers
+from . import bench_mll, bench_solvers
 from .common import Report
 
 
-def _matvec_rows(rows) -> dict:
-    """{(table, method, dataset): matvecs} for rows that report a count."""
+def _metric_rows(rows, metric: str) -> dict:
+    """{(table, method, dataset): value} for rows that report ``metric``."""
     out = {}
     for r in rows:
         metrics = r["metrics"] if isinstance(r, dict) else r.metrics
-        if "matvecs" in metrics:
+        if metric in metrics:
             key = tuple(
                 (r[k] if isinstance(r, dict) else getattr(r, k))
                 for k in ("table", "method", "dataset")
             )
-            out[key] = int(metrics["matvecs"])
+            out[key] = int(metrics[metric])
     return out
+
+
+def _gate(name: str, baseline: dict, measured: dict, slack: float) -> tuple:
+    """Compare measured counts against the baseline; returns (compared, failures)."""
+    compared = 0
+    failures = []
+    print(f"\n{name} gate (slack {slack:.0%}):")
+    for key, base in sorted(baseline.items()):
+        if key not in measured:
+            continue
+        compared += 1
+        allowed = math.ceil(base * (1.0 + slack))
+        got = measured[key]
+        status = "ok" if got <= allowed else "REGRESSION"
+        print(f"  {'/'.join(key):45s} baseline={base:4d} allowed={allowed:4d} "
+              f"measured={got:4d}  {status}")
+        if got > allowed:
+            failures.append((key, base, got))
+    return compared, failures
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
         "--baseline", default="results/BENCH_bench_solvers.json",
-        help="committed bench_solvers JSON to gate against",
+        help="committed bench_solvers JSON to gate matvec counts against",
+    )
+    ap.add_argument(
+        "--mll-baseline", default="results/BENCH_bench_mll.json",
+        help="committed bench_mll JSON to gate warm-start iteration totals against",
+    )
+    ap.add_argument(
+        "--skip-mll", action="store_true",
+        help="gate bench_solvers matvec counts only",
     )
     ap.add_argument(
         "--slack", type=float, default=0.15,
@@ -56,40 +87,48 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
-        baseline = _matvec_rows(json.load(f)["rows"])
-    if not baseline:
+        base_matvecs = _metric_rows(json.load(f)["rows"], "matvecs")
+    if not base_matvecs:
         print(f"ERROR: no matvec counts in {args.baseline}", file=sys.stderr)
         return 2
 
     report = Report()
     bench_solvers.run(report, full=False, smoke=True)
-    measured = _matvec_rows(report.rows)
-
-    compared = 0
-    failures = []
-    print(f"\nmatvec gate vs {args.baseline} (slack {args.slack:.0%}):")
-    for key, base in sorted(baseline.items()):
-        if key not in measured:
-            continue
-        compared += 1
-        allowed = math.ceil(base * (1.0 + args.slack))
-        got = measured[key]
-        status = "ok" if got <= allowed else "REGRESSION"
-        print(f"  {'/'.join(key):45s} baseline={base:4d} allowed={allowed:4d} "
-              f"measured={got:4d}  {status}")
-        if got > allowed:
-            failures.append((key, base, got))
-
+    compared, failures = _gate(
+        f"matvecs vs {args.baseline}",
+        base_matvecs, _metric_rows(report.rows, "matvecs"), args.slack,
+    )
     if compared == 0:
-        print("ERROR: no comparable rows between baseline and smoke run",
+        # each gate must compare > 0 rows, or a label drift between the bench
+        # and its committed baseline would silently void the gate
+        print("ERROR: no comparable matvec rows between baseline and smoke run",
               file=sys.stderr)
         return 2
+
+    if not args.skip_mll:
+        with open(args.mll_baseline) as f:
+            base_iters = _metric_rows(json.load(f)["rows"], "solver_iters")
+        if not base_iters:
+            print(f"ERROR: no solver_iters in {args.mll_baseline}", file=sys.stderr)
+            return 2
+        mll_report = Report()
+        bench_mll.run(mll_report, full=False, smoke=True)
+        c2, f2 = _gate(
+            f"mll solver_iters vs {args.mll_baseline}",
+            base_iters, _metric_rows(mll_report.rows, "solver_iters"), args.slack,
+        )
+        if c2 == 0:
+            print("ERROR: no comparable solver_iters rows between mll baseline "
+                  "and smoke run", file=sys.stderr)
+            return 2
+        compared += c2
+        failures += f2
     if failures:
-        print(f"\n{len(failures)} matvec-count regression(s):", file=sys.stderr)
+        print(f"\n{len(failures)} count regression(s):", file=sys.stderr)
         for key, base, got in failures:
             print(f"  {'/'.join(key)}: {base} -> {got}", file=sys.stderr)
         return 1
-    print(f"\nall {compared} matvec counts within baseline")
+    print(f"\nall {compared} counts within baseline")
     return 0
 
 

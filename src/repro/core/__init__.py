@@ -1,19 +1,28 @@
 """Core GP library — the paper's contribution (see DESIGN.md §1)."""
 from .kernels_fn import KernelParams, make_params, gram, matvec  # noqa: F401
 from .operators import (  # noqa: F401
+    FeatureOperator,
     Gram,
     LatentKroneckerOp,
     LinearOperator,
     NormalEq,
     OPTIONAL_CAPABILITIES,
+    OPTIONAL_FEATURE_CAPABILITIES,
+    RFFGram,
     ShardedGram,
     capabilities,
+    feature_capabilities,
     matvec_counts,
     require_capabilities,
     reset_matvec_counts,
     supports,
 )
-from .rff import sample_prior, make_fourier_features  # noqa: F401
+from .rff import (  # noqa: F401
+    FourierFeatures,
+    PriorSamples,
+    make_fourier_features,
+    sample_prior,
+)
 from .gp import exact_posterior, exact_mll  # noqa: F401
 from .pathwise import posterior_functions, PosteriorFunctions  # noqa: F401
 from .solvers.base import SolveResult  # noqa: F401
@@ -26,8 +35,10 @@ from .solvers.spec import (  # noqa: F401
     CG,
     SDD,
     SGD,
+    Jacobi,
     Nystrom,
     PivotedCholesky,
+    RFF,
     SolverSpec,
     as_spec,
     get_precond,
@@ -42,7 +53,7 @@ from .solvers.spec import (  # noqa: F401
     spec_to_dict,
     spec_to_json,
 )
-from .precond import WoodburyPrecond  # noqa: F401
+from .precond import JacobiPrecond, WoodburyPrecond  # noqa: F401
 from .api import IterativeGP  # noqa: F401
 from .mll import mll_grad, optimize_mll  # noqa: F401
 from .inducing import inducing_posterior  # noqa: F401

@@ -47,6 +47,7 @@ def distributed_solve(
     delta: Optional[jax.Array] = None,
     backend: str = "auto",
     row_chunk: int = 2048,
+    gather_once: bool = False,
 ) -> SolveResult:
     """Spec-driven front door for sharded solves — ``solve(ShardedGram, …)``.
 
@@ -54,12 +55,17 @@ def distributed_solve(
     :func:`shard_training_rows`); ``b`` (and ``x0``/``delta``) are replicated.
     Any registered SolverSpec works — stochastic specs need ``key=`` exactly as
     in the single-host ``solve()`` — and the spec's ``backend`` field pins the
-    per-shard kernel backend. Returns the full :class:`SolveResult` (solution,
-    residuals, iteration and matvec counts).
+    per-shard kernel backend. ``gather_once=True`` replicates the sharded
+    inputs once per solve (``solve()`` calls the operator's
+    ``prepare_for_solve`` hook outside the solver loop) instead of
+    all-gathering them on every matvec — an O(n·d) per-device memory cost that
+    removes one collective per solver iteration; use when the replicated input
+    panel fits. Returns the full :class:`SolveResult` (solution, residuals,
+    iteration and matvec counts).
     """
     axes = data_axes if isinstance(data_axes, tuple) else (data_axes,)
     op = ShardedGram(
         x=x, params=params, mesh=mesh, data_axes=axes, backend=backend,
-        row_chunk=row_chunk,
+        row_chunk=row_chunk, gather_once=gather_once,
     )
     return solve(op, b, spec, key=key, x0=x0, delta=delta)

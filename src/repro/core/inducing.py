@@ -10,6 +10,12 @@ i.e. solutions of the m×m normal equations (K_ZX K_XZ + σ² K_ZZ) u = K_ZX b, 
 only through K_XZ matvecs (O(n·m) per iteration, m learnable weights — §3.2.3: update
 cost O(m·s) vs SVGP's O(m³)). Posterior samples: f(·) + K_(·)Z (v* − α*) (Eq. 3.36),
 with f_X ≈ RFF prior (the Nyström-consistency approximation discussed in §3.2.3).
+
+The prior is a :class:`~repro.core.operators.FeatureOperator` (``PriorSamples``,
+default backend ``"auto"``): both the eager f_X target evaluation here and the
+differentiated sample evaluations in ``InducingPosterior.__call__`` run through
+the fused RFF matvec on TPU — with the custom VJP, gradient-based acquisition
+over inducing posteriors needs no materialised features either.
 """
 from __future__ import annotations
 

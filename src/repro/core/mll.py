@@ -89,8 +89,8 @@ def mll_grad(
 
     if estimator == "pathwise":
         prior = sample_prior(params, kp, num_probes, num_features, x.shape[1])
-        # eager, never differentiated through → fused RFF matvec on TPU
-        f_x = prior.with_backend("auto")(x)
+        # backend="auto" default: fused RFF matvec on TPU, features elsewhere
+        f_x = prior(x)
         eps = jnp.sqrt(params.noise) * jax.random.normal(ke, f_x.shape, f_x.dtype)
         probes = f_x + eps  # z ~ N(0, A) approx (RFF prior + exact noise)
     else:

@@ -1,4 +1,5 @@
-"""One operator abstraction from Gram to Kronecker to sharded: ``LinearOperator``.
+"""One operator abstraction from Gram to Kronecker to sharded: ``LinearOperator``
+— and its feature-side twin, ``FeatureOperator``.
 
 Every expensive GP computation in this library reduces to solving
 
@@ -17,7 +18,7 @@ The protocol (see :class:`LinearOperator`):
 required
     ``shape``        — ``(n, n)`` of the square system matrix A;
     ``mv(v)``        — ``A @ v`` for ``v`` of shape ``(n,)`` or ``(n, s)``;
-    ``diag_part()``  — ``diag(A)`` (Jacobi scaling, diagnostics);
+    ``diag_part()``  — ``diag(A)`` (Jacobi preconditioning, diagnostics);
     ``noise``        — the σ² of the ``K + σ²I`` split (δ-channel folding).
 
 optional capabilities (declared by *defining the method*; absence is detected by
@@ -28,13 +29,25 @@ optional capabilities (declared by *defining the method*; absence is detected by
     ``block_at(idx)``      — ``K[idx, idx]`` principal block (AP's exact
                              sub-solve);
     ``precond_factor(rank, key=, method=)`` — an ``(n, m)`` low-rank factor L
-                             with ``K ≈ L Lᵀ`` (Nyström / pivoted-Cholesky
-                             preconditioner construction).
+                             with ``K ≈ L Lᵀ`` (Nyström / pivoted-Cholesky /
+                             random-feature preconditioner construction).
 
 Solver specs declare which capabilities they consume (``SolverSpec.needs``) and
 ``solve()`` verifies them up front — a spec requesting row blocks from a
 matvec-only operator raises a :class:`TypeError` naming the missing capability
-instead of an ``AttributeError`` deep inside a scan.
+instead of an ``AttributeError`` deep inside a scan. Operators may additionally
+define ``prepare_for_solve()`` — a per-solve setup hook ``solve()`` invokes once,
+outside the solver's while_loop/scan (e.g. :class:`ShardedGram` gathers its
+sharded inputs once instead of all-gathering per matvec).
+
+Pathwise conditioning writes every posterior sample as ``f(·) + K(·)X w`` with
+the prior ``f`` a *feature expansion* Φ(·)w (§2.2.2) — the feature side is the
+dominant non-Gram cost at the paper's scales, and :class:`FeatureOperator` is its
+protocol (required ``phi_mv``/``phi_t_mv``/``num_features``/``shape``; optional
+``features``). ``FourierFeatures``/``PriorSamples`` (core/rff.py) implement it
+over the fused differentiable RFF kernels, and :class:`RFFGram` closes the loop:
+the feature surrogate ΦΦᵀ + σ²I *as* a LinearOperator, solvable and usable as a
+feature-space preconditioner. See docs/features.md.
 
 All concrete operators are frozen, pytree-registered dataclasses: hyperparameters
 and inputs are traced leaves (same treedef + shapes ⇒ compiled solves are
@@ -47,14 +60,16 @@ from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from ..kernels.ops import gram_mv, gram_rows_matvec
 from .kernels_fn import KernelParams, gram, gram_diag, matvec
 
-if TYPE_CHECKING:  # runtime import would cycle: kronecker → solvers.spec → here
+if TYPE_CHECKING:  # runtime imports would cycle: kronecker → solvers.spec → here,
+    # and rff → here (for the FeatureOperator protocol base)
     from .kronecker import LatentKroneckerGP
+    from .rff import FourierFeatures
 
 
 # ---------------------------------------------------------------------------
@@ -64,15 +79,25 @@ if TYPE_CHECKING:  # runtime import would cycle: kronecker → solvers.spec → 
 #: Capabilities beyond the required ``mv``/``shape``/``diag_part``/``noise``.
 OPTIONAL_CAPABILITIES = ("rows_mv", "rows_t_mv", "block_at", "precond_factor")
 
+#: FeatureOperator capabilities beyond the required ``phi_mv``/``phi_t_mv``/
+#: ``num_features``/``shape``: ``features`` materialises Φ(x) (reference path,
+#: RFF preconditioner factors).
+OPTIONAL_FEATURE_CAPABILITIES = ("features",)
+
 
 def supports(op, *caps: str) -> bool:
     """True iff ``op`` provides every named capability (method or attribute)."""
     return all(callable(getattr(op, c, None)) or hasattr(op, c) for c in caps)
 
 
-def capabilities(op) -> tuple:
+def capabilities(op, optional: tuple = OPTIONAL_CAPABILITIES) -> tuple:
     """The optional capabilities ``op`` provides (sorted, for error messages)."""
-    return tuple(c for c in OPTIONAL_CAPABILITIES if supports(op, c))
+    return tuple(c for c in optional if supports(op, c))
+
+
+def feature_capabilities(op) -> tuple:
+    """The optional :class:`FeatureOperator` capabilities ``op`` provides."""
+    return capabilities(op, OPTIONAL_FEATURE_CAPABILITIES)
 
 
 def require_capabilities(op, caps, *, consumer: str) -> None:
@@ -83,13 +108,21 @@ def require_capabilities(op, caps, *, consumer: str) -> None:
     """
     missing = tuple(c for c in caps if not supports(op, c))
     if missing:
-        have = capabilities(op)
+        feature_side = all(c in OPTIONAL_FEATURE_CAPABILITIES for c in missing)
+        have = capabilities(
+            op, OPTIONAL_FEATURE_CAPABILITIES if feature_side else OPTIONAL_CAPABILITIES
+        )
+        hint = (
+            "Fused feature operators need the 'features' capability only for "
+            "materialised reference paths and RFF preconditioner factors."
+            if feature_side
+            else "Matvec-only operators support CG-family specs; SGD/SDD/AP "
+            "need row-block access (rows_mv/rows_t_mv/block_at)."
+        )
         raise TypeError(
             f"{consumer} needs operator capabilities {missing} that "
             f"{type(op).__name__} does not provide (optional capabilities it "
-            f"has: {have or '()'}). Matvec-only operators support CG-family "
-            f"specs; SGD/SDD/AP need row-block access (rows_mv/rows_t_mv/"
-            f"block_at)."
+            f"has: {have or '()'}). {hint}"
         )
 
 
@@ -123,6 +156,52 @@ class LinearOperator:
         """Materialised A — O(n²); reference/tests only. Default: n matvecs."""
         n = self.shape[0]
         return self.mv(jnp.eye(n))
+
+
+class FeatureOperator:
+    """Protocol base for feature maps Φ: the rectangular twin of
+    :class:`LinearOperator`.
+
+    A feature operator is a map Φ(·) into ``num_features`` dimensions, touched
+    only through its two contractions — never through a materialised feature
+    matrix. Required surface:
+
+    * ``num_features``   — the feature dimension F of Φ(x): (n, F);
+    * ``shape``          — ``(None, F)``: the row count is input-dependent
+                           (feature maps are evaluable anywhere, unlike the
+                           square operators bound to training rows);
+    * ``phi_mv(x, w)``   — Φ(x) @ w, the prior-sample evaluation primitive
+                           (pathwise conditioning, Thompson ascent);
+    * ``phi_t_mv(x, u)`` — Φ(x)ᵀ @ u, the SGD regulariser pullback (Eq. 3.3).
+
+    Optional capability (absence detected by ``hasattr``, exactly like the
+    LinearOperator capabilities): ``features(x)`` materialises Φ(x) — the
+    reference path and the RFF preconditioner-factor build. Consumers verify
+    with ``require_capabilities(op, ("features",), consumer=...)``.
+
+    Both primitives must be differentiable w.r.t. ``x`` and the map's own
+    parameters on every backend — the fused Pallas implementations carry custom
+    VJPs (kernels/rff_matvec.py), so Thompson's Adam ascent and the SGD
+    regulariser gradient run fused end to end.
+
+    Implementations are frozen, pytree-registered dataclasses
+    (``FourierFeatures``, ``PriorSamples`` — core/rff.py): same treedef + shapes
+    ⇒ compiled consumers are reused across fresh feature draws.
+    """
+
+    @property
+    def num_features(self) -> int:
+        raise NotImplementedError(f"{type(self).__name__} must define num_features")
+
+    @property
+    def shape(self) -> tuple:
+        return (None, self.num_features)
+
+    def phi_mv(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        raise NotImplementedError(f"{type(self).__name__} must define phi_mv")
+
+    def phi_t_mv(self, x: jax.Array, u: jax.Array) -> jax.Array:
+        raise NotImplementedError(f"{type(self).__name__} must define phi_t_mv")
 
 
 # ---------------------------------------------------------------------------
@@ -270,6 +349,95 @@ class Gram(_InstrumentedOp):
 
 
 # ---------------------------------------------------------------------------
+# RFFGram — the feature-space surrogate ΦΦᵀ + σ²I as a LinearOperator
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RFFGram(_InstrumentedOp):
+    """The operator A = Φ(X) Φ(X)ᵀ + σ² I — the random-feature surrogate of the
+    Gram operator (ΦΦᵀ is an unbiased K estimate, §2.2.2), touched only through
+    two fused feature matvecs per ``mv``.
+
+    Bridges the two protocols: any :class:`FeatureOperator` (a ``FourierFeatures``
+    draw) becomes a solvable :class:`LinearOperator` — ``solve(RFFGram(...), b,
+    spec)`` runs any CG-family spec with O(n·(d+s)) memory per matvec on the
+    Pallas backend — and its ``precond_factor`` exposes the materialised Φ as an
+    exact low-rank factor (A = LLᵀ + σ²I with L = Φ), making it a feature-space
+    preconditioner / surrogate for full Gram solves (the ``"rff"`` precond spec).
+    """
+
+    x: jax.Array  # (n, d) training inputs
+    ff: "FourierFeatures"  # the feature map (a FeatureOperator)
+    sigma2: jax.Array  # () noise variance σ²
+    # feature-matvec backend override; None inherits ff.backend. A spec's
+    # ``backend`` field pins it through solve(), like Gram/ShardedGram.
+    backend: Optional[str] = dataclasses.field(default=None, metadata=dict(static=True))
+    instrument: bool = dataclasses.field(default=False, metadata=dict(static=True))
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def shape(self) -> tuple:
+        return (self.x.shape[0], self.x.shape[0])
+
+    @property
+    def noise(self) -> jax.Array:
+        return self.sigma2
+
+    def mv(self, v: jax.Array) -> jax.Array:
+        """(ΦΦᵀ + σ²I) @ v = Φ(Φᵀv) + σ²v — two fused feature matvecs."""
+        bk = self.backend
+        out = self.ff.phi_mv(
+            self.x, self.ff.phi_t_mv(self.x, v, backend=bk), backend=bk
+        ) + self.sigma2 * v
+        self._count(_bump_mv, out)
+        return out
+
+    def diag_part(self) -> jax.Array:
+        """diag(ΦΦᵀ) + σ². Paired sin/cos features satisfy Σ_j Φ_ij² = σ_f²
+        exactly (sin² + cos² = 1 per frequency); the cos-only variant needs the
+        materialised rows."""
+        if self.ff.paired:
+            diag = jnp.broadcast_to(self.ff.signal, (self.n,))
+        else:
+            diag = jnp.sum(self.ff.features(self.x) ** 2, axis=1)
+        return diag + self.sigma2
+
+    def precond_factor(
+        self, rank: int, key: Optional[jax.Array] = None, method: str = "rff"
+    ) -> jax.Array:
+        """The materialised feature matrix Φ — an *exact* factor (A = ΦΦᵀ + σ²I,
+        no approximation), so Woodbury preconditioning of this operator is an
+        exact inverse. Only ``method="rff"`` is meaningful here (the ``RFF``
+        precond spec): a Nyström/pivoted-Cholesky request would silently get a
+        factor of the operator's full feature count instead of the requested
+        low-rank approximation, so it raises. ``rank``/``key`` are accepted for
+        interface parity and ignored: the factor's rank is the operator's
+        feature count.
+        """
+        if method != "rff":
+            raise ValueError(
+                f"RFFGram's only factor is its own feature matrix (method "
+                f"'rff', {self.ff.num_features} columns); a {method!r} factor "
+                f"of rank {rank} is not available — use CG(precond=RFF()) or "
+                f"Jacobi() on this operator"
+            )
+        require_capabilities(
+            self.ff, ("features",), consumer="RFFGram.precond_factor"
+        )
+        return self.ff.features(self.x)
+
+    def dense(self) -> jax.Array:
+        """Materialised ΦΦᵀ + σ²I (tests / small-n reference only)."""
+        phi = self.ff.features(self.x)
+        return phi @ phi.T + self.sigma2 * jnp.eye(self.n, dtype=self.x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # NormalEq — inducing-point normal equations (§3.2.3), matvec-only
 # ---------------------------------------------------------------------------
 
@@ -399,8 +567,17 @@ class ShardedGram(_InstrumentedOp):
     ``rows_t_mv`` all-gathers per-device row blocks, and ``block_at`` gathers
     the |idx|×|idx| principal block from the global (sharded) inputs.
 
+    ``gather_once=True`` trades memory for collectives: instead of all-gathering
+    the sharded inputs on *every* matvec (an O(n·d) collective per solver
+    iteration), ``prepare_for_solve()`` — invoked once per solve by ``solve()``,
+    outside the solver's while_loop/scan — replicates them into ``x_full``, and
+    every subsequent ``mv``/``rows_mv``/``rows_t_mv`` reads the cached panel.
+    Use it when the replicated (n, d) panel fits device memory (d is small; the
+    K blocks still never materialise). Default off: the per-matvec gather keeps
+    the strict per-device O(n_local·d) input footprint.
+
     Memory per device: O(n_local · chunk) — the paper's linear-memory claim,
-    per device.
+    per device (plus O(n·d) with ``gather_once``).
     """
 
     x: jax.Array  # (n, d) training inputs, row-sharded over data_axes
@@ -411,6 +588,9 @@ class ShardedGram(_InstrumentedOp):
     backend: str = dataclasses.field(default="auto", metadata=dict(static=True))
     block: int = dataclasses.field(default=256, metadata=dict(static=True))
     instrument: bool = dataclasses.field(default=False, metadata=dict(static=True))
+    # replicated input panel, populated by prepare_for_solve() when gather_once
+    x_full: Optional[jax.Array] = None
+    gather_once: bool = dataclasses.field(default=False, metadata=dict(static=True))
 
     @property
     def n(self) -> int:
@@ -431,25 +611,48 @@ class ShardedGram(_InstrumentedOp):
             block=self.block, row_chunk=self.row_chunk,
         )
 
+    def prepare_for_solve(self) -> "ShardedGram":
+        """Per-solve setup hook (called once by ``solve()``, outside the solver
+        loop): with ``gather_once``, replicate the sharded inputs into
+        ``x_full`` so no matvec inside the loop pays the O(n·d) all_gather."""
+        if not self.gather_once or self.x_full is not None:
+            return self
+        x_full = jax.device_put(
+            self.x, NamedSharding(self.mesh, P(None, None))
+        )
+        return dataclasses.replace(self, x_full=x_full)
+
     def mv(self, v: jax.Array) -> jax.Array:
-        """(K + σ²I) @ v: per-device block-row matvec + all_gather. v replicated."""
+        """(K + σ²I) @ v: per-device block-row matvec + all_gather of the
+        result. v replicated; the input panel comes from ``x_full`` when
+        pre-gathered, else a per-matvec all_gather."""
         axes = self.data_axes
         squeeze = v.ndim == 1
         v2 = v[:, None] if squeeze else v
 
-        def body(x_local, v_all):
+        def block_row(x_local, x_all, v_all):
             i = jax.lax.axis_index(axes)
             n_local = x_local.shape[0]
-            x_all = jax.lax.all_gather(x_local, axes, tiled=True)
             out = self._local_mv(x_local, x_all, v_all)
             v_local = jax.lax.dynamic_slice_in_dim(v_all, i * n_local, n_local, axis=0)
             out = out + self.params.noise * v_local
             return jax.lax.all_gather(out, axes, tiled=True)
 
-        out = shard_map(
-            body, mesh=self.mesh, in_specs=(P(axes, None), P(None, None)),
-            out_specs=P(None, None), check_rep=False,
-        )(self.x, v2)
+        if self.x_full is not None:
+            out = shard_map(
+                block_row, mesh=self.mesh,
+                in_specs=(P(axes, None), P(None, None), P(None, None)),
+                out_specs=P(None, None), check_rep=False,
+            )(self.x, self.x_full, v2)
+        else:
+            def body(x_local, v_all):
+                x_all = jax.lax.all_gather(x_local, axes, tiled=True)
+                return block_row(x_local, x_all, v_all)
+
+            out = shard_map(
+                body, mesh=self.mesh, in_specs=(P(axes, None), P(None, None)),
+                out_specs=P(None, None), check_rep=False,
+            )(self.x, v2)
         self._count(_bump_mv, out)
         return out[:, 0] if squeeze else out
 
@@ -461,19 +664,30 @@ class ShardedGram(_InstrumentedOp):
         squeeze = u.ndim == 1
         u2 = u[:, None] if squeeze else u
 
-        def body(x_local, idx_rep, u_all):
+        def contract(x_local, xi, u_all):
             i = jax.lax.axis_index(axes)
             n_local = x_local.shape[0]
-            x_all = jax.lax.all_gather(x_local, axes, tiled=True)
-            xi = x_all[idx_rep]  # (|idx|, d)
             u_local = jax.lax.dynamic_slice_in_dim(u_all, i * n_local, n_local, axis=0)
             part = self._local_mv(xi, x_local, u_local)
             return jax.lax.psum(part, axes)
 
-        out = shard_map(
-            body, mesh=self.mesh, in_specs=(P(axes, None), P(None), P(None, None)),
-            out_specs=P(None, None), check_rep=False,
-        )(self.x, idx, u2)
+        if self.x_full is not None:
+            xi = self.x_full[idx]  # gathered once per solve, indexed replicated
+            out = shard_map(
+                contract, mesh=self.mesh,
+                in_specs=(P(axes, None), P(None, None), P(None, None)),
+                out_specs=P(None, None), check_rep=False,
+            )(self.x, xi, u2)
+        else:
+            def body(x_local, idx_rep, u_all):
+                x_all = jax.lax.all_gather(x_local, axes, tiled=True)
+                return contract(x_local, x_all[idx_rep], u_all)
+
+            out = shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(axes, None), P(None), P(None, None)),
+                out_specs=P(None, None), check_rep=False,
+            )(self.x, idx, u2)
         self._count(_bump_rows, out)
         return out[:, 0] if squeeze else out
 
@@ -484,23 +698,34 @@ class ShardedGram(_InstrumentedOp):
         squeeze = u.ndim == 1
         u2 = u[:, None] if squeeze else u
 
-        def body(x_local, idx_rep, u_rep):
-            x_all = jax.lax.all_gather(x_local, axes, tiled=True)
-            xi = x_all[idx_rep]
+        def row_block(x_local, xi, u_rep):
             out_local = self._local_mv(x_local, xi, u_rep)
             return jax.lax.all_gather(out_local, axes, tiled=True)
 
-        out = shard_map(
-            body, mesh=self.mesh, in_specs=(P(axes, None), P(None), P(None, None)),
-            out_specs=P(None, None), check_rep=False,
-        )(self.x, idx, u2)
+        if self.x_full is not None:
+            xi = self.x_full[idx]
+            out = shard_map(
+                row_block, mesh=self.mesh,
+                in_specs=(P(axes, None), P(None, None), P(None, None)),
+                out_specs=P(None, None), check_rep=False,
+            )(self.x, xi, u2)
+        else:
+            def body(x_local, idx_rep, u_rep):
+                x_all = jax.lax.all_gather(x_local, axes, tiled=True)
+                return row_block(x_local, x_all[idx_rep], u_rep)
+
+            out = shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(axes, None), P(None), P(None, None)),
+                out_specs=P(None, None), check_rep=False,
+            )(self.x, idx, u2)
         self._count(_bump_rows, out)
         return out[:, 0] if squeeze else out
 
     def block_at(self, idx: jax.Array) -> jax.Array:
         """K[idx, idx] — gathered from the global (sharded) inputs; the |idx|×d
         gather and |idx|² block are small and land replicated."""
-        xi = jnp.take(self.x, idx, axis=0)
+        xi = jnp.take(self.x_full if self.x_full is not None else self.x, idx, axis=0)
         return gram(self.params, xi, xi)
 
     def diag_part(self) -> jax.Array:

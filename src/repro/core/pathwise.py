@@ -33,9 +33,12 @@ from .solvers.spec import SpecLike, as_spec, solve
 class PosteriorFunctions:
     """s posterior function samples + the posterior mean, evaluable anywhere.
 
-    Evaluation is one cross-covariance matvec K(·, X) @ [weights] through the
-    same backend that drove the solve — the (n*, n) cross-Gram block is never
-    materialised.
+    Evaluation is one fused prior-feature matvec Φ(·) @ W plus one
+    cross-covariance matvec K(·, X) @ [weights], both through the same backend
+    that drove the solve — neither the (n*, 2m) feature matrix nor the (n*, n)
+    cross-Gram block is ever materialised, and both paths carry custom VJPs, so
+    Thompson sampling's Adam ascent differentiates straight through the fused
+    kernels by default on TPU.
     """
 
     params: KernelParams
@@ -78,8 +81,8 @@ def pathwise_targets(
     [y | f_X+ε]. Keeping ε in the δ channel lets SGD apply the Eq. 3.6
     variance-reduction shift; every other solver folds it into the RHS.
     """
-    # eager, never differentiated through → fused RFF matvec on TPU
-    f_x = prior.with_backend("auto")(op.x)  # (n, s)
+    # prior defaults to backend="auto": fused RFF matvec on TPU, features on CPU
+    f_x = prior(op.x)  # (n, s)
     eps = jnp.sqrt(op.noise) * jax.random.normal(key, f_x.shape, dtype=f_x.dtype)
     data = jnp.concatenate([y[:, None], f_x], axis=1)
     delta = jnp.concatenate([jnp.zeros_like(y)[:, None], eps / op.noise], axis=1)

@@ -1,18 +1,27 @@
 """Preconditioners for CG (§2.2.4; Gardner et al. 2018, Wang et al. 2019).
 
-Both build a rank-m surrogate K ≈ L Lᵀ and apply (L Lᵀ + σ²I)⁻¹ via Woodbury in
-O(n·m) per application:
+The low-rank family builds a rank-m surrogate K ≈ L Lᵀ and applies
+(L Lᵀ + σ²I)⁻¹ via Woodbury in O(n·m) per application:
 
   * ``nystrom``: uniform-subset Nyström (TPU default — one m×m eig + matmuls).
   * ``pivoted_cholesky``: greedy diagonal pivoting (paper fidelity; sequential,
     latency-bound — kept for benchmark parity, see DESIGN.md §2).
+  * ``rff``: the materialised random-feature matrix Φ as the factor (ΦΦᵀ is an
+    unbiased K estimate, §2.2.2) — the feature-space preconditioner, sharing its
+    surrogate with the pathwise prior (see ``RFFGram`` in core/operators.py and
+    docs/features.md).
 
 Factor construction is an *operator capability*: preconditioner specs call
 ``op.precond_factor(rank, key=, method=)`` (see core/operators.py), which routes
 here via :func:`low_rank_factor` — so any operator that can produce a low-rank
-factor of its K part (``Gram``, ``ShardedGram``) is preconditionable, and
-matvec-only operators raise a clear capability error instead of a type check on
-``Gram``.
+factor of its K part (``Gram``, ``ShardedGram``, ``RFFGram``) is
+preconditionable, and matvec-only operators raise a clear capability error
+instead of a type check on ``Gram``.
+
+:class:`JacobiPrecond` is the zero-setup fallback: diagonal scaling built from
+the protocol's *required* ``diag_part()``, so every operator — including the
+matvec-only ``LatentKroneckerOp`` and ``NormalEq`` — can be preconditioned by
+the ``Jacobi`` spec without any capability beyond the protocol itself.
 """
 from __future__ import annotations
 
@@ -71,6 +80,43 @@ class WoodburyPrecond(LinearOperator):
         """M⁻¹ @ r via Woodbury: (r − L (LᵀL + σ²I)⁻¹ Lᵀ r) / σ²."""
         sol = jax.scipy.linalg.cho_solve((self.chol, True), self.l.T @ r)
         return (r - self.l @ sol) / self.sigma2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class JacobiPrecond(LinearOperator):
+    """Diagonal (Jacobi) preconditioner M = diag(A) as a pytree LinearOperator.
+
+    Built from the protocol's required ``diag_part()`` — the cheap fallback for
+    operators without a ``precond_factor`` capability (``LatentKroneckerOp``,
+    ``NormalEq``). Same conventions as :class:`WoodburyPrecond`: ``mv`` is the
+    forward apply M @ v, ``__call__`` the preconditioner apply r ↦ M⁻¹r that CG
+    consumes. A pytree of one (n,) leaf, so per-solve rebuilds (fresh
+    hyperparameters) reuse the compiled CG solve.
+    """
+
+    d: jax.Array  # (n,) diag(A) — includes the σ² shift (diag_part convention)
+
+    @property
+    def shape(self) -> tuple:
+        return (self.d.shape[0], self.d.shape[0])
+
+    def mv(self, v: jax.Array) -> jax.Array:
+        """M @ v = diag(A) ⊙ v."""
+        return self.d[:, None] * v if v.ndim == 2 else self.d * v
+
+    def diag_part(self) -> jax.Array:
+        return self.d
+
+    def __call__(self, r: jax.Array) -> jax.Array:
+        """M⁻¹ @ r = r / diag(A)."""
+        return r / self.d[:, None] if r.ndim == 2 else r / self.d
+
+
+def jacobi_preconditioner(op: LinearOperator) -> JacobiPrecond:
+    """The Jacobi apply for any protocol operator — diag_part() is required, so
+    this never raises a capability error."""
+    return JacobiPrecond(d=op.diag_part())
 
 
 def _woodbury_apply(l: jax.Array, sigma2: jax.Array) -> WoodburyPrecond:
@@ -133,7 +179,25 @@ def pivoted_cholesky_preconditioner(
     return _woodbury_apply(l, params.noise)
 
 
-PRECOND_FACTOR_METHODS = ("nystrom", "pivoted_cholesky")
+def rff_factor(
+    params: KernelParams, x: jax.Array, key: jax.Array, rank: int = 256
+) -> jax.Array:
+    """(n, rank) random-feature factor L = Φ(x) with E[LLᵀ] = K (§2.2.2).
+
+    The feature-space preconditioner: a fresh paired sin/cos feature draw from
+    the kernel's spectral density, materialised once at build time (rank must be
+    even — one sin and one cos column per frequency)."""
+    from .rff import make_fourier_features  # deferred: rff imports operators
+
+    if rank % 2:
+        raise ValueError(
+            f"rff precond rank must be even (paired sin/cos columns); got {rank}"
+        )
+    ff = make_fourier_features(params, key, rank, x.shape[1], paired=True)
+    return ff.features(x)
+
+
+PRECOND_FACTOR_METHODS = ("nystrom", "pivoted_cholesky", "rff")
 
 
 def low_rank_factor(
@@ -151,6 +215,9 @@ def low_rank_factor(
         return nystrom_factor(params, x, key, rank)
     if method == "pivoted_cholesky":
         return _pivoted_cholesky_factor(params, x, rank)
+    if method == "rff":
+        key = jax.random.PRNGKey(0) if key is None else key
+        return rff_factor(params, x, key, rank)
     raise ValueError(
         f"unknown precond factor method {method!r}; expected one of "
         f"{PRECOND_FACTOR_METHODS}"

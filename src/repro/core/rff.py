@@ -5,6 +5,17 @@ or the lower-variance paired sin/cos form (Sutherland & Schneider, 2015). Pathwi
 conditioning (core/pathwise.py) consumes these to evaluate f_X (train) and f_X* (test)
 *jointly* in O((n+n*) m), which is the paper's replacement for O((n+n*)³) conditional
 sampling.
+
+Both classes implement the :class:`~repro.core.operators.FeatureOperator` protocol
+(``phi_mv``/``phi_t_mv``/``num_features``/``shape``) over the backend-dispatched
+feature matvecs in kernels/ops.py: on the ``pallas`` backend the (n × 2m) feature
+matrix never exists in HBM, and — since the fused kernels carry full custom VJPs
+(forward, transpose, and input cotangents, kernels/rff_matvec.py) — the fused path
+is differentiable w.r.t. inputs, frequencies, weights and σ_f². The historical
+"must not differentiate through the fused path" restriction is gone: ``auto`` is
+the default everywhere, so Thompson sampling's Adam ascent and the SGD regulariser
+gradient run fused end to end on TPU and fall back to materialised features on CPU.
+See docs/features.md.
 """
 from __future__ import annotations
 
@@ -15,23 +26,47 @@ import jax
 import jax.numpy as jnp
 
 from .kernels_fn import KernelParams, spectral_sample
+from .operators import FeatureOperator
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class FourierFeatures:
+class FourierFeatures(FeatureOperator):
+    """The feature map Φ itself — a :class:`FeatureOperator` with fused,
+    differentiable contractions.
+
+    ``backend`` selects the feature-matvec path (see kernels/ops.py):
+    ``"auto"`` (fused Pallas on TPU, materialised features elsewhere),
+    ``"pallas"`` (forced fused; interpret mode off-TPU), or ``"features"``
+    (always materialise — reference path, any variant). The fused kernels only
+    implement the paired sin/cos map; ``auto`` falls back to features for the
+    cos-only variant, explicit ``pallas`` raises.
+    """
+
     omega: jax.Array  # (m, d) frequencies
     phase: jax.Array  # (m,) phases (cos variant) — unused in paired variant
     signal: jax.Array  # σ_f² signal variance
     paired: bool = dataclasses.field(default=True, metadata=dict(static=True))
+    backend: str = dataclasses.field(default="auto", metadata=dict(static=True))
 
     @property
     def num_features(self) -> int:
         m = self.omega.shape[0]
         return 2 * m if self.paired else m
 
+    def with_backend(self, backend: str) -> "FourierFeatures":
+        return dataclasses.replace(self, backend=backend)
+
+    def _resolve(self, backend: Optional[str]) -> str:
+        from ..kernels.ops import resolve_feature_backend  # deferred: pallas import
+
+        return resolve_feature_backend(
+            self.backend if backend is None else backend, paired=self.paired
+        )
+
     def features(self, x: jax.Array) -> jax.Array:
-        """Φ(x): (n, num_features). Uses the paired sin/cos map by default."""
+        """Φ(x) materialised: (n, num_features) — the optional ``features``
+        capability (reference path, RFF preconditioner factors)."""
         proj = x @ self.omega.T  # (n, m)
         m = self.omega.shape[0]
         if self.paired:
@@ -39,6 +74,30 @@ class FourierFeatures:
             return scale * jnp.concatenate([jnp.sin(proj), jnp.cos(proj)], axis=-1)
         scale = jnp.sqrt(2.0 * self.signal / m)
         return scale * jnp.cos(proj + self.phase[None, :])
+
+    def phi_mv(self, x: jax.Array, w: jax.Array, *, backend: Optional[str] = None
+               ) -> jax.Array:
+        """Φ(x) @ w: (n, s-like). Differentiable on every backend."""
+        from ..kernels.ops import FEATURE_TRACE_COUNTS, rff_mv  # deferred: pallas
+
+        if not self.paired:  # cos-only: no fused form (``_resolve`` refuses pallas)
+            self._resolve(backend)
+            FEATURE_TRACE_COUNTS["features"] += 1  # materialises Φ below
+            return self.features(x) @ w
+        return rff_mv(x, self.omega, w, signal=self.signal,
+                      backend=self._resolve(backend))
+
+    def phi_t_mv(self, x: jax.Array, u: jax.Array, *, backend: Optional[str] = None
+                 ) -> jax.Array:
+        """Φ(x)ᵀ @ u: (num_features, s-like) — the SGD regulariser pullback."""
+        from ..kernels.ops import FEATURE_TRACE_COUNTS, rff_t_mv  # deferred: pallas
+
+        if not self.paired:
+            self._resolve(backend)
+            FEATURE_TRACE_COUNTS["features"] += 1  # materialises Φ below
+            return self.features(x).T @ u
+        return rff_t_mv(x, self.omega, u, signal=self.signal,
+                        backend=self._resolve(backend))
 
 
 def make_fourier_features(
@@ -52,44 +111,45 @@ def make_fourier_features(
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
-class PriorSamples:
+class PriorSamples(FeatureOperator):
     """s prior function samples f^(i)(·) = Φ(·) w_i, evaluable anywhere.
 
-    ``backend`` selects the evaluation path: ``"features"`` (default)
-    materialises Φ(x) and matmuls — differentiable everywhere; ``"auto"``
-    evaluates through the fused Pallas RFF matvec on TPU (the (n × 2m) feature
-    matrix never hits HBM — kernels/rff_matvec.py) and through features
-    elsewhere; ``"fused"`` forces the Pallas kernel (interpret mode off-TPU).
-
-    The fused path has no transpose rule, so it must not be differentiated
-    *through* — the default stays ``"features"`` because user-facing posterior
-    samples are (e.g. Thompson sampling gradient-ascends through them). The
-    eager, never-differentiated prior evaluations (MLL probes, pathwise solve
-    targets) opt in to ``"auto"`` via ``with_backend``.
+    A :class:`FeatureOperator` with bound weights: ``__call__(x)`` is
+    ``phi_mv(x, w)`` through the map's backend dispatch. The default backend is
+    ``"auto"`` — fused Pallas RFF matvecs on TPU (the (n × 2m) feature matrix
+    never hits HBM), materialised features elsewhere — and because the fused
+    kernels carry a full custom VJP this default is safe to differentiate
+    *through*: Thompson sampling gradient-ascends posterior samples on the fused
+    path. ``"features"`` forces materialisation; ``"pallas"`` (alias
+    ``"fused"``) forces the fused kernel (interpret mode off-TPU).
     """
 
     ff: FourierFeatures
     w: jax.Array  # (num_features, s)
-    backend: str = dataclasses.field(default="features", metadata=dict(static=True))
+    backend: str = dataclasses.field(default="auto", metadata=dict(static=True))
+
+    @property
+    def num_features(self) -> int:
+        return self.ff.num_features
+
+    @property
+    def num_samples(self) -> int:
+        return self.w.shape[1]
 
     def with_backend(self, backend: str) -> "PriorSamples":
         return dataclasses.replace(self, backend=backend)
 
-    def __call__(self, x: jax.Array) -> jax.Array:
-        if self.backend == "fused" and not self.ff.paired:
-            raise ValueError(
-                "the fused RFF matvec only implements the paired sin/cos "
-                "feature map; use paired features or backend='features'"
-            )
-        use_fused = self.ff.paired and (
-            self.backend == "fused"
-            or (self.backend == "auto" and jax.default_backend() == "tpu")
-        )
-        if use_fused:
-            from ..kernels.ops import rff_matvec  # deferred: pallas import
+    def features(self, x: jax.Array) -> jax.Array:
+        return self.ff.features(x)
 
-            return rff_matvec(x, self.ff.omega, self.w, signal=self.ff.signal)
-        return self.ff.features(x) @ self.w  # (n, s)
+    def phi_mv(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        return self.ff.phi_mv(x, w, backend=self.backend)
+
+    def phi_t_mv(self, x: jax.Array, u: jax.Array) -> jax.Array:
+        return self.ff.phi_t_mv(x, u, backend=self.backend)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.phi_mv(x, self.w)  # (n, s)
 
 
 def sample_prior(

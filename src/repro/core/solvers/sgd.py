@@ -15,6 +15,14 @@ term + fresh random Fourier features each step for the regulariser:
 
     ĝ(v) = (n/p) Σ_{i∈I} k_i (k_iᵀ v − b_i)  +  σ² Φ (Φᵀ (v − δ))
 
+The regulariser runs through the :class:`~repro.core.operators.FeatureOperator`
+protocol — one ``phi_t_mv`` (Φᵀ(v − δ)) and one ``phi_mv`` per step, dispatched
+through the same backend as the operator's Gram matvecs — so on the Pallas
+backend Eq. 3.3 runs fused end to end and the (n × 2q) feature matrix is never
+materialised (fresh features every step made this the dominant non-row cost).
+Because the features are a pytree with step-independent shapes, the fused path
+stages once for the whole scan.
+
 Uses Nesterov momentum + arithmetic tail (Polyak) averaging, per §3.3.
 """
 from __future__ import annotations
@@ -27,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels_fn import spectral_sample
+from ..rff import FourierFeatures
 from .base import LinearOperator, SolveResult, as_matrix_rhs, finalize
 
 
@@ -61,6 +70,15 @@ def solve_sgd(
     v0 = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
     lr = step_size_times_n / n
     tail_start = int(num_steps * (1.0 - average_tail))
+    # the regulariser's feature matvecs follow the operator's backend (pinned by
+    # the spec through solve(), like the Gram matvecs) — EXCEPT on mesh-sharded
+    # operators: pallas_call does not partition a row-sharded x under GSPMD, so
+    # the distributed path keeps the materialised-feature contraction (plain ops,
+    # partitionable) until the fused kernel is shard_map-wrapped (ROADMAP).
+    if hasattr(op, "mesh"):
+        feat_backend = "features"
+    else:
+        feat_backend = getattr(op, "backend", "auto") or "auto"
 
     def step(carry, t):
         v, mom, avg, cnt = carry
@@ -72,11 +90,15 @@ def solve_sgd(
         # materialised — one forward and one transposed contraction per step
         err = op.rows_mv(idx, look) - b2[idx]  # (p, s)
         g_fit = (n / batch_size) * op.rows_t_mv(idx, err)
-        omega = spectral_sample(op.params, kf, num_features, d)
-        phi = jnp.sqrt(op.params.signal / num_features) * jnp.concatenate(
-            [jnp.sin(op.x @ omega.T), jnp.cos(op.x @ omega.T)], axis=-1
-        )  # (n, 2q): unbiased ΦΦᵀ ≈ K
-        g_reg = sigma2 * (phi @ (phi.T @ (look - delta2)))
+        # fresh unbiased feature draw (ΦΦᵀ ≈ K): one transposed and one forward
+        # fused feature matvec — Φ (n, 2q) never materialised on pallas
+        ff = FourierFeatures(
+            omega=spectral_sample(op.params, kf, num_features, d),
+            phase=jnp.zeros((num_features,)),
+            signal=op.params.signal,
+            backend=feat_backend,
+        )
+        g_reg = sigma2 * ff.phi_mv(op.x, ff.phi_t_mv(op.x, look - delta2))
         g = g_fit + g_reg
         gn = jnp.linalg.norm(g, axis=0, keepdims=True)
         g = g * jnp.minimum(1.0, grad_clip * n / jnp.maximum(gn, 1e-30))

@@ -40,9 +40,9 @@ from typing import Any, Callable, ClassVar, Dict, Optional, Tuple, Type, Union
 
 import jax
 
-from ...kernels.ops import BACKENDS
+from ...kernels.ops import BACKENDS, FEATURE_BACKENDS
 from ..operators import require_capabilities
-from ..precond import woodbury_from_factor
+from ..precond import jacobi_preconditioner, woodbury_from_factor
 from .ap import solve_ap
 from .base import SolveResult
 from .cg import solve_cg
@@ -136,9 +136,40 @@ class PivotedCholesky(_FactorPrecondSpec):
     rank: int = _static(100)
 
 
-PrecondSpec = Union[Nystrom, PivotedCholesky]
+@register_precond("rff")
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RFF(_FactorPrecondSpec):
+    """Random-feature (feature-space) preconditioner: L = Φ(x), E[LLᵀ] = K.
+
+    The surrogate is the same feature expansion pathwise conditioning uses for
+    the prior (§2.2.2), so the preconditioner and the sampler share one
+    approximation family. ``rank`` counts feature *columns* (must be even:
+    paired sin/cos). On an :class:`~repro.core.operators.RFFGram` operator the
+    factor is the operator's own Φ and Woodbury becomes the exact inverse.
+    """
+
+    method: ClassVar[str] = "rff"
+    rank: int = _static(256)
+
+
+@register_precond("jacobi")
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Jacobi(_JsonSpecMixin):
+    """Diagonal (Jacobi) preconditioner built from the protocol's *required*
+    ``diag_part()`` — the cheap fallback for operators without a
+    ``precond_factor`` capability (``LatentKroneckerOp``, ``NormalEq``). Needs
+    no optional capability, so ``CG(precond=Jacobi())`` works on every operator
+    ``solve()`` accepts."""
+
+    def build(self, op, key: Optional[jax.Array] = None) -> Callable:
+        return jacobi_preconditioner(op)
+
+
+PrecondSpec = Union[Nystrom, PivotedCholesky, RFF, Jacobi]
 # a raw ``r -> M⁻¹r`` callable is also accepted wherever a PrecondSpec fits
-PrecondLike = Union[Nystrom, PivotedCholesky, Callable]
+PrecondLike = Union[Nystrom, PivotedCholesky, RFF, Jacobi, Callable]
 
 
 # ---------------------------------------------------------------------------
@@ -457,8 +488,12 @@ def solve(
     s = as_spec(spec, **overrides)
     backend = getattr(s, "backend", None)
     if backend is not None:
-        if backend not in BACKENDS:
-            raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+        # Gram backend names plus the feature names ("features" pins the
+        # materialised path on feature-backed operators like RFFGram; the Gram
+        # dispatch rejects it with its own error if pinned on a Gram operator)
+        known = BACKENDS + tuple(b for b in FEATURE_BACKENDS if b not in BACKENDS)
+        if backend not in known:
+            raise ValueError(f"unknown backend {backend!r}; expected one of {known}")
         if (
             dataclasses.is_dataclass(op)
             and getattr(op, "backend", backend) != backend
@@ -471,4 +506,10 @@ def solve(
             " is required"
         )
     require_capabilities(op, s.needs, consumer=f"solver {s.name!r}")
+    prep = getattr(op, "prepare_for_solve", None)
+    if callable(prep):
+        # per-solve setup hook, run once outside the solver's while_loop/scan —
+        # e.g. ShardedGram(gather_once=True) gathers its sharded inputs here
+        # instead of all-gathering on every matvec
+        op = prep()
     return s.run(op, b, key=key, x0=x0, delta=delta)

@@ -6,6 +6,13 @@ multi-start strategy: explore (uniform) + exploit (perturbed incumbents) candida
 top-k by sample value → Adam ascent on the sample function → acquire the argmaxes.
 Pathwise conditioning is what makes this possible: each sample is a cheap
 deterministic function evaluable at every Adam iterate.
+
+The ascent differentiates through the posterior samples — prior feature matvec
+Φ(x)w plus cross-covariance matvec — and both primitives carry custom VJPs
+(kernels/rff_matvec.py, kernels/gram_matvec.py), so on TPU every one of the
+thousands of Adam gradient evaluations runs through fused Pallas tiles without
+materialising features or cross-Gram panels (the FeatureOperator protocol,
+docs/features.md).
 """
 from __future__ import annotations
 

@@ -1,5 +1,5 @@
-"""Jit'd public wrappers around the Pallas kernels — and the library's Gram-matvec
-backend-selection layer.
+"""Jit'd public wrappers around the Pallas kernels — and the library's matvec
+backend-selection layer, for Gram *and* feature-map (RFF) contractions.
 
 Every Gram-matvec in the library routes through :func:`gram_mv` (full matvecs) or
 :func:`gram_rows_matvec` (row-block matvecs), which dispatch on a ``backend``
@@ -15,14 +15,22 @@ string:
 * ``"auto"``    — Pallas when running on TPU (interpret mode is slower than
   chunked XLA on CPU), chunked otherwise; always chunked for ``tanimoto``.
 
-All paths are differentiable w.r.t. the hyperparameters: the Pallas path wraps a
-``jax.custom_vjp`` whose backward pass is itself fused Pallas contractions, with
-σ_f², lengthscale and jitter folded in *outside* the custom-VJP core so their
-gradients flow through ordinary autodiff.
+Every feature-map matvec routes through :func:`rff_mv` (Φ(x) @ w) or
+:func:`rff_t_mv` (Φ(x)ᵀ @ u) — the ``FeatureOperator`` twins of ``gram_mv``,
+dispatching on ``"pallas"`` (fused, (n × 2m) feature matrix never in HBM) /
+``"features"`` (materialise Φ and matmul) / ``"auto"``. The Gram backend names
+``"chunked"``/``"dense"`` coerce to ``"features"``, so one spec-level ``backend``
+field pins both sides of a solve.
 
-``MATVEC_TRACE_COUNTS`` records how many Gram matvecs each backend dispatched
-(counted when the op is staged, i.e. per trace or eager call) — used by tests and
-benchmarks to prove the hot path never silently falls back.
+All paths are differentiable w.r.t. the hyperparameters: the Pallas paths wrap
+``jax.custom_vjp``\\ s whose backward passes are themselves fused Pallas
+contractions, with σ_f², lengthscale and jitter folded in *outside* the
+custom-VJP cores so their gradients flow through ordinary autodiff.
+
+``MATVEC_TRACE_COUNTS`` / ``FEATURE_TRACE_COUNTS`` record how many Gram/feature
+matvecs each backend dispatched (counted when the op is staged, i.e. per trace or
+eager call) — used by tests and benchmarks to prove the hot paths never silently
+fall back (see tests/test_backends_and_counts.py, tests/test_features.py).
 """
 from __future__ import annotations
 
@@ -30,20 +38,35 @@ import jax
 import jax.numpy as jnp
 
 from .gram_matvec import PALLAS_KINDS, gram_matvec_fused
-from .rff_matvec import rff_matvec_pallas
+from .rff_matvec import rff_matvec_fused, rff_t_matvec_fused
 from .flash_attention import flash_attention_pallas
 
 BACKENDS = ("auto", "pallas", "chunked", "dense")
+
+#: Feature-map (RFF) backends: fused Pallas vs materialised features. ``auto``
+#: is pallas on TPU, features elsewhere; Gram backend names coerce (see
+#: :func:`resolve_feature_backend`).
+FEATURE_BACKENDS = ("auto", "pallas", "features")
 
 # backend -> number of Gram matvecs dispatched (staged into a trace or run
 # eagerly). A solve that never touches "chunked" proves the fused path is the
 # hot path — see tests/test_backends_and_counts.py.
 MATVEC_TRACE_COUNTS = {"pallas": 0, "chunked": 0, "dense": 0}
 
+# backend -> number of feature matvecs (Φw / Φᵀu) dispatched. A solve whose
+# "features" count stays zero provably never materialised an (n, 2m) feature
+# matrix — the acceptance check for the fused SGD regulariser.
+FEATURE_TRACE_COUNTS = {"pallas": 0, "features": 0}
+
 
 def reset_matvec_trace_counts() -> None:
     for k in MATVEC_TRACE_COUNTS:
         MATVEC_TRACE_COUNTS[k] = 0
+
+
+def reset_feature_trace_counts() -> None:
+    for k in FEATURE_TRACE_COUNTS:
+        FEATURE_TRACE_COUNTS[k] = 0
 
 
 def _on_tpu() -> bool:
@@ -184,8 +207,54 @@ def gram_matvec(params, x, v, z=None, *, jitter=None, block=256, interpret=None)
     )
 
 
+def resolve_feature_backend(backend: str = "auto", paired: bool = True) -> str:
+    """Normalise a backend request to a concrete feature-matvec backend.
+
+    Accepts the feature names (``auto``/``pallas``/``features``) plus the Gram
+    names — ``chunked``/``dense`` coerce to ``features`` and the legacy
+    ``fused`` alias to ``pallas`` — so a solver spec's single ``backend`` field
+    pins the Gram *and* feature sides of a solve consistently. The fused kernel
+    only implements the paired sin/cos map: ``auto`` silently falls back to
+    ``features`` for the cos-only variant; explicit ``pallas`` raises.
+    """
+    if backend in ("chunked", "dense"):
+        backend = "features"
+    elif backend == "fused":
+        backend = "pallas"
+    if backend not in FEATURE_BACKENDS:
+        raise ValueError(
+            f"unknown feature backend {backend!r}; expected one of "
+            f"{FEATURE_BACKENDS} (or a Gram backend name, coerced to 'features')"
+        )
+    if backend == "auto":
+        return "pallas" if (_on_tpu() and paired) else "features"
+    if backend == "pallas" and not paired:
+        raise ValueError(
+            "the fused RFF kernels only implement the paired sin/cos feature "
+            "map; use paired features or backend='features'"
+        )
+    return backend
+
+
+def _pad_rff_operands(x, omega, halves, block):
+    """Zero-pad x rows, the ω feature rows, and any per-frequency ``halves``
+    (sin/cos weight blocks) to block multiples. Padded ω rows give cos→1
+    features, but the matching padded weight/cotangent rows are zero, so their
+    contribution vanishes; only the 1/m normalisation needs fixing (the caller
+    rescales by √(m_pad/m_true)). All pads are plain ``jnp.pad``, so their
+    transposes slice the padded cotangents off again under autodiff."""
+    m_true = omega.shape[0]
+    pad_f = (-m_true) % block
+    if pad_f:
+        omega = jnp.pad(omega, ((0, pad_f), (0, 0)))
+        halves = tuple(jnp.pad(h, ((0, pad_f), (0, 0))) for h in halves)
+    return _pad_rows(x, block), omega, halves, m_true + pad_f
+
+
 def rff_matvec(x, omega, w, *, signal=1.0, block=256, interpret=None):
-    """Φ(x) @ w (paired sin/cos RFF) — fused, feature matrix never in HBM.
+    """Φ(x) @ w (paired sin/cos RFF) — fused, feature matrix never in HBM;
+    differentiable w.r.t. ``x``, ``omega``, ``w`` and ``signal`` (custom VJP,
+    every pass a fused Pallas contraction — kernels/rff_matvec.py).
 
     ``signal`` (σ_f²) may be a traced array: the kernel runs with unit signal
     and the √(σ_f²/m) normalisation is applied outside, in plain JAX.
@@ -193,26 +262,86 @@ def rff_matvec(x, omega, w, *, signal=1.0, block=256, interpret=None):
     interpret = (not _on_tpu()) if interpret is None else interpret
     n = x.shape[0]
     m_true = omega.shape[0]
-    xp = _pad_rows(x, block)
-    pad_f = (-m_true) % block
-    if pad_f:
-        # padded ω rows give cos→1 features, but the matching padded w rows are zero,
-        # so their contribution vanishes; only the 1/m normalisation needs fixing.
-        omega = jnp.pad(omega, ((0, pad_f), (0, 0)))
-        w = jnp.concatenate(
-            [
-                jnp.pad(w[:m_true], ((0, pad_f), (0, 0))),
-                jnp.pad(w[m_true:], ((0, pad_f), (0, 0))),
-            ],
-            axis=0,
-        )
-    m_pad = m_true + pad_f
-    out = rff_matvec_pallas(
-        xp, omega, w, signal=1.0, block_m=block, block_f=block,
-        interpret=interpret,
-    )[:n]
+    xp, omega, (w_sin, w_cos), m_pad = _pad_rff_operands(
+        x, omega, (w[:m_true], w[m_true:]), block
+    )
+    wp = jnp.concatenate([w_sin, w_cos], axis=0)
+    out = rff_matvec_fused(block, block, bool(interpret), xp, omega, wp)[:n]
     # kernel scale is sqrt(1/m_pad); rescale to sqrt(signal/m_true)
     return out * jnp.sqrt(signal * (m_pad / m_true))
+
+
+def rff_t_matvec(x, omega, u, *, signal=1.0, block=256, interpret=None):
+    """Φ(x)ᵀ @ u (paired sin/cos RFF) → (2m, s) — the transposed fused matvec,
+    sin/cos halves accumulated per feature tile; differentiable throughout.
+
+    The SGD regulariser pullback primitive (Eq. 3.3): Φᵀ(v − δ) without the
+    (n × 2m) feature matrix in HBM.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m_true = omega.shape[0]
+    xp, omega, _, m_pad = _pad_rff_operands(x, omega, (), block)
+    up = _pad_rows(u, block)  # padded rows are zero ⇒ contribute nothing to Φᵀu
+    out = rff_t_matvec_fused(block, block, bool(interpret), xp, omega, up)
+    out = jnp.concatenate([out[:m_true], out[m_pad:m_pad + m_true]], axis=0)
+    return out * jnp.sqrt(signal * (m_pad / m_true))
+
+
+def _materialised_features(x, omega, signal):
+    m = omega.shape[0]
+    proj = x @ omega.T  # (n, m)
+    return jnp.sqrt(signal / m) * jnp.concatenate(
+        [jnp.sin(proj), jnp.cos(proj)], axis=-1
+    )  # (n, 2m)
+
+
+def rff_mv(
+    x: jax.Array,
+    omega: jax.Array,
+    w: jax.Array,
+    *,
+    signal=1.0,
+    backend: str = "auto",
+    block: int = 256,
+    interpret=None,
+) -> jax.Array:
+    """Φ(x) @ w through the selected feature backend — THE feature matvec entry
+    point (the ``FeatureOperator`` twin of :func:`gram_mv`); differentiable on
+    every backend. x:(n,d) ω:(m,d) w:(2m,) or (2m,s) → (n, s-like)."""
+    bk = resolve_feature_backend(backend)
+    FEATURE_TRACE_COUNTS[bk] += 1
+    squeeze = w.ndim == 1
+    w2 = w[:, None] if squeeze else w
+    if bk == "pallas":
+        out = rff_matvec(x, omega, w2, signal=signal, block=block,
+                         interpret=interpret)
+    else:
+        out = _materialised_features(x, omega, signal) @ w2
+    return out[:, 0] if squeeze else out
+
+
+def rff_t_mv(
+    x: jax.Array,
+    omega: jax.Array,
+    u: jax.Array,
+    *,
+    signal=1.0,
+    backend: str = "auto",
+    block: int = 256,
+    interpret=None,
+) -> jax.Array:
+    """Φ(x)ᵀ @ u through the selected feature backend — the transposed feature
+    matvec entry point. x:(n,d) ω:(m,d) u:(n,) or (n,s) → (2m, s-like)."""
+    bk = resolve_feature_backend(backend)
+    FEATURE_TRACE_COUNTS[bk] += 1
+    squeeze = u.ndim == 1
+    u2 = u[:, None] if squeeze else u
+    if bk == "pallas":
+        out = rff_t_matvec(x, omega, u2, signal=signal, block=block,
+                           interpret=interpret)
+    else:
+        out = _materialised_features(x, omega, signal).T @ u2
+    return out[:, 0] if squeeze else out
 
 
 def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128, interpret=None):

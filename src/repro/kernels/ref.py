@@ -58,6 +58,16 @@ def rff_matvec_ref(
     return phi @ w
 
 
+def rff_t_matvec_ref(
+    x: jax.Array, omega: jax.Array, u: jax.Array, *, signal: float = 1.0
+) -> jax.Array:
+    """Φ(x)ᵀ @ u with paired sin/cos features. x:(n,d) ω:(m,d) u:(n,s) → (2m,s)."""
+    m = omega.shape[0]
+    proj = x @ omega.T
+    phi = jnp.sqrt(signal / m) * jnp.concatenate([jnp.sin(proj), jnp.cos(proj)], -1)
+    return phi.T @ u
+
+
 def flash_attention_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
 ) -> jax.Array:

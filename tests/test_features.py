@@ -1,0 +1,412 @@
+"""FeatureOperator protocol (core/operators.py, core/rff.py) and the fused RFF
+kernel family (kernels/rff_matvec.py):
+
+* fused-vs-reference parity for the transposed kernel, and **gradient** parity
+  (``jax.grad`` through ``rff_matvec``/``rff_t_matvec`` vs materialised
+  features, interpret mode) — the PR's acceptance criterion (≤1e-4);
+* capability dispatch: paired-only fused path, ``features`` capability errors,
+  backend-name coercion;
+* pytree no-retrace for ``PriorSamples``/``FourierFeatures`` (mirrors
+  test_operators.py);
+* the SGD regulariser never materialises a feature matrix on the pallas
+  backend (``FEATURE_TRACE_COUNTS`` — the instrumented-counter idiom);
+* ``RFFGram``: the feature surrogate as a LinearOperator (mv/diag vs dense,
+  exact feature-space preconditioning, capability refusals);
+* ``Jacobi``: diagonal preconditioning from the protocol's required
+  ``diag_part`` on operators with no ``precond_factor`` capability.
+"""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernels_fn import make_params
+from repro.core.kronecker import make_lkgp
+from repro.core.operators import (
+    FeatureOperator,
+    Gram,
+    LatentKroneckerOp,
+    OPTIONAL_FEATURE_CAPABILITIES,
+    RFFGram,
+    capabilities,
+    feature_capabilities,
+    require_capabilities,
+)
+from repro.core.precond import JacobiPrecond, jacobi_preconditioner
+from repro.core.rff import FourierFeatures, make_fourier_features, sample_prior
+from repro.core.solvers.cg import cg_trace_count
+from repro.core.solvers.spec import CG, Jacobi, RFF, SGD, solve
+from repro.kernels.ops import (
+    FEATURE_TRACE_COUNTS,
+    reset_feature_trace_counts,
+    resolve_feature_backend,
+    rff_matvec,
+    rff_mv,
+    rff_t_matvec,
+    rff_t_mv,
+)
+from repro.kernels.ref import rff_matvec_ref, rff_t_matvec_ref
+
+KEY = jax.random.PRNGKey(21)
+
+
+def _rel_err(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-30)
+
+
+def _problem(n=130, m=90, s=3, d=4, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, d))
+    omega = jax.random.normal(jax.random.fold_in(key, 1), (m, d))
+    w = jax.random.normal(jax.random.fold_in(key, 2), (2 * m, s))
+    u = jax.random.normal(jax.random.fold_in(key, 3), (n, s))
+    return x, omega, w, u
+
+
+# ---------------------------------------------------------------------------
+# Transposed kernel parity + gradient parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,f,s", [(64, 64, 1), (100, 90, 2), (256, 512, 4)])
+def test_rff_t_matvec_shapes(n, f, s):
+    """Φᵀu fused vs reference, sweeping shapes incl. padding at block=64."""
+    key = jax.random.PRNGKey(n + f)
+    x = jax.random.normal(key, (n, 3))
+    omega = jax.random.normal(jax.random.fold_in(key, 1), (f, 3))
+    u = jax.random.normal(jax.random.fold_in(key, 2), (n, s))
+    out = rff_t_matvec(x, omega, u, signal=1.3, block=64, interpret=True)
+    ref = rff_t_matvec_ref(x, omega, u, signal=1.3)
+    assert out.shape == (2 * f, s)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_rff_matvec_grad_parity_vs_materialised():
+    """∂/∂{x, ω, w, σ_f²} of uᵀ(Φw) — fused custom-VJP (interpret mode) vs
+    autodiff through materialised features: ≤1e-4 relative error everywhere."""
+    x, omega, w, u = _problem()
+    sig = 1.3
+
+    def fused(x, omega, w, sig):
+        return jnp.sum(u * rff_matvec(x, omega, w, signal=sig, block=64,
+                                      interpret=True))
+
+    def ref(x, omega, w, sig):
+        return jnp.sum(u * rff_matvec_ref(x, omega, w, signal=sig))
+
+    gf = jax.grad(fused, argnums=(0, 1, 2, 3))(x, omega, w, sig)
+    gr = jax.grad(ref, argnums=(0, 1, 2, 3))(x, omega, w, sig)
+    for name, a, b in zip(("x", "omega", "w", "signal"), gf, gr):
+        assert _rel_err(a, b) < 1e-4, name
+
+
+def test_rff_t_matvec_grad_parity_vs_materialised():
+    """∂/∂{x, ω, u, σ_f²} of ⟨ḡ, Φᵀu⟩ through the fused transposed kernel."""
+    x, omega, w, u = _problem()
+    gbar = jax.random.normal(KEY, w.shape)
+    sig = 0.8
+
+    def fused(x, omega, u, sig):
+        return jnp.sum(gbar * rff_t_matvec(x, omega, u, signal=sig, block=64,
+                                           interpret=True))
+
+    def ref(x, omega, u, sig):
+        return jnp.sum(gbar * rff_t_matvec_ref(x, omega, u, signal=sig))
+
+    gf = jax.grad(fused, argnums=(0, 1, 2, 3))(x, omega, u, sig)
+    gr = jax.grad(ref, argnums=(0, 1, 2, 3))(x, omega, u, sig)
+    for name, a, b in zip(("x", "omega", "u", "signal"), gf, gr):
+        assert _rel_err(a, b) < 1e-4, name
+
+
+def test_prior_sample_fused_grad_matches_features():
+    """The acceptance check at the API level: jax.grad through a fused
+    (backend='pallas', interpret-mode) RFF prior evaluation matches the
+    materialised-features gradient — Thompson ascent differentiates through
+    the fused prior safely."""
+    p = make_params("matern32", lengthscale=0.8, signal=1.4, d=3)
+    prior = sample_prior(p, jax.random.PRNGKey(0), 5, 96, 3)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (37, 3))
+
+    g_fused = jax.grad(
+        lambda xs: jnp.sum(jnp.sin(prior.with_backend("pallas")(xs)))
+    )(xs)
+    g_feat = jax.grad(
+        lambda xs: jnp.sum(jnp.sin(prior.with_backend("features")(xs)))
+    )(xs)
+    assert _rel_err(g_fused, g_feat) < 1e-4
+
+
+def test_phi_t_mv_backends_agree_and_differentiate():
+    """FourierFeatures.phi_t_mv: pallas vs features parity, incl. gradients
+    w.r.t. the operand — the SGD regulariser pullback."""
+    p = make_params("se", lengthscale=1.1, signal=0.9, d=3)
+    ff = make_fourier_features(p, KEY, 128, 3)
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (75, 3))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (75, 2))
+    out_p = ff.phi_t_mv(x, v, backend="pallas")
+    out_f = ff.phi_t_mv(x, v, backend="features")
+    np.testing.assert_allclose(out_p, out_f, rtol=1e-4, atol=1e-4)
+
+    def reg(v, backend):  # σ²Φ(Φᵀv) — one SGD regulariser term
+        return jnp.sum(ff.phi_mv(x, ff.phi_t_mv(x, v, backend=backend),
+                                 backend=backend) ** 2)
+
+    gp = jax.grad(reg)(v, "pallas")
+    gf = jax.grad(reg)(v, "features")
+    assert _rel_err(gp, gf) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Capability dispatch + backend resolution
+# ---------------------------------------------------------------------------
+
+
+def test_feature_backend_resolution():
+    assert resolve_feature_backend("auto") in ("pallas", "features")
+    # Gram backend names coerce so one spec backend field pins both sides
+    assert resolve_feature_backend("chunked") == "features"
+    assert resolve_feature_backend("dense") == "features"
+    assert resolve_feature_backend("fused") == "pallas"  # legacy alias
+    assert resolve_feature_backend("auto", paired=False) == "features"
+    with pytest.raises(ValueError, match="paired"):
+        resolve_feature_backend("pallas", paired=False)
+    with pytest.raises(ValueError, match="unknown feature backend"):
+        resolve_feature_backend("cuda")
+
+
+def test_unpaired_features_refuse_fused():
+    p = make_params("se", lengthscale=1.0, d=2)
+    ff = make_fourier_features(p, KEY, 32, 2, paired=False)
+    x = jnp.ones((8, 2))
+    w = jnp.ones((ff.num_features, 1))
+    with pytest.raises(ValueError, match="paired"):
+        ff.phi_mv(x, w, backend="pallas")
+    # auto silently falls back to the materialised cos-only features
+    np.testing.assert_allclose(ff.phi_mv(x, w), ff.features(x) @ w, rtol=1e-6)
+
+
+def test_feature_capability_dispatch():
+    p = make_params("se", lengthscale=1.0, d=2)
+    ff = make_fourier_features(p, KEY, 32, 2)
+    assert feature_capabilities(ff) == OPTIONAL_FEATURE_CAPABILITIES
+    assert ff.shape == (None, 32)
+
+    class BareFeatures(FeatureOperator):  # phi-matvecs only, no materialisation
+        num_features = 16
+
+        def phi_mv(self, x, w):
+            return x @ w[: x.shape[1]]
+
+        def phi_t_mv(self, x, u):
+            return x.T @ u
+
+    bare = BareFeatures()
+    assert feature_capabilities(bare) == ()
+    with pytest.raises(TypeError, match="features"):
+        require_capabilities(bare, ("features",), consumer="the 'rff' precond")
+    with pytest.raises(NotImplementedError, match="phi_mv"):
+        FeatureOperator.phi_mv(bare, None, None)
+
+
+# ---------------------------------------------------------------------------
+# Pytree round-trips: same treedef ⇒ compiled consumers are reused
+# ---------------------------------------------------------------------------
+
+
+def test_prior_samples_pytree_roundtrip_and_no_retrace():
+    """Mirrors test_operators.py: fresh draws with the same shapes share a
+    treedef, so jitted evaluation (the Thompson inner loop) traces once."""
+    d = 3
+    p1 = make_params("matern32", lengthscale=0.8, signal=1.0, noise=0.3, d=d)
+    p2 = make_params("matern32", lengthscale=1.3, signal=0.7, noise=0.1, d=d)
+    prior1 = sample_prior(p1, jax.random.PRNGKey(0), 4, 64, d)
+    prior2 = sample_prior(p2, jax.random.PRNGKey(9), 4, 64, d)
+
+    leaves, treedef = jax.tree_util.tree_flatten(prior1)
+    again = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert type(again) is type(prior1)
+    assert jax.tree_util.tree_structure(again) == treedef
+    assert jax.tree_util.tree_structure(prior2) == treedef
+
+    traces = []
+
+    @jax.jit
+    def evaluate(prior, xs):
+        traces.append(1)
+        return prior(xs)
+
+    xs = jnp.ones((8, d))
+    evaluate(prior1, xs)
+    evaluate(prior2, xs)  # same treedef+shapes, different values: no retrace
+    assert len(traces) == 1, "PriorSamples retraced across fresh draws"
+    # a different backend is a *static* change and legitimately retraces
+    evaluate(prior1.with_backend("features"), xs)
+    assert len(traces) == 2
+
+
+# ---------------------------------------------------------------------------
+# SGD regulariser: fused end to end, no materialised feature matrix
+# ---------------------------------------------------------------------------
+
+
+def test_sgd_regulariser_never_materialises_features_on_pallas(toy_regression):
+    """The acceptance check: an SGD solve with backend='pallas' stages every
+    feature matvec through the fused kernel — the 'features' (materialising)
+    path is never dispatched, so no (n, 2q) feature matrix is ever allocated."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    reset_feature_trace_counts()
+    solve(op, t["y"], SGD(num_steps=3, batch_size=32, num_features=16,
+                          backend="pallas"), key=KEY)
+    assert FEATURE_TRACE_COUNTS["features"] == 0
+    assert FEATURE_TRACE_COUNTS["pallas"] > 0  # Φᵀ(v−δ) and Φ(·) per step
+
+
+def test_sgd_regulariser_backend_follows_operator(toy_regression):
+    """Default backend on CPU resolves to materialised features (pallas
+    interpret mode is slower than XLA here) — and the two backends agree."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    reset_feature_trace_counts()
+    res_auto = solve(op, t["y"], SGD(num_steps=200, batch_size=64,
+                                     num_features=32), key=KEY)
+    assert FEATURE_TRACE_COUNTS["features"] > 0
+    res_pallas = solve(op, t["y"], SGD(num_steps=200, batch_size=64,
+                                       num_features=32, backend="pallas"),
+                       key=KEY)
+    np.testing.assert_allclose(res_auto.solution, res_pallas.solution,
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# RFFGram: the feature surrogate as a LinearOperator
+# ---------------------------------------------------------------------------
+
+
+def _rff_gram(n=150, m=256, d=3, seed=4):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, d))
+    p = make_params("matern32", lengthscale=0.9, signal=1.1, noise=0.25, d=d)
+    ff = make_fourier_features(p, jax.random.fold_in(key, 1), m, d)
+    return RFFGram(x=x, ff=ff, sigma2=p.noise), x, p
+
+
+def test_rff_gram_matches_dense():
+    op, x, p = _rff_gram()
+    dense = op.dense()
+    assert op.shape == (150, 150)
+    v = jax.random.normal(KEY, (150, 3))
+    np.testing.assert_allclose(op.mv(v), dense @ v, atol=1e-4)
+    np.testing.assert_allclose(op.diag_part(), jnp.diag(dense), atol=1e-4)
+    # the surrogate really approximates K: diag(ΦΦᵀ) = σ_f² exactly (paired)
+    np.testing.assert_allclose(op.diag_part(), p.signal + p.noise, atol=1e-5)
+
+
+def test_rff_gram_solve_and_exact_feature_precond():
+    """solve() drives RFFGram like any operator, and its precond_factor is the
+    operator's own Φ — Woodbury becomes an exact inverse, so preconditioned CG
+    converges in O(1) iterations."""
+    op, x, p = _rff_gram()
+    y = jnp.sin(x.sum(axis=1))
+    dense = op.dense()
+    ref = jnp.linalg.solve(dense, y)
+    plain = solve(op, y, CG(max_iters=300, tol=1e-8))
+    np.testing.assert_allclose(plain.solution, ref, atol=1e-3)
+    pre = solve(op, y, CG(max_iters=300, tol=1e-8, precond=RFF()), key=KEY)
+    np.testing.assert_allclose(pre.solution, ref, atol=1e-3)
+    assert int(pre.iterations) <= 3 < int(plain.iterations)
+
+
+def test_rff_gram_refuses_row_specs():
+    op, x, _ = _rff_gram()
+    assert capabilities(op) == ("precond_factor",)
+    with pytest.raises(TypeError, match="rows_mv"):
+        solve(op, jnp.ones(op.shape[0]), SGD(num_steps=5), key=KEY)
+
+
+def test_rff_gram_refuses_foreign_factor_methods():
+    """A Nyström/pivoted-Cholesky spec on RFFGram would silently get the full
+    feature matrix instead of the requested low-rank factor — it raises and
+    points at the specs that do apply."""
+    from repro.core.solvers.spec import Nystrom
+
+    op, x, _ = _rff_gram()
+    with pytest.raises(ValueError, match="nystrom"):
+        solve(op, jnp.ones(op.shape[0]), CG(precond=Nystrom(rank=16)), key=KEY)
+    # the matching spec and the capability-free fallback both work
+    solve(op, jnp.ones(op.shape[0]), CG(max_iters=5, precond=RFF()), key=KEY)
+    solve(op, jnp.ones(op.shape[0]), CG(max_iters=5, precond=Jacobi()))
+
+
+def test_rff_precond_spec_on_gram(toy_regression):
+    """The feature-space preconditioner on a *real* Gram operator: ΦΦᵀ ≈ K cuts
+    CG iterations vs unpreconditioned at the same tolerance."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    base = solve(op, t["y"], CG(max_iters=400, tol=1e-6))
+    pre = solve(op, t["y"], CG(max_iters=400, tol=1e-6, precond=RFF(rank=256)),
+                key=KEY)
+    np.testing.assert_allclose(pre.solution, t["v_star"], atol=5e-3)
+    assert int(pre.iterations) < int(base.iterations)
+    with pytest.raises(ValueError, match="even"):
+        solve(op, t["y"], CG(precond=RFF(rank=33)), key=KEY)
+
+
+# ---------------------------------------------------------------------------
+# Jacobi: diagonal preconditioning from the protocol's required diag_part
+# ---------------------------------------------------------------------------
+
+
+def test_jacobi_precond_on_gram(toy_regression):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    pc = jacobi_preconditioner(op)
+    assert isinstance(pc, JacobiPrecond)
+    r = jax.random.normal(KEY, (t["n"], 2))
+    np.testing.assert_allclose(pc(pc.mv(r)), r, atol=1e-5)  # M⁻¹M = I
+    np.testing.assert_allclose(pc.diag_part(), op.diag_part(), atol=1e-6)
+    res = solve(op, t["y"], CG(max_iters=300, tol=1e-6, precond=Jacobi()))
+    np.testing.assert_allclose(res.solution, t["v_star"], atol=5e-3)
+
+
+def test_jacobi_precond_on_matvec_only_operator():
+    """The point of the satellite: LatentKroneckerOp has no precond_factor
+    capability (Nystrom raises), but Jacobi builds from the required
+    diag_part — preconditioned CG matches the dense solve."""
+    rng = np.random.default_rng(0)
+    g1 = jnp.asarray(rng.normal(size=(11, 3)).astype(np.float32))
+    g2 = jnp.asarray(rng.normal(size=(8, 1)).astype(np.float32))
+    mask = jnp.asarray(rng.random((11, 8)) < 0.7)
+    p1 = make_params("matern52", lengthscale=1.0, d=3)
+    p2 = make_params("matern52", lengthscale=1.0, d=1)
+    op = LatentKroneckerOp(gp=make_lkgp(p1, p2, g1, g2, mask, 0.05))
+    n = op.shape[0]
+    kfull = np.kron(np.asarray(op.gp.k1()), np.asarray(op.gp.k2()))
+    idx = np.asarray(op.gp.obs_idx)
+    dense = jnp.asarray(kfull[np.ix_(idx, idx)] + 0.05 * np.eye(n))
+    b = jax.random.normal(KEY, (n,))
+    from repro.core.solvers.spec import Nystrom
+
+    with pytest.raises(TypeError, match="precond_factor"):
+        solve(op, b, CG(precond=Nystrom(rank=8)), key=KEY)
+    res = solve(op, b, CG(max_iters=300, tol=1e-8, precond=Jacobi()))
+    np.testing.assert_allclose(res.solution, jnp.linalg.solve(dense, b),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_jacobi_rebuild_hits_compiled_solve_cache(toy_regression):
+    """JacobiPrecond is a one-leaf pytree: per-solve rebuilds for new
+    hyperparameters reuse the compiled CG (same guarantee as Woodbury)."""
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    spec = CG(max_iters=40, tol=1e-6, precond=Jacobi())
+    solve(op, t["y"], spec)
+    before = cg_trace_count()
+    p2 = make_params("matern32", lengthscale=0.9, signal=1.1, noise=0.2,
+                     d=t["d"])
+    solve(Gram(x=t["x"], params=p2), t["y"], spec)
+    assert cg_trace_count() == before, "Jacobi rebuild retraced CG"

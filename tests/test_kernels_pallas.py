@@ -284,12 +284,23 @@ def test_gram_mv_rejects_jitter_on_cross_gram():
 
 def test_prior_samples_default_backend_is_differentiable():
     """User-facing posterior samples are differentiated through (Thompson
-    gradient ascent), so the default prior evaluation must stay on the
-    features path — the fused Pallas path has no transpose rule."""
+    gradient ascent). The default is now ``auto`` — safe on every resolution
+    because the fused Pallas path carries a full custom VJP: its gradient
+    matches the materialised-features gradient."""
+    import dataclasses as dc
+
     from repro.core.rff import sample_prior
 
     p = make_params("se", lengthscale=1.0, d=2)
     prior = sample_prior(p, jax.random.PRNGKey(0), 3, 64, 2)
-    assert prior.backend == "features"
-    g = jax.grad(lambda xs: jnp.sum(prior(xs)))(jnp.ones((4, 2)))
-    assert bool(jnp.all(jnp.isfinite(g)))
+    assert prior.backend == "auto"
+    xs = jax.random.normal(jax.random.PRNGKey(1), (5, 2))
+    g_auto = jax.grad(lambda xs: jnp.sum(prior(xs)))(xs)
+    g_fused = jax.grad(
+        lambda xs: jnp.sum(dc.replace(prior, backend="pallas")(xs))
+    )(xs)
+    g_feat = jax.grad(
+        lambda xs: jnp.sum(dc.replace(prior, backend="features")(xs))
+    )(xs)
+    assert bool(jnp.all(jnp.isfinite(g_auto)))
+    np.testing.assert_allclose(g_fused, g_feat, rtol=1e-4, atol=1e-5)

@@ -264,6 +264,27 @@ def test_sharded_gram_two_device_subprocess():
         res_ap = solve(op, y, AP(num_steps=150, block_size=32), key=key)
         np.testing.assert_allclose(res_ap.solution, ref, atol=2e-2)
         assert int(res_ap.matvecs) == 0
+
+        # gather_once: prepare_for_solve replicates the inputs once (outside
+        # the solver loop); all primitives match the per-matvec-gather results
+        go = ShardedGram(x=shard_training_rows(mesh, x), params=p, mesh=mesh,
+                         gather_once=True)
+        assert go.x_full is None
+        prep = go.prepare_for_solve()
+        assert prep.x_full is not None
+        assert prep.prepare_for_solve() is prep  # idempotent: gathered already
+        np.testing.assert_allclose(prep.mv(v), dense @ v, atol=1e-4)
+        np.testing.assert_allclose(prep.rows_mv(idx, v), kidx @ v, atol=1e-4)
+        np.testing.assert_allclose(prep.rows_t_mv(idx, u), kidx.T @ u, atol=1e-4)
+        np.testing.assert_allclose(prep.block_at(idx), gram(p, x[idx], x[idx]),
+                                   atol=1e-5)
+        # through solve(): the hook fires automatically, results unchanged
+        res_go = solve(go, y, CG(max_iters=300, tol=1e-8))
+        np.testing.assert_allclose(res_go.solution, ref, atol=1e-3)
+        res_go_sgd = solve(go, y, SGD(num_steps=500, batch_size=32,
+                                      step_size_times_n=0.5, num_features=64),
+                           key=key)
+        assert int(res_go_sgd.matvecs) == 1
         print("OK")
     """)
     r = subprocess.run(
