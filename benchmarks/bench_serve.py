@@ -1,0 +1,166 @@
+"""Serving engine benchmark: continuous batching vs sequential service, and
+warm-started repeat queries vs cold ones (``src/repro/serve``).
+
+Three claims, each a row family in ``BENCH_bench_serve.json``:
+
+* ``serve_throughput`` — at queue depth D, serving D queued sample requests as
+  ONE shared multi-RHS solve (engine cap = D) vs one request per step
+  (cap = 1). The shared solve amortises the O(n²d) Gram kernel evaluation over
+  every rider's RHS columns (§2.2.4), so batched wall-clock ≈ one solve.
+* ``serve_speedup`` — the headline ratio: sequential wall / batched wall at
+  each depth (the acceptance bar is ≥ 3× at depth ≥ 8).
+* ``serve_warmstart`` — identical requests resubmitted after completion hit
+  the warm-start cache and re-enter CG at their previous solution (Ch. 5
+  §5.3): the warm batch's iteration count collapses vs the cold batch's.
+
+``serve_solve``/``serve_warmstart`` rows carry matvec/iteration counts gated by
+``check_matvecs.py`` (smoke mode keeps the gated workload — problem size, PRNG
+seeds, CG spec — identical to the committed baseline and only drops the
+ungated depth sweep).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kernels_fn import make_params
+from repro.core.solvers.spec import CG
+from repro.serve import GPEngine, percentile
+
+from .common import Report
+
+#: gated workload shape — keep in lockstep with the committed baseline
+N, D_IN = 512, 3
+NUM_SAMPLES = 4  # RHS columns per request
+NUM_ROWS = 16  # query rows per request
+GATED_DEPTH = 8
+
+
+def _dataset(n: int, d: int):
+    key = jax.random.PRNGKey(0)
+    kx, kw = jax.random.split(key)
+    x = jax.random.uniform(kx, (n, d))
+    w = jax.random.normal(kw, (d,))
+    y = jnp.sin(4.0 * (x @ w)) + 0.1 * jnp.cos(7.0 * x[:, 0])
+    return x, y
+
+
+def _engine(params, x, y, cap: int) -> GPEngine:
+    return GPEngine(
+        params, x, y,
+        spec=CG(max_iters=200, tol=1e-4),
+        num_samples=4,
+        num_features=256,
+        seed=0,
+        max_batch_requests=cap,
+        max_rhs_columns=128,
+    )
+
+
+def _xs(i: int, d: int):
+    return jax.random.uniform(jax.random.fold_in(jax.random.PRNGKey(7), i),
+                              (NUM_ROWS, d))
+
+
+def _wave(engine: GPEngine, d: int, seeds) -> tuple:
+    """Submit one sample request per seed, drain, return (handles, wall_s)."""
+    handles = [
+        engine.sample(_xs(s, d), num_samples=NUM_SAMPLES, seed=s) for s in seeds
+    ]
+    t0 = time.perf_counter()
+    engine.run_until_idle()
+    return handles, time.perf_counter() - t0
+
+
+def run(report: Report, full: bool = False, smoke: bool = False):
+    x, y = _dataset(N, D_IN)
+    params = make_params("matern32", lengthscale=0.5, signal=1.0, noise=0.1,
+                         d=D_IN)
+
+    # ---- throughput: batched vs sequential at each queue depth -------------
+    depths = [GATED_DEPTH] if smoke else ([2, GATED_DEPTH, 16] if full
+                                          else [2, GATED_DEPTH])
+    walls = {}
+    for depth in depths:
+        for method, cap in (("sequential", 1), ("batched", depth)):
+            eng = _engine(params, x, y, cap)
+            # warmup wave: same bucketed shapes, throwaway seeds — pays the
+            # compile cost so the measured wave times math, not tracing
+            _wave(eng, D_IN, range(10_000, 10_000 + depth))
+            before = eng.stats()
+            handles, wall = _wave(eng, D_IN, range(depth))
+            after = eng.stats()
+            lat = [h.result().metrics["total_s"] for h in handles]
+            iters = after["solver_iterations"] - before["solver_iterations"]
+            matvecs = after["solver_matvecs"] - before["solver_matvecs"]
+            solves = after["solves"] - before["solves"]
+            walls[(depth, method)] = wall
+            report.add(
+                "serve_throughput", method, f"n={N} depth={depth}",
+                req_s=round(depth / wall, 2),
+                wall_s=round(wall, 3),
+                p50_s=round(percentile(lat, 50), 4),
+                p99_s=round(percentile(lat, 99), 4),
+                solves=solves,
+                iterations=iters,
+            )
+            if method == "batched" and depth == GATED_DEPTH:
+                # the gated row: D coalesced requests = one bucketed solve
+                report.add(
+                    "serve_solve", "cg-batched",
+                    f"n={N} cols={depth * NUM_SAMPLES}",
+                    matvecs=matvecs, iterations=iters, solves=solves,
+                )
+        speedup = walls[(depth, "sequential")] / walls[(depth, "batched")]
+        report.add(
+            "serve_speedup", "batched/sequential", f"n={N} depth={depth}",
+            speedup=round(speedup, 2),
+            sequential_s=round(walls[(depth, "sequential")], 3),
+            batched_s=round(walls[(depth, "batched")], 3),
+        )
+
+    # ---- warm starts: identical requests resubmitted hit the cache --------
+    eng = _engine(params, x, y, GATED_DEPTH)
+    seeds = range(100, 100 + GATED_DEPTH)
+    # compile warmup for BOTH variants: a cold wave, then its warm resubmission
+    # (the warm solve carries x0 and δ, a different compiled program)
+    _wave(eng, D_IN, range(10_000, 10_000 + GATED_DEPTH))
+    _wave(eng, D_IN, range(10_000, 10_000 + GATED_DEPTH))
+    cold_handles, cold_wall = _wave(eng, D_IN, seeds)
+    warm_handles, warm_wall = _wave(eng, D_IN, seeds)  # repeat seeds → warm
+    cold_iters = cold_handles[0].result().metrics["iterations"]
+    warm_iters = warm_handles[0].result().metrics["iterations"]
+    assert all(h.result().metrics["warm"] for h in warm_handles)
+    snap = eng.stats()
+    report.add(
+        "serve_warmstart", "cold", f"n={N} depth={GATED_DEPTH}",
+        iterations=cold_iters, wall_s=round(cold_wall, 3),
+    )
+    report.add(
+        "serve_warmstart", "warm", f"n={N} depth={GATED_DEPTH}",
+        iterations=warm_iters, wall_s=round(warm_wall, 3),
+        warm_hits=snap["warm_hits"], saved=snap["iterations_saved_warm"],
+    )
+
+    if smoke:
+        return
+
+    # ---- mixed workload snapshot (not gated): realistic request mix --------
+    eng = _engine(params, x, y, GATED_DEPTH)
+    handles = []
+    for i in range(GATED_DEPTH):
+        handles.append(eng.predict(_xs(200 + i, D_IN), seed=200 + i))
+        handles.append(eng.sample(_xs(300 + i, D_IN), num_samples=NUM_SAMPLES,
+                                  seed=300 + i))
+    t0 = time.perf_counter()
+    eng.run_until_idle()
+    wall = time.perf_counter() - t0
+    lat = [h.result().metrics["total_s"] for h in handles]
+    report.add(
+        "serve_mixed", "predict+sample", f"n={N} depth={2 * GATED_DEPTH}",
+        req_s=round(len(handles) / wall, 2), wall_s=round(wall, 3),
+        p50_s=round(percentile(lat, 50), 4), p99_s=round(percentile(lat, 99), 4),
+        steps=eng.stats()["steps"],
+    )

@@ -13,10 +13,18 @@ batching) inflates ``solver_iters`` far past the slack. Smoke modes keep the
 committed problem sizes, PRNG keys and CG specs (so iteration counts are
 comparable) and only cut work the gate does not compare.
 
+The serve gate extends the same idea to the serving engine (``bench_serve``):
+its batched-solve matvec count must stay within the committed baseline (the
+whole point of coalescing D requests is ONE solve's worth of matvecs), and the
+warm resubmission row must use strictly fewer solver iterations than the cold
+row — a broken warm-start cache (stale keying, dropped x0) shows up here as
+warm == cold.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.check_matvecs \
         [--baseline results/BENCH_bench_solvers.json] \
         [--mll-baseline results/BENCH_bench_mll.json | --skip-mll] \
+        [--serve-baseline results/BENCH_bench_serve.json | --skip-serve] \
         [--slack 0.15]
 
 ``--slack`` tolerates small cross-platform jitter (fp32 reduction order):
@@ -29,7 +37,7 @@ import json
 import math
 import sys
 
-from . import bench_mll, bench_solvers
+from . import bench_mll, bench_serve, bench_solvers
 from .common import Report
 
 
@@ -81,6 +89,14 @@ def main(argv=None) -> int:
         help="gate bench_solvers matvec counts only",
     )
     ap.add_argument(
+        "--serve-baseline", default="results/BENCH_bench_serve.json",
+        help="committed bench_serve JSON to gate batched-solve matvecs against",
+    )
+    ap.add_argument(
+        "--skip-serve", action="store_true",
+        help="skip the serving-engine gate",
+    )
+    ap.add_argument(
         "--slack", type=float, default=0.15,
         help="fractional headroom over the baseline before failing",
     )
@@ -123,6 +139,46 @@ def main(argv=None) -> int:
             return 2
         compared += c2
         failures += f2
+
+    if not args.skip_serve:
+        with open(args.serve_baseline) as f:
+            serve_rows = json.load(f)["rows"]
+        base_serve = {
+            k: v for k, v in _metric_rows(serve_rows, "matvecs").items()
+            if k[0] == "serve_solve"
+        }
+        if not base_serve:
+            print(f"ERROR: no serve_solve matvecs in {args.serve_baseline}",
+                  file=sys.stderr)
+            return 2
+        serve_report = Report()
+        bench_serve.run(serve_report, full=False, smoke=True)
+        c3, f3 = _gate(
+            f"serve matvecs vs {args.serve_baseline}",
+            base_serve, _metric_rows(serve_report.rows, "matvecs"), args.slack,
+        )
+        if c3 == 0:
+            print("ERROR: no comparable serve_solve rows between serve "
+                  "baseline and smoke run", file=sys.stderr)
+            return 2
+        compared += c3
+        failures += f3
+        # warm resubmissions must beat cold solves on iterations, in the fresh
+        # run itself — this is a structural property, not a baseline diff
+        warm_iters = _metric_rows(serve_report.rows, "iterations")
+        cold = {k: v for k, v in warm_iters.items()
+                if k[0] == "serve_warmstart" and k[1] == "cold"}
+        warm = {(t, "warm", d): warm_iters.get((t, "warm", d))
+                for (t, _, d) in cold}
+        print("\nserve warm-start gate:")
+        for (t, _, d), base in sorted(cold.items()):
+            got = warm[(t, "warm", d)]
+            status = "ok" if got is not None and got < base else "REGRESSION"
+            print(f"  {t}/{d:24s} cold={base:4d} warm={got!s:>4s}  {status}")
+            compared += 1
+            if status != "ok":
+                failures.append(((t, "warm", d), base, got))
+
     if failures:
         print(f"\n{len(failures)} count regression(s):", file=sys.stderr)
         for key, base, got in failures:

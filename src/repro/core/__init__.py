@@ -48,6 +48,7 @@ from .solvers.spec import (  # noqa: F401
     registered_preconds,
     registered_solvers,
     solve,
+    solve_batched,
     spec_from_dict,
     spec_from_json,
     spec_to_dict,

@@ -162,3 +162,36 @@ class IterativeGP:
         """Posterior mean (representer weights, no MC error) and MC variance."""
         post = self.posterior(num_samples, key=key)
         return post.sample_mean_and_var(jnp.asarray(xs))
+
+    def engine(
+        self,
+        *,
+        num_samples: int = 16,
+        num_features: int = 2048,
+        key: Optional[jax.Array] = None,
+        **engine_kwargs,
+    ) -> "GPEngine":
+        """Hand the fitted GP off to a long-lived serving engine.
+
+        Returns a :class:`repro.serve.GPEngine` holding this GP's fitted
+        posterior state (representer weights, pathwise prior paths, solver
+        spec) and serving streams of ``predict`` / ``sample`` /
+        ``thompson_step`` requests with continuous batching over shared
+        multi-RHS solves — see ``docs/serving.md``. The engine snapshots the
+        current hyperparameters and data; further ``optimize``/``fit`` calls on
+        this façade do not affect a handed-off engine (push new observations
+        with ``engine.add_observations`` instead, which refits warm-started).
+        """
+        self._require_fitted()
+        from ..serve import GPEngine  # deferred: serve imports core
+
+        return GPEngine(
+            self.params,
+            self.x,
+            self.y,
+            spec=self.spec,
+            num_samples=num_samples,
+            num_features=num_features,
+            key=self._next_key() if key is None else key,
+            **engine_kwargs,
+        )

@@ -67,6 +67,45 @@ class PosteriorFunctions:
         f = self(xs)
         return self.mean(xs), jnp.var(f, axis=1)
 
+    def blocked_mean_and_var(
+        self, xs_blocks: jax.Array
+    ) -> tuple[jax.Array, jax.Array]:
+        """Batched query path: many query blocks through ONE fused pass.
+
+        ``xs_blocks`` is ``(B, L, d)`` — B queries padded to a common block
+        length L (the serving engine's fixed bucket shapes). The blocks are
+        flattened into a single ``(B·L, d)`` evaluation, so one fused
+        cross-covariance matvec and one prior feature matvec serve all B
+        queries, and the results are reshaped back to ``(B, L)`` mean and
+        variance. Padding rows cost flops but not correctness — callers slice
+        their valid prefix.
+        """
+        b, l, d = xs_blocks.shape
+        mean, var = self.sample_mean_and_var(xs_blocks.reshape(b * l, d))
+        return mean.reshape(b, l), var.reshape(b, l)
+
+    def sample_paths(
+        self, xs: jax.Array, w_prior: jax.Array, alpha: jax.Array
+    ) -> jax.Array:
+        """Evaluate *fresh* posterior sample paths at ``xs`` → (n*, s).
+
+        A fresh pathwise sample is defined by new prior weight columns
+        ``w_prior`` (num_features, s) on this posterior's feature map and the
+        solved uncertainty-reduction weights ``alpha`` (n, s) for the targets
+        ``Φ(X) w_prior + ε`` (the serving engine batches those solves across
+        requests):
+
+            f_|y(·) = Φ(·) w_prior + K(·, X) (v_mean − alpha)
+
+        Zero columns are exact mean paths (zero prior weights, zero alpha), so
+        bucket-padded weight columns evaluate to the posterior mean and slice
+        off cleanly.
+        """
+        w = self.v_mean[:, None] - alpha  # (n, s)
+        return self.prior.phi_mv(xs, w_prior) + gram_mv(
+            self.params, xs, w, z=self.x, backend=self.backend
+        )
+
 
 def pathwise_targets(
     op: Gram,

@@ -40,11 +40,13 @@ from typing import Any, Callable, ClassVar, Dict, Optional, Tuple, Type, Union
 
 import jax
 
+import jax.numpy as jnp
+
 from ...kernels.ops import BACKENDS, FEATURE_BACKENDS
 from ..operators import require_capabilities
 from ..precond import jacobi_preconditioner, woodbury_from_factor
 from .ap import solve_ap
-from .base import SolveResult
+from .base import SolveResult, as_matrix_rhs
 from .cg import solve_cg
 from .sdd import solve_sdd
 from .sgd import solve_sgd
@@ -456,6 +458,38 @@ def as_spec(spec: SpecLike, **overrides: Any) -> SolverSpec:
 # ---------------------------------------------------------------------------
 
 
+def _validate_x0(op, b: jax.Array, x0: jax.Array) -> None:
+    """Warm-start sanity checks, up front and with a clear error.
+
+    A stale warm-start cache (serving engine, MLL outer loop) otherwise surfaces
+    as an opaque XLA broadcast/shape error deep inside the solver's
+    while_loop/scan; here it names the mismatch at the ``solve()`` boundary.
+    The rule is strict: ``x0`` must match ``b``'s shape exactly — a 1-D ``x0``
+    against a multi-column ``b`` is refused rather than silently broadcast,
+    because it almost always means a cached single-RHS solution is being reused
+    for a differently-batched solve.
+    """
+    b_shape, x_shape = jnp.shape(b), jnp.shape(x0)
+    if x_shape != b_shape:
+        n = op.shape[0]
+        raise ValueError(
+            f"warm start x0 has shape {x_shape} but the right-hand side has "
+            f"shape {b_shape} (operator is {n}×{n}); x0 must match b exactly — "
+            f"a stale warm-start cache entry (old n after new observations, or "
+            f"a different RHS column batch) is the usual cause. Drop x0 for a "
+            f"cold solve, or re-key the cache."
+        )
+    b_dtype = jnp.result_type(b)
+    x_dtype = jnp.result_type(x0)
+    if x_dtype != b_dtype:
+        raise TypeError(
+            f"warm start x0 has dtype {x_dtype.name} but the right-hand side "
+            f"has dtype {b_dtype.name}; pass x0 in the RHS dtype — a silent "
+            f"promotion here would retrace the compiled solve and mask cache "
+            f"bugs."
+        )
+
+
 def solve(
     op,
     b: jax.Array,
@@ -505,6 +539,8 @@ def solve(
             f"solver {s.name!r} is stochastic: solve(..., key=jax.random.PRNGKey(...))"
             " is required"
         )
+    if x0 is not None:
+        _validate_x0(op, b, x0)
     require_capabilities(op, s.needs, consumer=f"solver {s.name!r}")
     prep = getattr(op, "prepare_for_solve", None)
     if callable(prep):
@@ -513,3 +549,112 @@ def solve(
         # instead of all-gathering on every matvec
         op = prep()
     return s.run(op, b, key=key, x0=x0, delta=delta)
+
+
+# ---------------------------------------------------------------------------
+# Multi-RHS coalescing on top of solve() — the serving engine's primitive
+# ---------------------------------------------------------------------------
+
+
+def solve_batched(
+    op,
+    blocks,
+    spec: SpecLike = "cg",
+    *,
+    key: Optional[jax.Array] = None,
+    x0_blocks=None,
+    delta_blocks=None,
+    pad_columns_to: Optional[int] = None,
+    **overrides: Any,
+) -> list:
+    """Coalesce per-consumer RHS column blocks into ONE multi-RHS solve.
+
+    This is the paper's continuous-batching primitive made explicit: k callers
+    each bring a small RHS block against the *same* operator, the blocks are
+    stacked column-wise, solved in one call to :func:`solve` (one matvec stream
+    serves everyone — CG's per-iteration cost is one fused multi-RHS matvec
+    regardless of k), and the result is scattered back as one ``SolveResult``
+    per block. ``iterations``/``matvecs`` on each returned result are the
+    *shared* batch totals — that sharing is the whole point — while
+    ``residual_norm``/``rel_residual``/``converged`` are per-block.
+
+    Args:
+        blocks: sequence of RHS blocks, each ``(n,)`` or ``(n, s_i)``.
+        x0_blocks: optional warm starts, one per block (``None`` entries are
+            cold and solved from zero); if every entry is ``None`` the batch is
+            a cold solve.
+        delta_blocks: optional δ channels, one per block (``None`` entries get
+            δ = 0).
+        pad_columns_to: pad the stacked RHS with zero columns up to this count —
+            the serving engine's fixed bucket shapes, so batches of 3 and 5
+            requests hit the same compiled solve. Zero columns converge
+            immediately (CG freezes them on the spot) and are sliced off.
+
+    Returns:
+        ``[SolveResult, ...]``, one per input block, in order; solutions are
+        squeezed back to 1-D for 1-D input blocks.
+    """
+    s = as_spec(spec, **overrides)
+    blocks = list(blocks)
+    if not blocks:
+        return []
+    mats, squeezes = [], []
+    for blk in blocks:
+        m, sq = as_matrix_rhs(jnp.asarray(blk))
+        mats.append(m)
+        squeezes.append(sq)
+    widths = [m.shape[1] for m in mats]
+    offsets = [0]
+    for w in widths:
+        offsets.append(offsets[-1] + w)
+    total = offsets[-1]
+    n = mats[0].shape[0]
+
+    def _stack(maybe_blocks, what):
+        if maybe_blocks is None:
+            return None
+        maybe_blocks = list(maybe_blocks)
+        if len(maybe_blocks) != len(blocks):
+            raise ValueError(
+                f"{what} has {len(maybe_blocks)} blocks for {len(blocks)} RHS "
+                f"blocks; pass one entry per block (None for missing)"
+            )
+        if all(e is None for e in maybe_blocks):
+            return None
+        cols = []
+        for e, w in zip(maybe_blocks, widths):
+            if e is None:
+                cols.append(jnp.zeros((n, w), dtype=mats[0].dtype))
+            else:
+                cols.append(as_matrix_rhs(jnp.asarray(e))[0])
+        return jnp.concatenate(cols, axis=1)
+
+    b = jnp.concatenate(mats, axis=1)
+    x0 = _stack(x0_blocks, "x0_blocks")
+    delta = _stack(delta_blocks, "delta_blocks")
+    if pad_columns_to is not None and pad_columns_to > total:
+        pad = pad_columns_to - total
+        zeros = jnp.zeros((n, pad), dtype=b.dtype)
+        b = jnp.concatenate([b, zeros], axis=1)
+        if x0 is not None:
+            x0 = jnp.concatenate([x0, zeros], axis=1)
+        if delta is not None:
+            delta = jnp.concatenate([delta, zeros], axis=1)
+
+    res = solve(op, b, s, key=key, x0=x0, delta=delta)
+    tol = float(getattr(s, "tol", 1e-2))
+    out = []
+    for (lo, hi), sq in zip(zip(offsets[:-1], offsets[1:]), squeezes):
+        sol = res.solution[:, lo:hi]
+        rel = res.rel_residual[lo:hi]
+        out.append(
+            SolveResult(
+                solution=sol[:, 0] if sq else sol,
+                residual_norm=res.residual_norm[lo:hi],
+                rel_residual=rel,
+                iterations=res.iterations,
+                converged=jnp.all(rel <= tol),
+                matvecs=res.matvecs,
+            )
+        )
+    return out

@@ -1,0 +1,22 @@
+"""GP posterior serving engine — continuous batching of predict/sample/Thompson
+queries over shared multi-RHS solves (see docs/serving.md)."""
+from .engine import GPEngine  # noqa: F401
+from .metrics import EngineStats, percentile  # noqa: F401
+from .request import (  # noqa: F401
+    Completion,
+    KINDS,
+    PREDICT,
+    Request,
+    RequestHandle,
+    SAMPLE,
+    SOLVE_KINDS,
+    THOMPSON,
+)
+from .scheduler import BatchPlan, FIFOScheduler, bucket  # noqa: F401
+from .state import (  # noqa: F401
+    PosteriorState,
+    WarmStartCache,
+    extend_state,
+    fit_state,
+    hypers_fingerprint,
+)

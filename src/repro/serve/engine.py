@@ -1,0 +1,459 @@
+"""`GPEngine` — the long-lived GP posterior serving loop.
+
+The GP analogue of a vLLM-class engine: clients ``submit`` posterior queries
+(``predict`` / ``sample`` / ``thompson_step``) and a driver calls ``step()``
+in a loop; each step the scheduler coalesces compatible queued requests into
+one batch, the batch executes as ONE shared computation, and completions are
+scattered back to the callers' handles:
+
+    submit → schedule → batch → execute → complete        (engine.step())
+
+The paper makes this batching natural: every expensive posterior computation
+is a multi-RHS solve against the *same* (K + σ²I) operator, so queued
+``sample``/``thompson_step`` requests stack their RHS columns into one
+``solve(op, B, spec)`` (§2.2.4 — the per-iteration cost is one fused multi-RHS
+matvec regardless of how many requests ride it), and queued ``predict``
+requests stack their query blocks into one fused cross-covariance pass over
+cached representer weights. Batch shapes are bucketed to powers of two so
+steady-state serving reuses a small fixed set of compiled solves.
+
+Warm starts (Ch. 5 §5.3): solutions are cached keyed by (hyperparameter
+fingerprint, request kind, request seed); repeat queries re-enter the solver
+with their previous solution as ``x0`` and converge in a couple of iterations
+— the scheduler never mixes warm and cold requests in one batch, so the win is
+visible in per-request latency, not just matvec counts. New observations go
+through ``add_observations``: a warm-started incremental refit that extends
+the same pathwise systems row-wise (see serve/state.py).
+
+Synchronous and host-driven by design (``step()`` is the vLLM idiom —
+async frontends wrap it in a task loop; ``submit`` never blocks). All device
+work stays inside the core library's ``solve()``/fused-matvec entry points.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.kernels_fn import KernelParams
+from ..core.pathwise import PosteriorFunctions
+from ..core.rff import PriorSamples
+from ..core.solvers.spec import SpecLike, as_spec, solve
+from ..core.thompson import _maximise_samples
+from .metrics import EngineStats
+from .request import (
+    Completion,
+    KINDS,
+    PREDICT,
+    Request,
+    RequestHandle,
+    SAMPLE,
+    SOLVE_KINDS,
+    THOMPSON,
+)
+from .scheduler import (
+    BatchPlan,
+    FIFOScheduler,
+    GROUP_PREDICT,
+    GROUP_SOLVE_WARM,
+    bucket,
+)
+from .state import PosteriorState, WarmStartCache, extend_state, fit_state
+
+
+class GPEngine:
+    """Continuous-batching server over one fitted GP posterior.
+
+    Args:
+        params, x, y: the fitted hyperparameters and training data (usually via
+            ``IterativeGP.engine()``).
+        spec: the SolverSpec every serve-time solve runs with. The engine's
+            per-request determinism guarantee (same seed ⇒ same payload,
+            regardless of batch composition) holds for deterministic solvers
+            (CG, the default); stochastic specs draw their mini-batch indices
+            from a per-solve key, so results then depend on batching.
+        num_samples / num_features: the cached posterior's pathwise sample
+            count and prior feature count (predict variance quality).
+        max_batch_requests / max_rhs_columns: scheduler caps.
+        row_bucket_min / col_bucket_min: smallest padded block shapes.
+        clock: timeline source for arrival/latency stamps (injectable so the
+            benchmark can drive a simulated arrival process); compute durations
+            are always measured with ``time.perf_counter``.
+    """
+
+    def __init__(
+        self,
+        params: KernelParams,
+        x: jax.Array,
+        y: jax.Array,
+        *,
+        spec: SpecLike = "cg",
+        num_samples: int = 16,
+        num_features: int = 1024,
+        key: Optional[jax.Array] = None,
+        seed: int = 0,
+        max_batch_requests: int = 16,
+        max_rhs_columns: int = 64,
+        row_bucket_min: int = 16,
+        col_bucket_min: int = 8,
+        warm_cache_entries: int = 256,
+        default_sample_count: int = 8,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.spec = as_spec(spec)
+        self._clock = clock
+        self.row_bucket_min = int(row_bucket_min)
+        self.col_bucket_min = int(col_bucket_min)
+        self.default_sample_count = int(default_sample_count)
+        key = jax.random.PRNGKey(seed) if key is None else key
+        kf, self._solver_key = jax.random.split(key)
+        self.state: PosteriorState = fit_state(
+            params, x, y, kf,
+            spec=self.spec, num_samples=num_samples, num_features=num_features,
+        )
+        self.scheduler = FIFOScheduler(
+            max_batch_requests=max_batch_requests,
+            max_rhs_columns=max_rhs_columns,
+        )
+        self.cache = WarmStartCache(max_entries=warm_cache_entries)
+        self._stats = EngineStats()
+        self._ids = itertools.count()
+        self._auto_seeds = itertools.count()
+        self._handles: dict = {}
+        # warm-start savings are reported against the most recent cold solve
+        self._last_cold_iters: Optional[int] = None
+        self._cold_fit_iters = int(self.state.fit_result.iterations)
+
+    # ------------------------------------------------------------------ submit
+
+    def submit(
+        self,
+        kind: str,
+        xs=None,
+        *,
+        num_samples: Optional[int] = None,
+        seed: Optional[int] = None,
+        **options,
+    ) -> RequestHandle:
+        """Queue a request; never blocks. Returns a handle completed by step().
+
+        ``seed`` pins the request's randomness (repeat seeds are what the
+        warm-start cache keys on); omitted, a fresh engine-unique seed is
+        assigned. ``options`` are kind-specific (thompson_step: ascent
+        parameters ``num_candidates``/``num_top``/``ascent_steps``/``lr``).
+        """
+        if kind not in KINDS:
+            raise ValueError(f"unknown request kind {kind!r}; expected one of {KINDS}")
+        if kind in (PREDICT, SAMPLE):
+            if xs is None:
+                raise ValueError(f"{kind!r} requests need a query block xs of shape (m, d)")
+            xs = jnp.atleast_2d(jnp.asarray(xs))
+            if xs.shape[1] != self.state.x.shape[1]:
+                raise ValueError(
+                    f"query block has feature dimension {xs.shape[1]}, "
+                    f"engine state has d={self.state.x.shape[1]}"
+                )
+        elif xs is not None:
+            raise ValueError(
+                "thompson_step requests draw their own candidates — xs must be None"
+            )
+        if num_samples is None:
+            num_samples = (
+                self.state.post.num_samples if kind == PREDICT
+                else self.default_sample_count
+            )
+        if seed is None:
+            seed = (1 << 20) + next(self._auto_seeds)
+        req = Request(
+            id=next(self._ids),
+            kind=kind,
+            xs=xs,
+            num_samples=int(num_samples),
+            seed=int(seed),
+            arrival=self._clock(),
+            options=dict(options),
+            warm=(
+                kind in SOLVE_KINDS
+                and self.cache.probe(self.state.hypers_key, kind, int(seed))
+            ),
+        )
+        self.scheduler.add(req)
+        handle = RequestHandle(req)
+        self._handles[req.id] = handle
+        self._stats.requests_submitted += 1
+        return handle
+
+    # convenience wrappers
+    def predict(self, xs, **kw) -> RequestHandle:
+        return self.submit(PREDICT, xs, **kw)
+
+    def sample(self, xs, **kw) -> RequestHandle:
+        return self.submit(SAMPLE, xs, **kw)
+
+    def thompson_step(self, **kw) -> RequestHandle:
+        return self.submit(THOMPSON, None, **kw)
+
+    # -------------------------------------------------------------------- step
+
+    def step(self) -> List[Completion]:
+        """Run one engine iteration: schedule → batch → execute → complete.
+
+        Returns the completions produced this step (possibly empty). Latency
+        accounting: ``queue_s`` is arrival → batch start on the engine clock;
+        ``exec_s`` is the batch's measured compute wall (shared by every
+        request in the batch, as is the solve's iteration/matvec spend).
+        """
+        plan = self.scheduler.next_batch()
+        if plan is None:
+            return []
+        t_start = self._clock()
+        t0 = time.perf_counter()
+        if plan.group == GROUP_PREDICT:
+            values, extra = self._execute_predict(plan)
+        else:
+            values, extra = self._execute_solve(plan)
+        jax.block_until_ready([list(v.values()) for v in values])
+        exec_s = time.perf_counter() - t0
+
+        self._stats.steps += 1
+        self._stats.bump_batch(plan.group)
+        completions = []
+        for req, value in zip(plan.requests, values):
+            queue_s = t_start - req.arrival
+            metrics = dict(
+                queue_s=queue_s,
+                exec_s=exec_s,
+                total_s=queue_s + exec_s,
+                batch_requests=len(plan.requests),
+                group=plan.group,
+                **extra,
+            )
+            if req.kind in SOLVE_KINDS:
+                metrics["warm"] = req.warm
+            comp = Completion(
+                request_id=req.id, kind=req.kind, value=value, metrics=metrics
+            )
+            self._handles.pop(req.id)._complete(comp)
+            self._stats.bump_kind(req.kind)
+            self._stats.queue_latencies.append(queue_s)
+            self._stats.total_latencies.append(queue_s + exec_s)
+            completions.append(comp)
+        return completions
+
+    def run_until_idle(self, max_steps: int = 100_000) -> List[Completion]:
+        """Drive step() until the queue drains; returns all completions."""
+        out: List[Completion] = []
+        for _ in range(max_steps):
+            if len(self.scheduler) == 0:
+                break
+            out.extend(self.step())
+        return out
+
+    # --------------------------------------------------------------- execution
+
+    def _execute_predict(self, plan: BatchPlan):
+        """One fused row-batched mean/variance pass over cached state."""
+        d = self.state.x.shape[1]
+        rows = bucket(plan.max_rows, self.row_bucket_min)
+        nblk = bucket(len(plan.requests), 1)
+        blocks = np.zeros((nblk, rows, d), dtype=np.asarray(self.state.x).dtype)
+        for i, req in enumerate(plan.requests):
+            blocks[i, : req.num_rows] = np.asarray(req.xs)
+        mean, var = self.state.post.blocked_mean_and_var(jnp.asarray(blocks))
+        values = [
+            {"mean": mean[i, : r.num_rows], "var": var[i, : r.num_rows]}
+            for i, r in enumerate(plan.requests)
+        ]
+        real_rows = sum(r.num_rows for r in plan.requests)
+        self._stats.predict_rows += real_rows
+        self._stats.predict_padded_rows += nblk * rows - real_rows
+        return values, dict(bucket_rows=rows, bucket_blocks=nblk)
+
+    def _request_draws(self, req: Request):
+        """Deterministic per-request randomness: fresh prior weight draws and
+        noise draws from the request seed alone, so the payload is independent
+        of batch composition (CG) and repeat seeds regenerate identical
+        columns — the warm-start cache's correctness condition."""
+        state = self.state
+        f = state.prior.num_features
+        kw, ke, ka = jax.random.split(jax.random.PRNGKey(req.seed), 3)
+        w_new = jax.random.normal(kw, (f, req.num_samples))
+        eps = jnp.sqrt(state.params.noise) * jax.random.normal(
+            ke, (state.n, req.num_samples), dtype=w_new.dtype
+        )
+        return w_new, eps, ka
+
+    def _execute_solve(self, plan: BatchPlan):
+        """ONE shared multi-RHS solve for every sample/thompson request in the
+        batch, then per-request scatter + evaluation.
+
+        Every device pass in this path is batch-level, never per-request: the
+        requests' prior weight columns are stacked so one fused feature matvec
+        produces every RHS, one ``solve`` produces every representer block, and
+        one pathwise evaluation produces every sample request's payload —
+        per-request work is pure slicing. That is where the engine's throughput
+        comes from: at depth D the O(n²d) kernel evaluation inside each solver
+        iteration (and the dispatch overhead of each fused pass) is paid once,
+        not D times.
+        """
+        state = self.state
+        op = state.operator()
+        n = state.n
+        per_req = [self._request_draws(r) for r in plan.requests]
+        widths = [r.num_samples for r in plan.requests]
+        offsets = np.concatenate([[0], np.cumsum(widths)])
+        total = int(offsets[-1])
+        cbucket = bucket(total, self.col_bucket_min)
+
+        w_cat = jnp.concatenate([w for w, _, _ in per_req], axis=1)
+        delta = jnp.concatenate(
+            [eps / state.params.noise for _, eps, _ in per_req], axis=1
+        )
+        pad = cbucket - total
+        if pad:
+            w_cat = jnp.pad(w_cat, ((0, 0), (0, pad)))
+            delta = jnp.pad(delta, ((0, 0), (0, pad)))
+        # one fused feature matvec builds every request's RHS columns (padded
+        # zero-weight columns give zero columns, which converge instantly)
+        data = state.prior.phi_mv(state.x, w_cat)
+
+        x0 = None
+        if plan.group == GROUP_SOLVE_WARM:
+            cols = np.zeros((n, cbucket), dtype=data.dtype)
+            for req, lo, hi in zip(plan.requests, offsets[:-1], offsets[1:]):
+                hit = self.cache.lookup(state.hypers_key, req.kind, req.seed)
+                if hit is not None and hit.shape == (n, req.num_samples):
+                    cols[:, lo:hi] = hit
+                    self._stats.warm_hits += 1
+                else:  # probe said warm but the entry aged out — cold column
+                    self._stats.warm_misses += 1
+            x0 = jnp.asarray(cols, dtype=data.dtype)
+        skey = jax.random.fold_in(self._solver_key, self._stats.solves)
+        res = solve(op, data, self.spec, key=skey, x0=x0, delta=delta)
+        iters = int(res.iterations)
+        matvecs = int(res.matvecs)
+        self._stats.solves += 1
+        self._stats.rhs_columns += total
+        self._stats.padded_columns += pad
+        self._stats.solver_iterations += iters
+        self._stats.solver_matvecs += matvecs
+        if plan.group == GROUP_SOLVE_WARM:
+            if self._last_cold_iters is not None:
+                self._stats.iterations_saved_warm += max(
+                    0, self._last_cold_iters - iters
+                )
+        else:
+            self._last_cold_iters = iters
+
+        for req, lo, hi in zip(plan.requests, offsets[:-1], offsets[1:]):
+            self.cache.store(
+                state.hypers_key, req.kind, req.seed, res.solution[:, lo:hi]
+            )
+
+        values_by_id = {}
+        # one batched pathwise evaluation serves every sample request: their
+        # query blocks stack row-wise, the batch's weight/representer columns
+        # ride whole (padded zero columns are exact mean paths), and each
+        # request's payload is the (rows, columns) sub-block at its offsets
+        sample_at = [
+            (req, int(lo)) for req, lo in zip(plan.requests, offsets[:-1])
+            if req.kind == SAMPLE
+        ]
+        if sample_at:
+            row_offsets, r_total = [], 0
+            for req, _ in sample_at:
+                row_offsets.append(r_total)
+                r_total += req.num_rows
+            rbucket = bucket(r_total, self.row_bucket_min)
+            xs_all = jnp.concatenate([req.xs for req, _ in sample_at], axis=0)
+            xs_pad = jnp.pad(xs_all, ((0, rbucket - r_total), (0, 0)))
+            vals = state.post.sample_paths(xs_pad, w_cat, res.solution)
+            for (req, lo), ro in zip(sample_at, row_offsets):
+                values_by_id[req.id] = {
+                    "samples": vals[ro : ro + req.num_rows,
+                                    lo : lo + req.num_samples]
+                }
+
+        for req, (_, _, ka), lo, hi in zip(
+            plan.requests, per_req, offsets[:-1], offsets[1:]
+        ):
+            if req.kind != THOMPSON:
+                continue
+            # THOMPSON: ascend each fresh sample path (§3.3.2); the ascent loop
+            # is per-request (its sample count fixes the compiled shape), at a
+            # bucketed column count so repeat shapes reuse the compiled step
+            sbucket = bucket(req.num_samples, self.col_bucket_min)
+            spad = sbucket - req.num_samples
+            w_pad = jnp.pad(w_cat[:, lo:hi], ((0, 0), (0, spad)))
+            a_pad = jnp.pad(res.solution[:, lo:hi], ((0, 0), (0, spad)))
+            post_r = PosteriorFunctions(
+                params=state.params,
+                x=state.x,
+                prior=PriorSamples(
+                    ff=state.prior.ff, w=w_pad, backend=state.prior.backend
+                ),
+                v_mean=state.post.v_mean,
+                alpha=a_pad,
+                backend=state.post.backend,
+            )
+            opts = req.options
+            pts = _maximise_samples(
+                post_r,
+                state.y,
+                ka,
+                num_candidates=int(opts.get("num_candidates", 256)),
+                num_top=int(opts.get("num_top", 2)),
+                ascent_steps=int(opts.get("ascent_steps", 10)),
+                lr=float(opts.get("lr", 1e-2)),
+                lengthscale=float(jnp.mean(state.params.lengthscale)),
+            )
+            per_sample = jnp.einsum("ss->s", post_r(pts))
+            values_by_id[req.id] = {
+                "points": pts[: req.num_samples],
+                "values": per_sample[: req.num_samples],
+            }
+        values = [values_by_id[req.id] for req in plan.requests]
+        extra = dict(
+            batch_columns=total,
+            bucket_columns=cbucket,
+            iterations=iters,
+            matvecs=matvecs,
+        )
+        return values, extra
+
+    # ------------------------------------------------------------------- state
+
+    def add_observations(self, x_new, y_new, *, warm: bool = True) -> None:
+        """Append observations and refit incrementally (warm-started by
+        default). Drains the queue first so every pending request is served
+        against the state it was submitted under."""
+        self.run_until_idle()
+        skey = jax.random.fold_in(self._solver_key, 10_000_000 + self._stats.refits)
+        self.state = extend_state(self.state, x_new, y_new, skey, warm=warm)
+        iters = int(self.state.fit_result.iterations)
+        self._stats.refits += 1
+        self._stats.refit_iterations += iters
+        if warm:
+            self._stats.refit_iterations_saved += max(0, self._cold_fit_iters - iters)
+        # a new operator shape: cold-iteration reference resets with it
+        self._last_cold_iters = None
+
+    # ------------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        """Cumulative counter snapshot + live queue/state info (one dict, used
+        by the benchmark, the CLI and the tests alike)."""
+        snap = self._stats.snapshot()
+        snap.update(
+            queue_depth=len(self.scheduler),
+            n=self.state.n,
+            posterior_samples=self.state.post.num_samples,
+            hypers_key=self.state.hypers_key,
+            solver=self.spec.name,
+            warm_cache_entries=len(self.cache),
+        )
+        return snap

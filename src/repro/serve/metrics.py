@@ -1,0 +1,86 @@
+"""Cumulative engine counters and latency summaries.
+
+Plain host-side Python counters — the engine loop is host code (like any
+continuous-batching server); everything device-side stays in the solver's own
+``SolveResult``/runtime-matvec accounting. ``EngineStats.snapshot()`` is the
+one read path, used by ``GPEngine.stats()``, the serving benchmark, and the
+engine tests, so the three can never disagree about what a counter means.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+def percentile(values, q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input."""
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    rank = min(len(xs) - 1, max(0, int(round(q / 100.0 * (len(xs) - 1)))))
+    return float(xs[rank])
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Monotone counters for one engine's lifetime.
+
+    ``iterations_saved_warm`` is the headline warm-start number: for every
+    warm-batch solve, the iteration gap to the most recent *cold* solve of the
+    same request kind (clamped at zero); ``refit_iterations_saved`` is the same
+    idea for warm-started incremental refits (``add_observations``) against the
+    engine's initial cold fit.
+    """
+
+    requests_submitted: int = 0
+    requests_served: Dict[str, int] = dataclasses.field(default_factory=dict)
+    steps: int = 0
+    batches: Dict[str, int] = dataclasses.field(default_factory=dict)
+    solves: int = 0
+    rhs_columns: int = 0  # real RHS columns batched through shared solves
+    padded_columns: int = 0  # bucket padding columns on top of them
+    solver_iterations: int = 0
+    solver_matvecs: int = 0
+    warm_hits: int = 0
+    warm_misses: int = 0
+    iterations_saved_warm: int = 0
+    refits: int = 0
+    refit_iterations: int = 0
+    refit_iterations_saved: int = 0
+    predict_rows: int = 0
+    predict_padded_rows: int = 0
+    queue_latencies: List[float] = dataclasses.field(default_factory=list)
+    total_latencies: List[float] = dataclasses.field(default_factory=list)
+
+    def bump_kind(self, kind: str, n: int = 1) -> None:
+        self.requests_served[kind] = self.requests_served.get(kind, 0) + n
+
+    def bump_batch(self, group: str) -> None:
+        self.batches[group] = self.batches.get(group, 0) + 1
+
+    def snapshot(self) -> dict:
+        """A JSON-ready view — the contract shared by ``GPEngine.stats()``,
+        ``benchmarks/bench_serve.py`` and the engine tests."""
+        return {
+            "requests_submitted": self.requests_submitted,
+            "requests_served": dict(self.requests_served),
+            "steps": self.steps,
+            "batches": dict(self.batches),
+            "solves": self.solves,
+            "rhs_columns": self.rhs_columns,
+            "padded_columns": self.padded_columns,
+            "solver_iterations": self.solver_iterations,
+            "solver_matvecs": self.solver_matvecs,
+            "warm_hits": self.warm_hits,
+            "warm_misses": self.warm_misses,
+            "iterations_saved_warm": self.iterations_saved_warm,
+            "refits": self.refits,
+            "refit_iterations": self.refit_iterations,
+            "refit_iterations_saved": self.refit_iterations_saved,
+            "predict_rows": self.predict_rows,
+            "predict_padded_rows": self.predict_padded_rows,
+            "queue_latency_p50_s": percentile(self.queue_latencies, 50),
+            "queue_latency_p99_s": percentile(self.queue_latencies, 99),
+            "total_latency_p50_s": percentile(self.total_latencies, 50),
+            "total_latency_p99_s": percentile(self.total_latencies, 99),
+        }

@@ -1,0 +1,360 @@
+"""Serving engine + multi-RHS batching (src/repro/serve, solve_batched).
+
+Two layers of guarantees:
+
+* solver layer — ``solve_batched`` coalesces per-consumer RHS blocks into one
+  multi-RHS solve whose per-block solutions match independent single-block
+  solves (CG freezes converged columns; the stochastic solvers' column updates
+  are independent given the shared key), while spending ONE solve's worth of
+  matvecs for the whole batch;
+* engine layer — FIFO fairness, bucket-padding correctness, warm-vs-cold
+  iteration reduction, determinism under interleaved arrival orders, and the
+  ``stats()`` counter contract the benchmark relies on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernels_fn import make_params
+from repro.core.operators import Gram
+from repro.core.solvers.spec import AP, CG, SDD, SGD, solve, solve_batched
+from repro.serve import (
+    FIFOScheduler,
+    GPEngine,
+    Request,
+    bucket,
+    extend_state,
+    fit_state,
+)
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    key = jax.random.PRNGKey(0)
+    n, d = 96, 2
+    x = jax.random.uniform(key, (n, d))
+    y = jnp.sin(4.0 * x[:, 0]) + 0.5 * jnp.cos(3.0 * x[:, 1])
+    params = make_params("matern32", lengthscale=0.5, signal=1.0, noise=0.1, d=d)
+    return dict(x=x, y=y, params=params, n=n, d=d)
+
+
+@pytest.fixture(scope="module")
+def op(small_problem):
+    return Gram(x=small_problem["x"], params=small_problem["params"])
+
+
+def _rhs_blocks(small_problem):
+    key = jax.random.PRNGKey(3)
+    n = small_problem["n"]
+    b1 = small_problem["y"]  # (n,) 1-D block
+    b2 = jax.random.normal(jax.random.fold_in(key, 1), (n, 3))
+    b3 = jax.random.normal(jax.random.fold_in(key, 2), (n, 2))
+    return [b1, b2, b3]
+
+
+# ---------------------------------------------------------------------------
+# solve_batched: stacked RHS columns match independent solves, for every
+# solver family, with shared matvec accounting
+# ---------------------------------------------------------------------------
+
+
+# CG compares at its convergence floor: a column that converges before the
+# batch's slowest column freezes, so its trajectory can differ from the solo
+# run's by (solver tolerance)-level float32 drift. The fixed-step stochastic
+# solvers share their index sequences through the key and match near-exactly.
+@pytest.mark.parametrize(
+    "spec",
+    [
+        CG(max_iters=300, tol=1e-4),
+        SGD(num_steps=60, batch_size=32, num_features=32),
+        SDD(num_steps=60, batch_size=32, step_size_times_n=5.0),
+        AP(num_steps=80, block_size=32),
+    ],
+    ids=["cg", "sgd", "sdd", "ap"],
+)
+def test_solve_batched_matches_single_solves(op, small_problem, spec):
+    blocks = _rhs_blocks(small_problem)
+    key = jax.random.PRNGKey(11)
+    batched = solve_batched(op, blocks, spec, key=key)
+    assert len(batched) == len(blocks)
+    total_single_matvecs = 0
+    for blk, res in zip(blocks, batched):
+        solo = solve(op, blk, spec, key=key)
+        np.testing.assert_allclose(
+            np.asarray(res.solution), np.asarray(solo.solution),
+            rtol=1e-2, atol=1e-3,
+        )
+        assert res.solution.shape == solo.solution.shape  # squeeze preserved
+        total_single_matvecs += int(solo.matvecs)
+    # the whole batch spends ONE solve's worth of full-operator matvecs —
+    # every block's result reports the same shared totals
+    shared = {(int(r.iterations), int(r.matvecs)) for r in batched}
+    assert len(shared) == 1
+    assert int(batched[0].matvecs) <= total_single_matvecs
+
+
+def test_solve_batched_column_padding_is_inert(op, small_problem):
+    blocks = _rhs_blocks(small_problem)
+    spec = CG(max_iters=300, tol=1e-4)
+    plain = solve_batched(op, blocks, spec)
+    padded = solve_batched(op, blocks, spec, pad_columns_to=16)
+    for a, b in zip(plain, padded):
+        # padding changes the compiled matvec width, so agreement is at the
+        # solver-tolerance level, not bitwise
+        np.testing.assert_allclose(
+            np.asarray(a.solution), np.asarray(b.solution), rtol=2e-2, atol=2e-2
+        )
+        assert bool(b.converged)
+
+
+def test_solve_batched_mixed_warm_cold_blocks(op, small_problem):
+    blocks = _rhs_blocks(small_problem)
+    spec = CG(max_iters=300, tol=1e-4)
+    cold = solve_batched(op, blocks, spec)
+    warm = solve_batched(
+        op, blocks, spec,
+        x0_blocks=[cold[0].solution, None, cold[2].solution],
+    )
+    for a, b in zip(cold, warm):
+        np.testing.assert_allclose(
+            np.asarray(a.solution), np.asarray(b.solution), rtol=2e-2, atol=2e-2
+        )
+    # warm columns are already converged: the batch's budget is the cold block's
+    assert int(warm[0].iterations) <= int(cold[0].iterations)
+
+
+# ---------------------------------------------------------------------------
+# x0 validation at the solve() boundary
+# ---------------------------------------------------------------------------
+
+
+def test_x0_shape_mismatch_is_a_clear_error(op, small_problem):
+    y = small_problem["y"]
+    with pytest.raises(ValueError, match="warm start x0"):
+        solve(op, jnp.stack([y, y], axis=1), "cg", x0=y)  # 1-D x0, 2-column b
+    with pytest.raises(ValueError, match="stale warm-start"):
+        solve(op, y, "cg", x0=y[:-1])  # old-n cache entry
+
+
+def test_x0_dtype_mismatch_is_a_clear_error(op, small_problem):
+    y = small_problem["y"]
+    with pytest.raises(TypeError, match="dtype"):
+        solve(op, y, "cg", x0=y.astype(jnp.float16))
+
+
+def test_x0_matching_shape_still_accepted(op, small_problem):
+    y = small_problem["y"]
+    sol = solve(op, y, CG(max_iters=200, tol=1e-4)).solution
+    res = solve(op, y, CG(max_iters=200, tol=1e-4), x0=sol)
+    assert int(res.iterations) <= 2  # re-verifying a solution is nearly free
+
+
+# ---------------------------------------------------------------------------
+# scheduler: grouping, caps, FIFO with position-preserving skips
+# ---------------------------------------------------------------------------
+
+
+def _req(i, kind, rows=4, cols=4, warm=False):
+    xs = None if kind == "thompson_step" else jnp.zeros((rows, 2))
+    return Request(
+        id=i, kind=kind, xs=xs, num_samples=cols, seed=i, arrival=float(i),
+        warm=warm,
+    )
+
+
+def test_scheduler_coalesces_compatible_and_preserves_positions():
+    sched = FIFOScheduler(max_batch_requests=8, max_rhs_columns=64)
+    sched.add(_req(0, "sample"))
+    sched.add(_req(1, "predict"))
+    sched.add(_req(2, "thompson_step"))  # solve group: joins request 0
+    sched.add(_req(3, "sample", warm=True))  # warm never mixes with cold
+    plan = sched.next_batch()
+    assert [r.id for r in plan.requests] == [0, 2]
+    assert plan.group == "solve_cold"
+    # skipped requests keep arrival order: predict is now head-of-line
+    assert sched.next_batch().group == "predict"
+    assert sched.next_batch().group == "solve_warm"
+    assert sched.next_batch() is None
+
+
+def test_scheduler_respects_column_cap():
+    sched = FIFOScheduler(max_batch_requests=8, max_rhs_columns=8)
+    for i in range(3):
+        sched.add(_req(i, "sample", cols=4))
+    plan = sched.next_batch()
+    assert [r.id for r in plan.requests] == [0, 1]  # 8 columns — third waits
+    assert [r.id for r in sched.next_batch().requests] == [2]
+    with pytest.raises(ValueError, match="RHS columns"):
+        sched.add(_req(9, "sample", cols=9))
+
+
+def test_bucket_ladder():
+    assert bucket(1, 16) == 16
+    assert bucket(17, 16) == 32
+    assert bucket(5, 1) == 8  # next pow2
+    assert bucket(8, 8) == 8
+
+
+# ---------------------------------------------------------------------------
+# engine: lifecycle, padding correctness, warm starts, determinism, stats
+# ---------------------------------------------------------------------------
+
+
+def _engine(small_problem, **kw):
+    kw.setdefault("spec", CG(max_iters=300, tol=1e-4))
+    kw.setdefault("num_samples", 4)
+    kw.setdefault("num_features", 128)
+    return GPEngine(
+        small_problem["params"], small_problem["x"], small_problem["y"], **kw
+    )
+
+
+def test_predict_padding_matches_direct_evaluation(small_problem):
+    eng = _engine(small_problem)
+    xs = small_problem["x"][:5] + 0.01  # odd row count → real bucket padding
+    h = eng.predict(xs)
+    eng.step()
+    mean, var = h.result().value["mean"], h.result().value["var"]
+    mean_ref, var_ref = eng.state.post.sample_mean_and_var(xs)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(mean_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(var), np.asarray(var_ref), atol=1e-5)
+
+
+def test_fifo_completion_order_and_batching(small_problem):
+    eng = _engine(small_problem)
+    xs = small_problem["x"][:3]
+    ids = [
+        eng.sample(xs, num_samples=2, seed=1).request.id,
+        eng.predict(xs).request.id,
+        eng.sample(xs, num_samples=2, seed=2).request.id,
+    ]
+    first = eng.step()  # head is a cold sample → both samples coalesce
+    assert [c.request_id for c in first] == [ids[0], ids[2]]
+    assert first[0].metrics["batch_columns"] == 4
+    assert first[0].metrics["iterations"] == first[1].metrics["iterations"]
+    second = eng.step()
+    assert [c.request_id for c in second] == [ids[1]]
+
+
+def test_warm_repeat_uses_fewer_iterations(small_problem):
+    eng = _engine(small_problem)
+    xs = small_problem["x"][:4]
+    cold = eng.sample(xs, num_samples=4, seed=77)
+    eng.run_until_idle()
+    warm = eng.sample(xs, num_samples=4, seed=77)
+    assert warm.request.warm
+    eng.run_until_idle()
+    cold_iters = cold.result().metrics["iterations"]
+    warm_iters = warm.result().metrics["iterations"]
+    assert warm_iters < cold_iters
+    np.testing.assert_allclose(
+        np.asarray(cold.result().value["samples"]),
+        np.asarray(warm.result().value["samples"]),
+        rtol=1e-4, atol=1e-5,
+    )
+    snap = eng.stats()
+    assert snap["warm_hits"] == 1
+    assert snap["iterations_saved_warm"] > 0
+
+
+def test_deterministic_under_interleaved_arrival_orders(small_problem):
+    xs_a = small_problem["x"][:5]
+    xs_b = small_problem["x"][5:8]
+
+    eng1 = _engine(small_problem)  # both samples coalesce into one solve
+    h1a = eng1.sample(xs_a, num_samples=3, seed=101)
+    h1b = eng1.sample(xs_b, num_samples=2, seed=202)
+    eng1.run_until_idle()
+
+    eng2 = _engine(small_problem)  # a predict interleaves; solves split
+    h2b = eng2.sample(xs_b, num_samples=2, seed=202)
+    eng2.step()
+    eng2.predict(xs_a)
+    h2a = eng2.sample(xs_a, num_samples=3, seed=101)
+    eng2.run_until_idle()
+
+    for ha, hb in ((h1a, h2a), (h1b, h2b)):
+        np.testing.assert_allclose(
+            np.asarray(ha.result().value["samples"]),
+            np.asarray(hb.result().value["samples"]),
+            rtol=1e-4, atol=1e-5,
+        )
+
+
+def test_row_and_column_buckets_do_not_change_payloads(small_problem):
+    eng1 = _engine(small_problem, row_bucket_min=16, col_bucket_min=8)
+    eng2 = _engine(small_problem, row_bucket_min=4, col_bucket_min=2)
+    xs = small_problem["x"][:5]
+    h1 = eng1.sample(xs, num_samples=3, seed=5)
+    h2 = eng2.sample(xs, num_samples=3, seed=5)
+    eng1.run_until_idle()
+    eng2.run_until_idle()
+    np.testing.assert_allclose(
+        np.asarray(h1.result().value["samples"]),
+        np.asarray(h2.result().value["samples"]),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_thompson_step_returns_in_bounds_points(small_problem):
+    eng = _engine(small_problem)
+    h = eng.thompson_step(num_samples=3, seed=4, ascent_steps=5, num_candidates=64)
+    eng.run_until_idle()
+    pts = np.asarray(h.result().value["points"])
+    assert pts.shape == (3, small_problem["d"])
+    assert (pts >= 0.0).all() and (pts <= 1.0).all()
+    assert h.result().value["values"].shape == (3,)
+
+
+def test_engine_stats_counters_and_handles(small_problem):
+    eng = _engine(small_problem)
+    with pytest.raises(ValueError, match="unknown request kind"):
+        eng.submit("decode", small_problem["x"][:2])
+    with pytest.raises(ValueError, match="xs must be None"):
+        eng.submit("thompson_step", small_problem["x"][:2])
+    h = eng.sample(small_problem["x"][:2], num_samples=2, seed=1)
+    with pytest.raises(RuntimeError, match="still queued"):
+        h.result()
+    eng.predict(small_problem["x"][:3])
+    eng.run_until_idle()
+    snap = eng.stats()
+    assert snap["requests_submitted"] == 2
+    assert snap["requests_served"] == {"sample": 1, "predict": 1}
+    assert snap["rhs_columns"] == 2
+    assert snap["padded_columns"] == 6  # bucketed up to col_bucket_min=8
+    assert snap["solves"] == 1
+    assert snap["queue_depth"] == 0
+    assert snap["solver"] == "cg"
+    assert snap["predict_rows"] == 3
+
+
+def test_add_observations_warm_refit_saves_iterations(small_problem):
+    key = jax.random.PRNGKey(9)
+    st = fit_state(
+        small_problem["params"], small_problem["x"], small_problem["y"],
+        key, spec=CG(max_iters=300, tol=1e-4), num_samples=4, num_features=128,
+    )
+    x_new = small_problem["x"][:6] + 0.02
+    y_new = small_problem["y"][:6]
+    k2 = jax.random.PRNGKey(10)
+    warm = extend_state(st, x_new, y_new, k2, warm=True)
+    cold = extend_state(st, x_new, y_new, k2, warm=False)
+    assert int(warm.fit_result.iterations) < int(cold.fit_result.iterations)
+    np.testing.assert_allclose(
+        np.asarray(warm.post.v_mean), np.asarray(cold.post.v_mean),
+        rtol=2e-2, atol=2e-2,
+    )
+    # engine-level: the refit counters move and the cache re-keys (old entries
+    # are unreachable under the new fingerprint, so no stale-x0 shape errors)
+    eng = _engine(small_problem)
+    eng.sample(small_problem["x"][:2], num_samples=2, seed=1)
+    eng.run_until_idle()
+    old_key = eng.state.hypers_key
+    eng.add_observations(x_new, y_new)
+    assert eng.state.hypers_key != old_key
+    assert eng.state.n == small_problem["n"] + 6
+    assert eng.stats()["refits"] == 1
+    repeat = eng.sample(small_problem["x"][:2], num_samples=2, seed=1)
+    assert not repeat.request.warm  # cache is keyed by (hypers, n): re-keyed
+    eng.run_until_idle()
