@@ -20,11 +20,21 @@ warm resubmission row must use strictly fewer solver iterations than the cold
 row — a broken warm-start cache (stale keying, dropped x0) shows up here as
 warm == cold.
 
+The robust gate (``bench_robust``) closes the loop on the guardrail work
+(``docs/robustness.md``): ``solve_robust`` on a healthy system must spend
+*exactly* the same matvecs as plain ``solve`` (the in-loop health checks reuse
+reductions the solvers already compute; the ladder's only happy-path cost is
+one host readback of the flags vector), the near-singular recovery row must
+still recover, and the measured wall overhead must stay under a loose
+anti-regression bound (the committed <2% number comes from ``bench_robust``
+itself; the CI bound is wider because container timing is noisy).
+
 Usage:
     PYTHONPATH=src python -m benchmarks.check_matvecs \
         [--baseline results/BENCH_bench_solvers.json] \
         [--mll-baseline results/BENCH_bench_mll.json | --skip-mll] \
         [--serve-baseline results/BENCH_bench_serve.json | --skip-serve] \
+        [--robust-baseline results/BENCH_bench_robust.json | --skip-robust] \
         [--slack 0.15]
 
 ``--slack`` tolerates small cross-platform jitter (fp32 reduction order):
@@ -37,7 +47,7 @@ import json
 import math
 import sys
 
-from . import bench_mll, bench_serve, bench_solvers
+from . import bench_mll, bench_robust, bench_serve, bench_solvers
 from .common import Report
 
 
@@ -95,6 +105,19 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--skip-serve", action="store_true",
         help="skip the serving-engine gate",
+    )
+    ap.add_argument(
+        "--robust-baseline", default="results/BENCH_bench_robust.json",
+        help="committed bench_robust JSON to gate guardrail matvecs against",
+    )
+    ap.add_argument(
+        "--skip-robust", action="store_true",
+        help="skip the solver-guardrail gate",
+    )
+    ap.add_argument(
+        "--robust-overhead-pct", type=float, default=10.0,
+        help="max measured happy-path wall overhead of solve_robust (loose "
+        "CI bound; the committed <2%% number lives in bench_robust itself)",
     )
     ap.add_argument(
         "--slack", type=float, default=0.15,
@@ -178,6 +201,57 @@ def main(argv=None) -> int:
             compared += 1
             if status != "ok":
                 failures.append(((t, "warm", d), base, got))
+
+    if not args.skip_robust:
+        with open(args.robust_baseline) as f:
+            base_robust = _metric_rows(json.load(f)["rows"], "matvecs")
+        if not base_robust:
+            print(f"ERROR: no matvec counts in {args.robust_baseline}",
+                  file=sys.stderr)
+            return 2
+        robust_report = Report()
+        bench_robust.run(robust_report, full=False, smoke=True)
+        c4, f4 = _gate(
+            f"robust matvecs vs {args.robust_baseline}",
+            base_robust, _metric_rows(robust_report.rows, "matvecs"),
+            args.slack,
+        )
+        if c4 == 0:
+            print("ERROR: no comparable robust rows between baseline and "
+                  "smoke run", file=sys.stderr)
+            return 2
+        compared += c4
+        failures += f4
+        # structural gates on the fresh run itself (baseline-independent):
+        # guardrails must be matvec-free on the happy path, the ladder must
+        # still recover the near-singular problem, and the wall overhead must
+        # stay under the loose CI bound
+        print("\nrobust guardrail gate:")
+        for r in robust_report.rows:
+            m = r.metrics
+            if r.table == "robust_overhead" and r.method == "robust":
+                eq = bool(m.get("matvecs_equal"))
+                oh = float(m.get("overhead_pct", 0.0))
+                oh_ok = oh <= args.robust_overhead_pct
+                print(f"  matvecs_equal={int(eq)}  overhead_pct={oh:.2f} "
+                      f"(bound {args.robust_overhead_pct:.0f}%)  "
+                      f"{'ok' if eq and oh_ok else 'REGRESSION'}")
+                compared += 2
+                if not eq:
+                    failures.append((("robust_overhead", "robust",
+                                      "matvecs_equal"), 1, 0))
+                if not oh_ok:
+                    failures.append((("robust_overhead", "robust",
+                                      "overhead_pct"),
+                                     int(args.robust_overhead_pct), int(oh)))
+            if r.table == "robust_recovery":
+                rec = bool(m.get("recovered"))
+                print(f"  recovery recovered={int(rec)}  "
+                      f"{'ok' if rec else 'REGRESSION'}")
+                compared += 1
+                if not rec:
+                    failures.append((("robust_recovery", r.method,
+                                      "recovered"), 1, 0))
 
     if failures:
         print(f"\n{len(failures)} count regression(s):", file=sys.stderr)

@@ -26,6 +26,7 @@ BENCHES = [
     "bench_kronecker",  # Chapter 6
     "bench_thompson",  # Figures 3.7 / 4.4
     "bench_serve",  # serving engine: continuous batching + warm starts
+    "bench_robust",  # guardrail overhead + escalation-ladder recovery
     "bench_molecules",  # Table 4.2
     "bench_gram_kernel",  # Pallas tile sweep
     "bench_roofline",  # §Roofline (reads dry-run JSONL)

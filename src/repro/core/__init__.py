@@ -25,7 +25,20 @@ from .rff import (  # noqa: F401
 )
 from .gp import exact_posterior, exact_mll  # noqa: F401
 from .pathwise import posterior_functions, PosteriorFunctions  # noqa: F401
-from .solvers.base import SolveResult  # noqa: F401
+from .solvers.base import (  # noqa: F401
+    FLAG_BREAKDOWN,
+    FLAG_NONFINITE,
+    FLAG_STAGNATION,
+    FROZEN_FLAGS,
+    SolveResult,
+    flag_names,
+)
+from .solvers.robust import (  # noqa: F401
+    EscalationPolicy,
+    RungRecord,
+    SolveReport,
+    solve_robust,
+)
 from .solvers.cg import solve_cg  # noqa: F401
 from .solvers.sgd import solve_sgd  # noqa: F401
 from .solvers.sdd import solve_sdd  # noqa: F401

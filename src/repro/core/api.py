@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from .kernels_fn import KernelParams, make_params
 from .mll import MLLOptimState, optimize_mll
 from .pathwise import PosteriorFunctions, posterior_functions
+from .solvers.base import flag_names
 from .solvers.spec import SolverSpec, SpecLike, as_spec
 
 
@@ -132,13 +133,17 @@ class IterativeGP:
             )
             self._post_cache_key = cache_key
             info = self._post.solve_info
-            if info is not None and not bool(
-                jnp.all(jnp.isfinite(info.rel_residual))
-            ):
+            # divergence detection now lives in the solver loops + finalize()
+            # (core/solvers/base.py): the facade just reads the structured
+            # per-column flags instead of re-validating the payload itself
+            if info is not None and not bool(info.healthy):
+                bad = flag_names(
+                    int(jnp.bitwise_or.reduce(jnp.atleast_1d(info.flags)))
+                )
                 warnings.warn(
-                    f"solver {self.spec.name!r} diverged (non-finite residual) — "
-                    f"its step size is tuned for large n; reduce "
-                    f"step_size_times_n or use spec='cg'",
+                    f"solver {self.spec.name!r} diverged "
+                    f"(flags: {', '.join(bad)}) — its step size is tuned for "
+                    f"large n; reduce step_size_times_n or use spec='cg'",
                     RuntimeWarning,
                     stacklevel=2,
                 )

@@ -17,7 +17,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .base import LinearOperator, SolveResult, as_matrix_rhs, finalize
+from .base import (
+    FLAG_NONFINITE,
+    LinearOperator,
+    SolveResult,
+    as_matrix_rhs,
+    finalize,
+)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "block_size"))
@@ -44,7 +50,7 @@ def solve_ap(
         init_mv = 1
 
     def step(carry, t):
-        alpha, r = carry
+        alpha, r, fl = carry
         idx = jax.random.randint(jax.random.fold_in(key, t), (block_size,), 0, n)
         # only the p×p principal block is materialised; the (p, n) panel the seed
         # gathered per step is replaced by one fused transposed row-block matvec
@@ -55,13 +61,24 @@ def solve_ap(
         delta = jnp.linalg.solve(
             kii + 1e-6 * jnp.eye(block_size, dtype=b2.dtype), r[idx]
         )  # (p, s)
+        # in-loop health check on the (p, s) block update: a NaN/Inf column (a
+        # poisoned RHS, or a block solve gone bad) flags and freezes — its Δ is
+        # zeroed, so the column-independent updates below leave it untouched
+        ok = jnp.all(jnp.isfinite(delta), axis=0)
+        healthy = (fl & FLAG_NONFINITE) == 0
+        fl = fl | jnp.where(healthy & ~ok, FLAG_NONFINITE, 0).astype(jnp.int32)
+        delta = jnp.where((healthy & ok)[None, :], delta, 0.0)
         alpha = alpha.at[idx].add(delta)
         r = r - op.rows_t_mv(idx, delta)  # r −= K[:, idx] @ Δ, fused
         r = r.at[idx].add(-sigma2 * delta)
-        return (alpha, r), None
+        return (alpha, r, fl), None
 
-    (alpha, r), _ = jax.lax.scan(step, (a0, r0), jnp.arange(num_steps))
+    fl0 = jnp.where(
+        jnp.all(jnp.isfinite(r0), axis=0), 0, FLAG_NONFINITE
+    ).astype(jnp.int32)
+    (alpha, r, fl), _ = jax.lax.scan(step, (a0, r0, fl0), jnp.arange(num_steps))
     # the maintained residual IS b − A α — finalize adds no extra matvec
     return finalize(
-        op, alpha, b2, num_steps, squeeze, tol=tol, residual=r, matvecs=init_mv
+        op, alpha, b2, num_steps, squeeze, tol=tol, residual=r, matvecs=init_mv,
+        flags=fl,
     )

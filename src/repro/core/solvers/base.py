@@ -32,6 +32,37 @@ from ..operators import (  # noqa: F401 (re-exports: legacy import path)
 )
 
 
+# ---------------------------------------------------------------------------
+# Per-column diagnostic flags — the solver loops set these *inside* their
+# while_loop/scan bodies (see cg.py/sgd.py/sdd.py/ap.py) and ``finalize`` adds a
+# final payload check, so no solve() path can return silent NaNs: a non-finite
+# payload always comes with FLAG_NONFINITE and ``converged=False``.
+# ---------------------------------------------------------------------------
+
+#: non-finite residual/iterate/payload detected (NaN or Inf)
+FLAG_NONFINITE = 1
+#: CG breakdown: pᵀAp ≤ 0 on an active column (loss of positive-definiteness)
+FLAG_BREAKDOWN = 2
+#: relative residual stopped improving over the solver's stall window
+#: (advisory — the column keeps iterating and may still converge)
+FLAG_STAGNATION = 4
+
+#: flags that freeze a column: its updates are zeroed inside the loop so it
+#: cannot contaminate the shared multi-RHS matvec (stagnation does not freeze)
+FROZEN_FLAGS = FLAG_NONFINITE | FLAG_BREAKDOWN
+
+_FLAG_NAMES = (
+    (FLAG_NONFINITE, "nonfinite"),
+    (FLAG_BREAKDOWN, "breakdown"),
+    (FLAG_STAGNATION, "stagnation"),
+)
+
+
+def flag_names(mask: int) -> tuple:
+    """Human-readable names for a single column's flag bitmask."""
+    return tuple(name for bit, name in _FLAG_NAMES if int(mask) & bit)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class SolveResult:
@@ -39,8 +70,14 @@ class SolveResult:
     residual_norm: jax.Array  # (s,) final ||A v − b||₂ per RHS
     rel_residual: jax.Array  # (s,) ||A v − b|| / ||b||
     iterations: jax.Array  # () number of iterations executed
-    converged: jax.Array  # () bool — all RHS under tolerance
+    converged: jax.Array  # () bool — all RHS under tolerance AND flag-free
     matvecs: jax.Array = 0  # () full operator matvecs spent (excl. row-block gathers)
+    flags: jax.Array = 0  # (s,) int32 per-column diagnostic bitmask (FLAG_*)
+
+    @property
+    def healthy(self) -> jax.Array:
+        """() bool — no column carries a freezing flag (nonfinite/breakdown)."""
+        return jnp.all((jnp.asarray(self.flags) & FROZEN_FLAGS) == 0)
 
 
 def as_matrix_rhs(b: jax.Array) -> tuple[jax.Array, bool]:
@@ -59,6 +96,7 @@ def finalize(
     tol: float,
     residual: Optional[jax.Array] = None,
     matvecs=0,
+    flags: Optional[jax.Array] = None,
 ) -> SolveResult:
     """Residual bookkeeping shared by all solvers. ``tol`` is the solver's own
     relative-residual tolerance, so ``converged`` is meaningful for CG and the
@@ -68,20 +106,40 @@ def finalize(
     redundant full matvec the seed implementation paid here on every solve;
     ``matvecs`` is the solver's own count of full operator matvecs, incremented
     by one when the residual has to be recomputed.
+
+    ``flags`` carries the per-column diagnostics the solver's loop raised
+    (``FLAG_*`` bitmasks). On top of them this adds the final payload check —
+    a non-finite solution or residual column gets ``FLAG_NONFINITE`` — so
+    *every* ``solve()`` path (``distributed_solve``, ``solve_batched``, …)
+    reports structured diagnostics instead of relying on callers to validate.
+    NaN propagates through ``rel <= tol`` as False, and any flag forces
+    ``converged=False``, so a non-finite payload can never read as converged.
     """
     if residual is None:
         residual = b - op.mv(v)
         matvecs = matvecs + 1
     rn = jnp.linalg.norm(residual, axis=0)
     bn = jnp.maximum(jnp.linalg.norm(b, axis=0), 1e-30)
+    rel = rn / bn
+    col_ok = jnp.all(jnp.isfinite(v), axis=0) & jnp.isfinite(rn)
+    f = (
+        jnp.zeros(jnp.shape(rn), dtype=jnp.int32)
+        if flags is None
+        else jnp.asarray(flags, dtype=jnp.int32)
+    )
+    f = f | jnp.where(col_ok, 0, FLAG_NONFINITE).astype(jnp.int32)
+    # stagnation is advisory: a column that plateaued but still reached the
+    # tolerance with a finite payload is healthy — clear the flag
+    f = jnp.where((rel <= tol) & col_ok, f & ~FLAG_STAGNATION, f)
     sol = v[:, 0] if squeeze else v
     return SolveResult(
         solution=sol,
         residual_norm=rn,
-        rel_residual=rn / bn,
+        rel_residual=rel,
         iterations=jnp.asarray(iterations),
-        converged=jnp.all(rn / bn <= tol),
+        converged=jnp.all((rel <= tol) & (f == 0)),
         matvecs=jnp.asarray(matvecs),
+        flags=f,
     )
 
 

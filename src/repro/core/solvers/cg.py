@@ -33,16 +33,32 @@ from typing import Callable, Optional, Union
 import jax
 import jax.numpy as jnp
 
-from .base import Gram, LinearOperator, SolveResult, as_matrix_rhs, finalize  # noqa: F401 (re-export)
+from .base import (  # noqa: F401 (re-export)
+    FLAG_BREAKDOWN,
+    FLAG_NONFINITE,
+    FLAG_STAGNATION,
+    FROZEN_FLAGS,
+    Gram,
+    LinearOperator,
+    SolveResult,
+    as_matrix_rhs,
+    finalize,
+)
 
 _TRACE_COUNT = 0  # number of times the jitted CG core has been (re)traced
+
+#: relative improvement of the best-so-far residual that resets the stagnation
+#: counter — smaller steady progress than this over ``stall_window`` iterations
+#: raises FLAG_STAGNATION (advisory; the column keeps iterating)
+_STALL_RTOL = 1e-3
 
 
 def cg_trace_count() -> int:
     return _TRACE_COUNT
 
 
-def _cg_impl(op, b2, v0, precond, *, max_iters, tol, x0_is_none, squeeze):
+def _cg_impl(op, b2, v0, precond, *, max_iters, tol, x0_is_none, squeeze,
+             stall_window):
     global _TRACE_COUNT
     _TRACE_COUNT += 1
     minv = precond if precond is not None else (lambda r: r)
@@ -56,38 +72,81 @@ def _cg_impl(op, b2, v0, precond, *, max_iters, tol, x0_is_none, squeeze):
     z0 = minv(r0)
     bn = jnp.maximum(jnp.linalg.norm(b2, axis=0), 1e-30)
     rn0 = jnp.linalg.norm(r0, axis=0)
+    rz0 = jnp.sum(r0 * z0, axis=0)
+    # in-loop health flags, per column: a non-finite initial residual (NaN in b,
+    # or in A·x0 on a warm start) is flagged before the first iteration — the
+    # IEEE trap here is that NaN > tol is False, so an unflagged NaN column
+    # would silently read as converged
+    fl0 = jnp.where(
+        jnp.isfinite(rn0) & jnp.isfinite(rz0), 0, FLAG_NONFINITE
+    ).astype(jnp.int32)
+
+    def live_mask(fl, rn):
+        # active columns: not frozen by a health flag, not converged
+        return ((fl & FROZEN_FLAGS) == 0) & (rn / bn > tol)
 
     def cond(state):
-        _, _, _, _, t, _, rn = state
-        return jnp.logical_and(t < max_iters, jnp.any(rn / bn > tol))
+        _, _, _, _, t, _, rn, fl, _, _ = state
+        return jnp.logical_and(t < max_iters, jnp.any(live_mask(fl, rn)))
 
     def body(state):
-        v, r, z, p, t, rz, rn = state
+        v, r, z, p, t, rz, rn, fl, best, since = state
+        live = live_mask(fl, rn)
         ap = op.mv(p)
         pap = jnp.sum(p * ap, axis=0)
+        # in-loop health checks, all on (s,) reductions (no extra matvec, no
+        # extra O(n·s) pass): a NaN/Inf anywhere in ap surfaces in pᵀAp, and
+        # pᵀAp ≤ 0 on an active column is CG breakdown (A not positive
+        # definite for that direction). Flagged columns freeze BEFORE their
+        # update is applied, so v/r keep the last healthy iterate and the
+        # column stops contaminating nothing but its own lane of the matvec.
+        bad_now = live & ~jnp.isfinite(pap)
+        breakdown = live & jnp.isfinite(pap) & (pap <= 0)
+        fl = (
+            fl
+            | jnp.where(bad_now, FLAG_NONFINITE, 0).astype(jnp.int32)
+            | jnp.where(breakdown, FLAG_BREAKDOWN, 0).astype(jnp.int32)
+        )
+        live = live & ~bad_now & ~breakdown
         alpha = rz / jnp.where(pap > 0, pap, 1.0)
-        # freeze converged columns (alpha→0) to avoid round-off churn; judged on
-        # the carried residual norm — no second norm computation per iteration
-        active = rn / bn > tol
-        alpha = jnp.where(active, alpha, 0.0)
+        # freeze converged and flagged columns (alpha→0) to avoid round-off
+        # churn; judged on the carried residual norm — no second norm per step
+        alpha = jnp.where(live, alpha, 0.0)
         v = v + alpha[None, :] * p
         r = r - alpha[None, :] * ap
         z = minv(r)
         rz_new = jnp.sum(r * z, axis=0)
+        rn_new = jnp.linalg.norm(r, axis=0)
+        # the update itself can overflow (Inf elements in ap with finite pᵀAp,
+        # a non-finite preconditioner apply): catch it on the same reductions
+        post_bad = live & ~(jnp.isfinite(rn_new) & jnp.isfinite(rz_new))
+        fl = fl | jnp.where(post_bad, FLAG_NONFINITE, 0).astype(jnp.int32)
         beta = rz_new / jnp.where(rz > 0, rz, 1.0)
         p = z + beta[None, :] * p
-        return v, r, z, p, t + 1, rz_new, jnp.linalg.norm(r, axis=0)
+        # stagnation watch (advisory): count iterations without a relative
+        # improvement of the best residual so far; only active columns count
+        improved = rn_new < best * (1.0 - _STALL_RTOL)
+        since = jnp.where(live, jnp.where(improved, 0, since + 1), since)
+        fl = fl | jnp.where(
+            live & (since >= stall_window), FLAG_STAGNATION, 0
+        ).astype(jnp.int32)
+        best = jnp.minimum(best, rn_new)
+        return v, r, z, p, t + 1, rz_new, rn_new, fl, best, since
 
-    state = (v0, r0, z0, z0, jnp.asarray(0), jnp.sum(r0 * z0, axis=0), rn0)
-    v, r, _, _, t, _, _ = jax.lax.while_loop(cond, body, state)
+    state = (
+        v0, r0, z0, z0, jnp.asarray(0), rz0, rn0, fl0, rn0,
+        jnp.zeros(rn0.shape, dtype=jnp.int32),
+    )
+    v, r, _, _, t, _, _, fl, _, _ = jax.lax.while_loop(cond, body, state)
     # one matvec per iteration + the optional warm-start residual; the tracked
     # recursion residual r IS b − A v, so finalize adds no extra matvec
     return finalize(
-        op, v, b2, t, squeeze, tol=tol, residual=r, matvecs=init_mv + t
+        op, v, b2, t, squeeze, tol=tol, residual=r, matvecs=init_mv + t,
+        flags=fl,
     )
 
 
-_STATICS = ("max_iters", "tol", "x0_is_none", "squeeze")
+_STATICS = ("max_iters", "tol", "x0_is_none", "squeeze", "stall_window")
 _cg_jit = jax.jit(_cg_impl, static_argnames=_STATICS)
 _cg_jit_closure = jax.jit(_cg_impl, static_argnames=_STATICS + ("precond",))
 
@@ -100,6 +159,7 @@ def solve_cg(
     max_iters: int = 1000,
     tol: float = 1e-2,
     precond: Optional[Union[Callable[[jax.Array], jax.Array], object]] = None,
+    stall_window: int = 100,
 ) -> SolveResult:
     """Solve (K+σ²I) V = B. b: (n,) or (n,s). tol is on the *relative* residual.
 
@@ -107,11 +167,17 @@ def solve_cg(
     ``WoodburyPrecond``) rides through jit as a traced argument — rebuilds of the
     same rank/shape reuse the compiled solve — while a plain closure is a static
     argument and recompiles per identity (legacy behaviour).
+
+    ``stall_window`` controls the advisory FLAG_STAGNATION diagnostic: a column
+    whose residual fails to improve by a relative 1e-3 over this many
+    consecutive iterations is flagged (it keeps iterating — see
+    docs/robustness.md).
     """
     b2, squeeze = as_matrix_rhs(b)
     v0 = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
     kw = dict(
-        max_iters=max_iters, tol=float(tol), x0_is_none=x0 is None, squeeze=squeeze
+        max_iters=max_iters, tol=float(tol), x0_is_none=x0 is None, squeeze=squeeze,
+        stall_window=int(stall_window),
     )
     if precond is None or dataclasses.is_dataclass(precond):
         return _cg_jit(op, b2, v0, precond, **kw)

@@ -22,7 +22,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .base import LinearOperator, SolveResult, as_matrix_rhs, finalize
+from .base import (
+    FLAG_NONFINITE,
+    LinearOperator,
+    SolveResult,
+    as_matrix_rhs,
+    finalize,
+)
 
 
 @partial(jax.jit, static_argnames=("num_steps", "batch_size"))
@@ -49,19 +55,29 @@ def solve_sdd(
     a0 = jnp.zeros_like(b2) if x0 is None else (x0[:, None] if x0.ndim == 1 else x0)
 
     def step(carry, t):
-        alpha, vel, avg = carry
+        alpha, vel, avg, fl = carry
         idx = jax.random.randint(jax.random.fold_in(key, t), (batch_size,), 0, n)
         look = alpha + momentum * vel  # Nesterov lookahead
         # (k_i + σ² e_i)ᵀ look − b_i   (full dual gradient coordinate — Eq. 4.25);
         # fused row-block matvec: the (p, n) panel k_i never hits HBM
         resid = op.rows_mv(idx, look) + sigma2 * look[idx] - b2[idx]  # (p, s)
+        # in-loop health check on the (p, s) block residual: a NaN/Inf in a
+        # column flags and freezes it (updates masked), so a poisoned RHS or a
+        # diverging step size cannot contaminate the rest of the batch
+        ok = jnp.all(jnp.isfinite(resid), axis=0)
+        healthy = (fl & FLAG_NONFINITE) == 0
+        fl = fl | jnp.where(healthy & ~ok, FLAG_NONFINITE, 0).astype(jnp.int32)
+        apply = (healthy & ok)[None, :]
         g_scaled = (n / batch_size) * resid
-        vel = momentum * vel
-        vel = vel.at[idx].add(-beta * g_scaled)
-        alpha = alpha + vel
-        avg = r * alpha + (1.0 - r) * avg  # geometric iterate averaging
-        return (alpha, vel, avg), None
+        vel_new = momentum * vel
+        vel_new = vel_new.at[idx].add(-beta * g_scaled)
+        vel = jnp.where(apply, vel_new, vel)
+        alpha = jnp.where(apply, alpha + vel, alpha)
+        # geometric iterate averaging, frozen with the iterate
+        avg = jnp.where(apply, r * alpha + (1.0 - r) * avg, avg)
+        return (alpha, vel, avg, fl), None
 
-    init = (a0, jnp.zeros_like(a0), a0)
-    (alpha, _, avg), _ = jax.lax.scan(step, init, jnp.arange(num_steps))
-    return finalize(op, avg, b2, num_steps, squeeze, tol=tol)
+    fl0 = jnp.zeros((s,), dtype=jnp.int32)
+    init = (a0, jnp.zeros_like(a0), a0, fl0)
+    (alpha, _, avg, fl), _ = jax.lax.scan(step, init, jnp.arange(num_steps))
+    return finalize(op, avg, b2, num_steps, squeeze, tol=tol, flags=fl)

@@ -36,7 +36,13 @@ import jax.numpy as jnp
 
 from ..kernels_fn import spectral_sample
 from ..rff import FourierFeatures
-from .base import LinearOperator, SolveResult, as_matrix_rhs, finalize
+from .base import (
+    FLAG_NONFINITE,
+    LinearOperator,
+    SolveResult,
+    as_matrix_rhs,
+    finalize,
+)
 
 
 @partial(
@@ -81,7 +87,7 @@ def solve_sgd(
         feat_backend = getattr(op, "backend", "auto") or "auto"
 
     def step(carry, t):
-        v, mom, avg, cnt = carry
+        v, mom, avg, cnt, fl = carry
         kb = jax.random.fold_in(key, t)
         ki, kf = jax.random.split(kb)
         idx = jax.random.randint(ki, (batch_size,), 0, n)
@@ -101,15 +107,27 @@ def solve_sgd(
         g_reg = sigma2 * ff.phi_mv(op.x, ff.phi_t_mv(op.x, look - delta2))
         g = g_fit + g_reg
         gn = jnp.linalg.norm(g, axis=0, keepdims=True)
+        # in-loop health check on an (s,)-sized reduction already computed for
+        # gradient clipping: a NaN/Inf anywhere in a column's gradient surfaces
+        # in its norm. Flagged columns freeze (updates masked to the previous
+        # iterate), so one poisoned RHS cannot contaminate the shared batch.
+        ok = jnp.isfinite(gn[0])
+        healthy = (fl & FLAG_NONFINITE) == 0
+        fl = fl | jnp.where(healthy & ~ok, FLAG_NONFINITE, 0).astype(jnp.int32)
+        apply = (healthy & ok)[None, :]
         g = g * jnp.minimum(1.0, grad_clip * n / jnp.maximum(gn, 1e-30))
-        mom = momentum * mom - lr * g
-        v = v + mom
+        mom = jnp.where(apply, momentum * mom - lr * g, mom)
+        v = jnp.where(apply, v + mom, v)
         in_tail = t >= tail_start
         cnt = cnt + in_tail.astype(jnp.float32)
-        avg = jnp.where(in_tail, avg + (v - avg) / jnp.maximum(cnt, 1.0), avg)
-        return (v, mom, avg, cnt), None
+        avg_new = avg + (v - avg) / jnp.maximum(cnt, 1.0)
+        avg = jnp.where(jnp.logical_and(in_tail, apply[0])[None, :], avg_new, avg)
+        return (v, mom, avg, cnt, fl), None
 
-    init = (v0, jnp.zeros_like(v0), jnp.zeros_like(v0), jnp.asarray(0.0))
-    (v, _, avg, cnt), _ = jax.lax.scan(step, init, jnp.arange(num_steps))
+    fl0 = jnp.zeros((s,), dtype=jnp.int32)
+    init = (v0, jnp.zeros_like(v0), jnp.zeros_like(v0), jnp.asarray(0.0), fl0)
+    (v, _, avg, cnt, fl), _ = jax.lax.scan(step, init, jnp.arange(num_steps))
     v_out = jnp.where(cnt > 0, avg, v)
-    return finalize(op, v_out, b2 + sigma2 * delta2, num_steps, squeeze, tol=tol)
+    return finalize(
+        op, v_out, b2 + sigma2 * delta2, num_steps, squeeze, tol=tol, flags=fl
+    )

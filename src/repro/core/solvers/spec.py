@@ -274,6 +274,9 @@ class CG(SolverSpec):
     tol: float = _static(1e-2)
     precond: Optional[PrecondLike] = _static(None)
     backend: Optional[str] = _static(None)
+    # iterations without relative residual improvement before FLAG_STAGNATION
+    # is raised on a column (advisory — see docs/robustness.md)
+    stall_window: int = _static(100)
 
     def run(self, op, b, *, key=None, x0=None, delta=None) -> SolveResult:
         pc = self.precond
@@ -282,6 +285,7 @@ class CG(SolverSpec):
         return solve_cg(
             op, _fold_delta(op, b, delta), x0,
             max_iters=self.max_iters, tol=self.tol, precond=pc,
+            stall_window=self.stall_window,
         )
 
 
@@ -643,18 +647,25 @@ def solve_batched(
 
     res = solve(op, b, s, key=key, x0=x0, delta=delta)
     tol = float(getattr(s, "tol", 1e-2))
+    flags_full = jnp.asarray(res.flags, dtype=jnp.int32)
+    if flags_full.ndim == 0:
+        flags_full = jnp.broadcast_to(flags_full, res.rel_residual.shape)
     out = []
     for (lo, hi), sq in zip(zip(offsets[:-1], offsets[1:]), squeezes):
         sol = res.solution[:, lo:hi]
         rel = res.rel_residual[lo:hi]
+        fl = flags_full[lo:hi]
         out.append(
             SolveResult(
                 solution=sol[:, 0] if sq else sol,
                 residual_norm=res.residual_norm[lo:hi],
                 rel_residual=rel,
                 iterations=res.iterations,
-                converged=jnp.all(rel <= tol),
+                # per-block convergence is flag-aware, like finalize():
+                # a flagged column in THIS block fails this block only
+                converged=jnp.all((rel <= tol) & (fl == 0)),
                 matvecs=res.matvecs,
+                flags=fl,
             )
         )
     return out

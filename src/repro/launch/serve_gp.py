@@ -9,12 +9,21 @@ drains, and print throughput plus the engine's cumulative counter snapshot.
 ``--repeat`` replays a fraction of the stream with previously-used seeds, which
 exercises the warm-start cache (repeat solves re-enter CG at their cached
 solution and finish in a couple of iterations).
+
+Fault-tolerance knobs (docs/robustness.md): ``--deadline-ms`` stamps a
+relative deadline on every request (expired requests complete with a
+structured ``deadline_exceeded`` error instead of queueing); ``--fault-rate``
+injects a transient matvec fault into that fraction of solve batches — the
+poisoned request is rescued solo through the escalation ladder and the
+failure counters (``escalations``/``failed``/``quarantined``/…) show up in
+the summary and the ``--json`` snapshot.
 """
 from __future__ import annotations
 
 import argparse
 import itertools
 import json
+import random
 import time
 
 import jax
@@ -67,8 +76,10 @@ def drive(engine: GPEngine, stream, depth: int):
             kind, kw = nxt
             kw = dict(kw)  # the repeat tail aliases earlier entries
             xs = kw.pop("xs", None)
-            handles.append(engine.submit(kind, xs, **kw))
-            outstanding += 1
+            h = engine.submit(kind, xs, **kw)
+            handles.append(h)
+            if not h.done:  # quarantined submits complete immediately
+                outstanding += 1
         outstanding -= len(engine.step())
     return handles, time.perf_counter() - t0
 
@@ -90,6 +101,14 @@ def main(argv=None):
     ap.add_argument("--repeat", type=float, default=0.25,
                     help="fraction of the stream replayed with repeat seeds "
                     "(exercises the warm-start cache)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="relative deadline stamped on every request; "
+                    "requests still queued past it complete with a "
+                    "structured deadline_exceeded error")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="fraction of solve batches hit by a transient "
+                    "matvec fault (chaos mode: exercises flag detection, "
+                    "solo rescue and the failure counters)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json", action="store_true", help="print stats as JSON")
     args = ap.parse_args(argv)
@@ -106,6 +125,21 @@ def main(argv=None):
                          d=args.d)
     print(f"[serve_gp] fitting posterior state: n={args.n} d={args.d} "
           f"solver={args.solver}", flush=True)
+    operator_transform = None
+    if args.fault_rate > 0:
+        from ..testing import FaultyOperator
+
+        chaos = random.Random(args.seed + 2)
+
+        def operator_transform(op):
+            if chaos.random() < args.fault_rate:
+                # transient: fires at batch width, vanishes on the narrower
+                # solo rescue solve — the rescuable fault model
+                return FaultyOperator(
+                    op, columns=(0,), min_width=args.num_samples + 1
+                )
+            return op
+
     t0 = time.perf_counter()
     engine = GPEngine(
         params, x, y,
@@ -114,6 +148,10 @@ def main(argv=None):
         seed=args.seed,
         max_batch_requests=args.max_batch_requests,
         max_rhs_columns=args.max_rhs_columns,
+        default_deadline_s=(
+            None if args.deadline_ms is None else args.deadline_ms / 1e3
+        ),
+        operator_transform=operator_transform,
     )
     print(f"[serve_gp] fit in {time.perf_counter() - t0:.2f}s "
           f"({int(engine.state.fit_result.iterations)} iters)", flush=True)
@@ -143,6 +181,14 @@ def main(argv=None):
         print(f"[serve_gp] latency p50={snap['total_latency_p50_s']*1e3:.1f}ms "
               f"p99={snap['total_latency_p99_s']*1e3:.1f}ms "
               f"queue p50={snap['queue_latency_p50_s']*1e3:.1f}ms")
+        faults = {k: snap[k] for k in (
+            "failed", "escalations", "deadline_misses", "quarantined",
+            "retries", "shed", "degraded",
+        ) if snap[k]}
+        if faults:
+            print(f"[serve_gp] faults: " + " ".join(
+                f"{k}={v}" for k, v in sorted(faults.items())
+            ))
     return 0
 
 

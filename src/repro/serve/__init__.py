@@ -1,6 +1,6 @@
 """GP posterior serving engine — continuous batching of predict/sample/Thompson
 queries over shared multi-RHS solves (see docs/serving.md)."""
-from .engine import GPEngine  # noqa: F401
+from .engine import EngineOverloaded, GPEngine  # noqa: F401
 from .metrics import EngineStats, percentile  # noqa: F401
 from .request import (  # noqa: F401
     Completion,

@@ -42,6 +42,8 @@ import numpy as np
 from ..core.kernels_fn import KernelParams
 from ..core.pathwise import PosteriorFunctions
 from ..core.rff import PriorSamples
+from ..core.solvers.base import FROZEN_FLAGS, flag_names
+from ..core.solvers.robust import EscalationPolicy, _pin_backend, solve_robust
 from ..core.solvers.spec import SpecLike, as_spec, solve
 from ..core.thompson import _maximise_samples
 from .metrics import EngineStats
@@ -65,6 +67,11 @@ from .scheduler import (
 from .state import PosteriorState, WarmStartCache, extend_state, fit_state
 
 
+class EngineOverloaded(RuntimeError):
+    """Backpressure signal: the queue is past ``max_queue_depth`` and the
+    overload policy rejected this submit. Callers back off and retry."""
+
+
 class GPEngine:
     """Continuous-batching server over one fitted GP posterior.
 
@@ -83,6 +90,27 @@ class GPEngine:
         clock: timeline source for arrival/latency stamps (injectable so the
             benchmark can drive a simulated arrival process); compute durations
             are always measured with ``time.perf_counter``.
+
+    Fault tolerance (docs/robustness.md):
+        max_skips: scheduler starvation guard — a request skipped this many
+            times is promoted to head the next batch.
+        default_deadline_s: relative deadline stamped on every submit that
+            does not pass its own ``deadline_s``; ``None`` = no deadline.
+        max_queue_depth / overload_policy: overload shedding — past the depth
+            threshold, ``"degrade"`` serves ``sample`` requests as mean-only
+            ``predict`` (and rejects the rest), ``"reject"`` refuses
+            everything with :class:`EngineOverloaded` backpressure.
+        max_exec_retries / retry_backoff_s: host-level retry of a batch whose
+            execution *raised* (transient dispatch/runtime errors); past the
+            budget the batch's requests complete with ``exec_error``.
+        quarantine_after: a (kind, seed) identity whose solo rescue fails this
+            many times is quarantined — later submits complete immediately
+            with a ``quarantined`` error instead of poisoning more batches.
+        escalation: the :class:`EscalationPolicy` for solo rescues of flagged
+            columns (``None`` disables rescue — flagged requests fail fast).
+        operator_transform: optional hook wrapping the solve operator each
+            batch (fault injection in tests/benchmarks; must preserve the
+            LinearOperator protocol).
     """
 
     def __init__(
@@ -103,12 +131,34 @@ class GPEngine:
         warm_cache_entries: int = 256,
         default_sample_count: int = 8,
         clock: Callable[[], float] = time.monotonic,
+        max_skips: int = 16,
+        default_deadline_s: Optional[float] = None,
+        max_queue_depth: Optional[int] = None,
+        overload_policy: str = "degrade",
+        max_exec_retries: int = 1,
+        retry_backoff_s: float = 0.02,
+        quarantine_after: int = 2,
+        escalation: Optional[EscalationPolicy] = EscalationPolicy(),
+        operator_transform: Optional[Callable] = None,
     ):
+        if overload_policy not in ("degrade", "reject"):
+            raise ValueError(
+                f"overload_policy must be 'degrade' or 'reject', got "
+                f"{overload_policy!r}"
+            )
         self.spec = as_spec(spec)
         self._clock = clock
         self.row_bucket_min = int(row_bucket_min)
         self.col_bucket_min = int(col_bucket_min)
         self.default_sample_count = int(default_sample_count)
+        self.default_deadline_s = default_deadline_s
+        self.max_queue_depth = max_queue_depth
+        self.overload_policy = overload_policy
+        self.max_exec_retries = int(max_exec_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.quarantine_after = int(quarantine_after)
+        self.escalation = escalation
+        self._op_transform = operator_transform
         key = jax.random.PRNGKey(seed) if key is None else key
         kf, self._solver_key = jax.random.split(key)
         self.state: PosteriorState = fit_state(
@@ -118,12 +168,17 @@ class GPEngine:
         self.scheduler = FIFOScheduler(
             max_batch_requests=max_batch_requests,
             max_rhs_columns=max_rhs_columns,
+            max_skips=max_skips,
         )
         self.cache = WarmStartCache(max_entries=warm_cache_entries)
         self._stats = EngineStats()
         self._ids = itertools.count()
         self._auto_seeds = itertools.count()
         self._handles: dict = {}
+        # poison-request bookkeeping: strike counts and the quarantine set,
+        # keyed by the (kind, seed) identity that regenerates the RHS columns
+        self._strikes: dict = {}
+        self._quarantine: set = set()
         # warm-start savings are reported against the most recent cold solve
         self._last_cold_iters: Optional[int] = None
         self._cold_fit_iters = int(self.state.fit_result.iterations)
@@ -137,17 +192,48 @@ class GPEngine:
         *,
         num_samples: Optional[int] = None,
         seed: Optional[int] = None,
+        deadline_s: Optional[float] = None,
         **options,
     ) -> RequestHandle:
-        """Queue a request; never blocks. Returns a handle completed by step().
+        """Queue a request; never blocks on execution. Returns a handle
+        completed by step().
 
         ``seed`` pins the request's randomness (repeat seeds are what the
         warm-start cache keys on); omitted, a fresh engine-unique seed is
-        assigned. ``options`` are kind-specific (thompson_step: ascent
-        parameters ``num_candidates``/``num_top``/``ascent_steps``/``lr``).
+        assigned. ``deadline_s`` is relative to now (falls back to the
+        engine's ``default_deadline_s``); a request still queued past its
+        deadline completes with a structured ``deadline_exceeded`` error.
+        ``options`` are kind-specific (thompson_step: ascent parameters
+        ``num_candidates``/``num_top``/``ascent_steps``/``lr``).
+
+        Overload shedding: past ``max_queue_depth``, policy ``"degrade"``
+        downgrades ``sample`` to mean-only ``predict`` (same query block) and
+        rejects everything else; policy ``"reject"`` refuses all submits —
+        rejection raises :class:`EngineOverloaded` as backpressure. A
+        quarantined (kind, seed) identity completes immediately with a
+        ``quarantined`` error.
         """
         if kind not in KINDS:
             raise ValueError(f"unknown request kind {kind!r}; expected one of {KINDS}")
+        if (
+            self.max_queue_depth is not None
+            and len(self.scheduler) >= self.max_queue_depth
+        ):
+            if (
+                self.overload_policy == "degrade"
+                and kind == SAMPLE
+                and xs is not None
+            ):
+                kind = PREDICT
+                options["degraded"] = True
+                self._stats.degraded += 1
+            else:
+                self._stats.shed += 1
+                raise EngineOverloaded(
+                    f"queue depth {len(self.scheduler)} >= max_queue_depth "
+                    f"{self.max_queue_depth}; request shed "
+                    f"(policy={self.overload_policy!r}) — back off and retry"
+                )
         if kind in (PREDICT, SAMPLE):
             if xs is None:
                 raise ValueError(f"{kind!r} requests need a query block xs of shape (m, d)")
@@ -168,6 +254,8 @@ class GPEngine:
             )
         if seed is None:
             seed = (1 << 20) + next(self._auto_seeds)
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
         req = Request(
             id=next(self._ids),
             kind=kind,
@@ -180,11 +268,25 @@ class GPEngine:
                 kind in SOLVE_KINDS
                 and self.cache.probe(self.state.hypers_key, kind, int(seed))
             ),
+            deadline=None if deadline_s is None else self._clock() + deadline_s,
         )
-        self.scheduler.add(req)
         handle = RequestHandle(req)
         self._handles[req.id] = handle
         self._stats.requests_submitted += 1
+        if kind in SOLVE_KINDS and (kind, int(seed)) in self._quarantine:
+            # repeat offender: fail fast instead of poisoning another batch
+            self._stats.quarantined += 1
+            self._fail(
+                req,
+                code="quarantined",
+                message=(
+                    f"(kind={kind!r}, seed={seed}) exceeded "
+                    f"{self.quarantine_after} failed rescue attempts and is "
+                    f"quarantined; resubmit with a fresh seed"
+                ),
+            )
+            return handle
+        self.scheduler.add(req)
         return handle
 
     # convenience wrappers
@@ -199,31 +301,89 @@ class GPEngine:
 
     # -------------------------------------------------------------------- step
 
-    def step(self) -> List[Completion]:
-        """Run one engine iteration: schedule → batch → execute → complete.
+    def _fail(self, req, *, code: str, message: str, **detail) -> Completion:
+        """Complete ``req`` with a structured error (never an exception)."""
+        comp = Completion(
+            request_id=req.id,
+            kind=req.kind,
+            value={},
+            metrics=dict(queue_s=self._clock() - req.arrival),
+            error=dict(code=code, message=message, **detail),
+        )
+        self._handles.pop(req.id)._complete(comp)
+        self._stats.failed += 1
+        return comp
 
-        Returns the completions produced this step (possibly empty). Latency
+    def step(self) -> List[Completion]:
+        """Run one engine iteration: expire → schedule → batch → execute →
+        complete.
+
+        Returns the completions produced this step (possibly empty), both
+        successes and structured failures (``Completion.ok``). Latency
         accounting: ``queue_s`` is arrival → batch start on the engine clock;
         ``exec_s`` is the batch's measured compute wall (shared by every
         request in the batch, as is the solve's iteration/matvec spend).
         """
+        now = self._clock()
+        completions: List[Completion] = []
+        for req in self.scheduler.expire(now):
+            self._stats.deadline_misses += 1
+            completions.append(
+                self._fail(
+                    req,
+                    code="deadline_exceeded",
+                    message=(
+                        f"request {req.id} ({req.kind}) expired in queue: "
+                        f"deadline {req.deadline:.3f} < now {now:.3f}"
+                    ),
+                    deadline=req.deadline,
+                    now=now,
+                )
+            )
         plan = self.scheduler.next_batch()
         if plan is None:
-            return []
+            return completions
         t_start = self._clock()
         t0 = time.perf_counter()
-        if plan.group == GROUP_PREDICT:
-            values, extra = self._execute_predict(plan)
-        else:
-            values, extra = self._execute_solve(plan)
-        jax.block_until_ready([list(v.values()) for v in values])
+        attempt = 0
+        while True:
+            try:
+                if plan.group == GROUP_PREDICT:
+                    values, extra = self._execute_predict(plan)
+                    errors: dict = {}
+                else:
+                    values, extra, errors = self._execute_solve(plan)
+                jax.block_until_ready([list(v.values()) for v in values])
+                break
+            except Exception as exc:  # noqa: BLE001 — isolation boundary:
+                # a raising batch must fail structurally, not kill the loop
+                attempt += 1
+                if attempt > self.max_exec_retries:
+                    for req in plan.requests:
+                        completions.append(
+                            self._fail(
+                                req,
+                                code="exec_error",
+                                message=f"batch execution failed after "
+                                f"{attempt} attempts: {exc!r}",
+                            )
+                        )
+                    return completions
+                self._stats.retries += 1
+                time.sleep(self.retry_backoff_s * attempt)
         exec_s = time.perf_counter() - t0
 
         self._stats.steps += 1
         self._stats.bump_batch(plan.group)
-        completions = []
         for req, value in zip(plan.requests, values):
             queue_s = t_start - req.arrival
+            error = errors.get(req.id)
+            if error is not None:
+                comp = self._fail(req, **error)
+                if error.get("code") == "solver_failure":
+                    self._strike(req)
+                completions.append(comp)
+                continue
             metrics = dict(
                 queue_s=queue_s,
                 exec_s=exec_s,
@@ -234,6 +394,8 @@ class GPEngine:
             )
             if req.kind in SOLVE_KINDS:
                 metrics["warm"] = req.warm
+            if req.options.get("degraded"):
+                metrics["degraded"] = True
             comp = Completion(
                 request_id=req.id, kind=req.kind, value=value, metrics=metrics
             )
@@ -243,6 +405,14 @@ class GPEngine:
             self._stats.total_latencies.append(queue_s + exec_s)
             completions.append(comp)
         return completions
+
+    def _strike(self, req) -> None:
+        """Record a failed rescue; quarantine the (kind, seed) identity past
+        the strike budget."""
+        ident = (req.kind, req.seed)
+        self._strikes[ident] = self._strikes.get(ident, 0) + 1
+        if self._strikes[ident] >= self.quarantine_after:
+            self._quarantine.add(ident)
 
     def run_until_idle(self, max_steps: int = 100_000) -> List[Completion]:
         """Drive step() until the queue drains; returns all completions."""
@@ -299,9 +469,22 @@ class GPEngine:
         comes from: at depth D the O(n²d) kernel evaluation inside each solver
         iteration (and the dispatch overhead of each fused pass) is paid once,
         not D times.
+
+        Fault isolation (docs/robustness.md): after the shared solve, columns
+        whose diagnostic flags carry ``FROZEN_FLAGS`` identify the requests
+        that poisoned them; each such request is re-run *solo* through
+        :func:`solve_robust`'s escalation ladder against the same operator.
+        Rescued requests complete normally (their payload comes from the
+        rescued solution); unrescuable ones get a structured
+        ``solver_failure`` error. Requests whose columns stayed clean are
+        untouched — their payloads are bit-identical to a fault-free batch.
         """
         state = self.state
         op = state.operator()
+        if self._op_transform is not None:
+            # wrappers can't survive solve()'s dataclasses.replace backend
+            # pinning, so pin the inner operator first, then wrap
+            op = self._op_transform(_pin_backend(op, self.spec))
         n = state.n
         per_req = [self._request_draws(r) for r in plan.requests]
         widths = [r.num_samples for r in plan.requests]
@@ -349,10 +532,67 @@ class GPEngine:
         else:
             self._last_cold_iters = iters
 
+        # ---- fault isolation: map flagged columns back to their requests,
+        # rescue each affected request solo, fail the unrescuable ones
+        flags = np.atleast_1d(np.asarray(jax.device_get(res.flags)))
+        if flags.size == 1 and cbucket > 1:
+            flags = np.full((cbucket,), int(flags[0]))
+        bad = (flags[:total].astype(np.int64) & FROZEN_FLAGS) != 0
+        errors: dict = {}
+        rescued: dict = {}
+        if bad.any():
+            for req, (w_req, eps_req, _), lo, hi in zip(
+                plan.requests, per_req, offsets[:-1], offsets[1:]
+            ):
+                if not bad[lo:hi].any():
+                    continue
+                req_flags = [int(f) for f in flags[lo:hi]]
+                names = flag_names(int(np.bitwise_or.reduce(flags[lo:hi])))
+                if self.escalation is None:
+                    errors[req.id] = dict(
+                        code="solver_failure",
+                        message=(
+                            f"request {req.id} ({req.kind}) columns flagged "
+                            f"({', '.join(names)}) and rescue is disabled"
+                        ),
+                        flags=req_flags,
+                    )
+                    continue
+                self._stats.escalations += 1
+                data_req = state.prior.phi_mv(state.x, w_req)
+                rkey = jax.random.fold_in(
+                    self._solver_key, 20_000_000 + req.id
+                )
+                report = solve_robust(
+                    op,
+                    data_req,
+                    self.spec,
+                    key=rkey,
+                    delta=eps_req / state.params.noise,
+                    policy=self.escalation,
+                )
+                if report.failed_columns:
+                    errors[req.id] = dict(
+                        code="solver_failure",
+                        message=(
+                            f"request {req.id} ({req.kind}) columns flagged "
+                            f"({', '.join(names)}); escalation ladder "
+                            f"{report.ladder or ['(empty)']} could not recover "
+                            f"columns {report.failed_columns}"
+                        ),
+                        flags=req_flags,
+                        rungs=list(report.ladder),
+                    )
+                else:
+                    rescued[req.id] = report.result.solution
+
         for req, lo, hi in zip(plan.requests, offsets[:-1], offsets[1:]):
-            self.cache.store(
-                state.hypers_key, req.kind, req.seed, res.solution[:, lo:hi]
-            )
+            if req.id in errors:
+                continue  # never cache a poisoned solution
+            sol = rescued.get(req.id)
+            if sol is None:
+                sol = res.solution[:, lo:hi]
+            self.cache.store(state.hypers_key, req.kind, req.seed, sol)
 
         values_by_id = {}
         # one batched pathwise evaluation serves every sample request: their
@@ -362,6 +602,7 @@ class GPEngine:
         sample_at = [
             (req, int(lo)) for req, lo in zip(plan.requests, offsets[:-1])
             if req.kind == SAMPLE
+            and req.id not in errors and req.id not in rescued
         ]
         if sample_at:
             row_offsets, r_total = [], 0
@@ -378,18 +619,29 @@ class GPEngine:
                                     lo : lo + req.num_samples]
                 }
 
+        # rescued sample requests get a solo pathwise pass over the rescued
+        # representer block (cheap: the solve already happened in the ladder)
+        for req, (w_req, _, _) in zip(plan.requests, per_req):
+            if req.kind == SAMPLE and req.id in rescued:
+                values_by_id[req.id] = {
+                    "samples": state.post.sample_paths(
+                        req.xs, w_req, rescued[req.id]
+                    )
+                }
+
         for req, (_, _, ka), lo, hi in zip(
             plan.requests, per_req, offsets[:-1], offsets[1:]
         ):
-            if req.kind != THOMPSON:
+            if req.kind != THOMPSON or req.id in errors:
                 continue
             # THOMPSON: ascend each fresh sample path (§3.3.2); the ascent loop
             # is per-request (its sample count fixes the compiled shape), at a
             # bucketed column count so repeat shapes reuse the compiled step
             sbucket = bucket(req.num_samples, self.col_bucket_min)
             spad = sbucket - req.num_samples
+            alpha_req = rescued.get(req.id, res.solution[:, lo:hi])
             w_pad = jnp.pad(w_cat[:, lo:hi], ((0, 0), (0, spad)))
-            a_pad = jnp.pad(res.solution[:, lo:hi], ((0, 0), (0, spad)))
+            a_pad = jnp.pad(alpha_req, ((0, 0), (0, spad)))
             post_r = PosteriorFunctions(
                 params=state.params,
                 x=state.x,
@@ -416,14 +668,14 @@ class GPEngine:
                 "points": pts[: req.num_samples],
                 "values": per_sample[: req.num_samples],
             }
-        values = [values_by_id[req.id] for req in plan.requests]
+        values = [values_by_id.get(req.id, {}) for req in plan.requests]
         extra = dict(
             batch_columns=total,
             bucket_columns=cbucket,
             iterations=iters,
             matvecs=matvecs,
         )
-        return values, extra
+        return values, extra, errors
 
     # ------------------------------------------------------------------- state
 

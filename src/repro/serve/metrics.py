@@ -49,6 +49,16 @@ class EngineStats:
     refit_iterations_saved: int = 0
     predict_rows: int = 0
     predict_padded_rows: int = 0
+    # fault-tolerance counters (docs/robustness.md): every failure-handling
+    # decision the engine takes is visible here, so chaos tests and the
+    # serve_gp --json driver can assert on exactly what happened
+    deadline_misses: int = 0  # requests expired before execution
+    shed: int = 0  # requests rejected at submit (queue over threshold)
+    degraded: int = 0  # sample requests downgraded to predict under overload
+    retries: int = 0  # batch execution retries (exec-level exceptions)
+    escalations: int = 0  # flagged requests re-run solo via solve_robust
+    quarantined: int = 0  # submits refused: (kind, seed) exceeded its strikes
+    failed: int = 0  # completions delivered with a structured error
     queue_latencies: List[float] = dataclasses.field(default_factory=list)
     total_latencies: List[float] = dataclasses.field(default_factory=list)
 
@@ -79,6 +89,13 @@ class EngineStats:
             "refit_iterations_saved": self.refit_iterations_saved,
             "predict_rows": self.predict_rows,
             "predict_padded_rows": self.predict_padded_rows,
+            "deadline_misses": self.deadline_misses,
+            "shed": self.shed,
+            "degraded": self.degraded,
+            "retries": self.retries,
+            "escalations": self.escalations,
+            "quarantined": self.quarantined,
+            "failed": self.failed,
             "queue_latency_p50_s": percentile(self.queue_latencies, 50),
             "queue_latency_p99_s": percentile(self.queue_latencies, 99),
             "total_latency_p50_s": percentile(self.total_latencies, 50),

@@ -58,6 +58,15 @@ class Request:
     arrival: float  # engine clock() at submit
     options: Dict[str, Any] = dataclasses.field(default_factory=dict)
     warm: bool = False  # warm-start cache probe hit (solve kinds only)
+    # absolute engine-clock deadline; requests past it complete with a
+    # structured deadline_exceeded error instead of queueing forever
+    deadline: Optional[float] = None
+    # times this request was skipped by batch formation while queued; the
+    # scheduler's starvation guard forces it to head a batch past max_skips
+    skips: int = 0
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
 
     @property
     def num_rows(self) -> int:
@@ -79,12 +88,25 @@ class Completion:
     ``batch_requests``/``batch_columns``/``bucket_columns``/``bucket_rows``
     (what the request rode with), and for solve kinds ``iterations``,
     ``matvecs`` (shared batch totals) and ``warm``.
+
+    ``error`` is ``None`` on success; a failed request carries a structured
+    dict instead of a payload — ``{"code": ..., "message": ...}`` plus
+    code-specific detail (``flags``/``rungs`` for ``solver_failure``,
+    ``deadline``/``now`` for ``deadline_exceeded``). Codes:
+    ``deadline_exceeded`` | ``solver_failure`` | ``exec_error`` |
+    ``quarantined``. Never an exception: fault isolation means the caller of a
+    *different* request in the same batch sees nothing at all.
     """
 
     request_id: int
     kind: str
     value: Dict[str, Any]
     metrics: Dict[str, Any]
+    error: Optional[Dict[str, Any]] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
 class RequestHandle:

@@ -16,6 +16,16 @@ Policy (see ``docs/serving.md``):
 * Caps: ``max_batch_requests`` bounds any batch; ``max_rhs_columns`` bounds the
   solve batch's total RHS width (the solver's memory per iteration is
   O(n · columns)).
+* Starvation guard: every skip increments ``Request.skips``; once a request
+  has been passed over ``max_skips`` times, it is promoted to head the next
+  batch regardless of the true head's group. Under pure FIFO evolution the
+  head is always consumed, so skips stay monotone along the queue and wait
+  is already bounded by queue position — the guard is the *invariant* that
+  keeps it bounded under any richer policy (priorities, re-queues, external
+  mutation of the queue) without auditing each one.
+* Deadlines: ``expire(now)`` removes requests whose ``deadline`` has passed —
+  the engine completes them with a structured ``deadline_exceeded`` error, so
+  nothing silently queues forever.
 
 Bucketing is the engine's job (the scheduler deals in requests, not shapes) —
 :func:`bucket` is the shared shape-quantisation helper: padding rows/columns up
@@ -69,11 +79,19 @@ class BatchPlan:
 class FIFOScheduler:
     """The engine's queue + batch former. Host-side and O(queue) per step."""
 
-    def __init__(self, max_batch_requests: int = 16, max_rhs_columns: int = 64):
+    def __init__(
+        self,
+        max_batch_requests: int = 16,
+        max_rhs_columns: int = 64,
+        max_skips: int = 16,
+    ):
         if max_batch_requests < 1 or max_rhs_columns < 1:
             raise ValueError("batch caps must be >= 1")
+        if max_skips < 1:
+            raise ValueError("max_skips must be >= 1")
         self.max_batch_requests = max_batch_requests
         self.max_rhs_columns = max_rhs_columns
+        self.max_skips = max_skips
         self._queue: Deque[Request] = deque()
 
     def __len__(self) -> int:
@@ -91,12 +109,31 @@ class FIFOScheduler:
     def pending(self) -> Tuple[Request, ...]:
         return tuple(self._queue)
 
+    def expire(self, now: float) -> List[Request]:
+        """Remove and return every queued request whose deadline has passed.
+
+        The engine calls this at the top of each step and completes the
+        returned requests with a structured ``deadline_exceeded`` error —
+        an expired request never executes and never blocks the queue."""
+        expired = [r for r in self._queue if r.expired(now)]
+        if expired:
+            self._queue = deque(r for r in self._queue if not r.expired(now))
+        return expired
+
     def next_batch(self) -> Optional[BatchPlan]:
         """Form the next batch: head request + every compatible follower the
-        caps admit, preserving arrival order; the rest keep their positions."""
+        caps admit, preserving arrival order; the rest keep their positions.
+
+        Starvation guard: a request skipped ``max_skips`` times is promoted to
+        *be* the head — its group fixes this batch — so position-preserving
+        skips can never defer any single request indefinitely."""
         if not self._queue:
             return None
         head = self._queue[0]
+        for req in self._queue:
+            if req.skips >= self.max_skips:
+                head = req  # oldest over-skipped request wins
+                break
         grp = group_of(head)
         picked: List[Request] = []
         kept: List[Request] = []
@@ -111,6 +148,7 @@ class FIFOScheduler:
                 picked.append(req)
                 columns += want_cols
             else:
+                req.skips += 1
                 kept.append(req)
         self._queue = deque(kept)
         return BatchPlan(group=grp, requests=picked)

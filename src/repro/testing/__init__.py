@@ -1,0 +1,9 @@
+"""Test/benchmark support — fault injection for the robustness suite
+(docs/robustness.md). Not imported by the library proper."""
+from .faults import (  # noqa: F401
+    DenseOperator,
+    FaultyFeatureOperator,
+    FaultyOperator,
+    nan_columns,
+    near_singular_problem,
+)

@@ -1,0 +1,213 @@
+"""Deterministic fault injection for the robustness suite (docs/robustness.md).
+
+Three fault models, all pure and trace-safe (no host callbacks, no call
+counters — a fault either fires for a given operand shape or it doesn't, so
+tests are reproducible under jit, vmap and ``lax.while_loop`` alike):
+
+* :class:`FaultyOperator` — wraps any :class:`LinearOperator` and corrupts
+  chosen *columns* of every ``mv`` output. Because the solvers' health checks
+  are per-column and matrix products keep columns independent, this poisons
+  exactly the chosen RHS lanes of a shared multi-RHS solve and nothing else —
+  the serving engine's fault-isolation contract is tested against precisely
+  this wrapper. Columns beyond the operand's width never fire, so a request
+  poisoned at batch position c ≥ its solo width escapes the fault when the
+  engine re-runs it alone (the transient-corruption scenario); set
+  ``min_width`` to make that threshold explicit.
+* :class:`FaultyFeatureOperator` — the rectangular twin: corrupts chosen
+  columns of ``phi_mv`` output, i.e. poisons the *right-hand sides* built from
+  prior feature draws. Unlike a transient matvec fault, a poisoned RHS follows
+  the request into its solo rescue — this is the repeat-offender model the
+  engine's quarantine is tested with.
+* :class:`DenseOperator` — a plain dense operator for constructing exact
+  pathologies: indefinite matrices (CG breakdown, pᵀAp ≤ 0), exactly singular
+  systems, arbitrary conditioning. ``near_singular_problem`` builds the
+  standard duplicated-rows Gram that makes fp32 CG stagnate.
+
+Injection is column-surgical on purpose: corrupting whole matvec outputs
+would only test the trivial "everything failed" path, while per-column faults
+exercise freezing, flag propagation, healthy-column parity and solo rescue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.kernels_fn import make_params
+from ..core.operators import Gram, LinearOperator
+
+_STATIC = dict(metadata=dict(static=True))
+
+
+def _corrupt_columns(out: jax.Array, columns, value: float, min_width: int):
+    """Set the chosen columns of a matvec/feature-map output to ``value``.
+
+    Width gating is static (shapes are trace-time constants), so the wrapped
+    operator traces to a clean or a faulty program per shape — never a
+    data-dependent branch."""
+    if out.ndim == 1:
+        if 0 in columns and min_width <= 1:
+            return jnp.full_like(out, value)
+        return out
+    if out.shape[1] < max(min_width, 1):
+        return out
+    for c in columns:
+        if c < out.shape[1]:
+            out = out.at[:, c].set(value)
+    return out
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FaultyOperator(LinearOperator):
+    """``inner`` with chosen ``mv``-output columns forced to ``value``.
+
+    Everything except ``mv`` forwards to the wrapped operator (capabilities
+    included, via ``__getattr__`` — so ``rows_mv``-based stochastic solvers
+    see the *clean* operator; this wrapper models a fault in the fused
+    multi-RHS matvec path, the one every CG-family iteration goes through).
+    ``dense()`` explicitly forwards clean: a dense fallback is a different
+    code path and escaping a transient matvec fault there is the realistic
+    behaviour — tests that want the dense rung closed set
+    ``EscalationPolicy(dense_fallback_max_n=0)``.
+    """
+
+    inner: Any  # the wrapped LinearOperator (a pytree)
+    columns: Tuple[int, ...] = dataclasses.field(default=(0,), **_STATIC)
+    value: float = dataclasses.field(default=float("nan"), **_STATIC)
+    #: fault only fires when the operand has at least this many columns —
+    #: lets a batch-position fault vanish on solo re-runs
+    min_width: int = dataclasses.field(default=0, **_STATIC)
+
+    @property
+    def shape(self) -> tuple:
+        return self.inner.shape
+
+    @property
+    def noise(self) -> jax.Array:
+        return self.inner.noise
+
+    def mv(self, v: jax.Array) -> jax.Array:
+        return _corrupt_columns(
+            self.inner.mv(v), self.columns, self.value, self.min_width
+        )
+
+    def diag_part(self) -> jax.Array:
+        return self.inner.diag_part()
+
+    def dense(self) -> jax.Array:
+        return self.inner.dense()
+
+    def prepare_for_solve(self) -> "FaultyOperator":
+        prep = getattr(self.inner, "prepare_for_solve", None)
+        if callable(prep):
+            return dataclasses.replace(self, inner=prep())
+        return self
+
+    def __getattr__(self, name: str):
+        if name.startswith("__") or name in (
+            "inner", "columns", "value", "min_width"
+        ):
+            raise AttributeError(name)
+        return getattr(object.__getattribute__(self, "inner"), name)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FaultyFeatureOperator:
+    """A feature operator whose ``phi_mv`` output columns are forced to
+    ``value`` — poisons the RHS built from those prior weight columns, and
+    keeps poisoning them on every rebuild (the persistent-fault model the
+    engine's strike/quarantine bookkeeping is tested with)."""
+
+    inner: Any  # the wrapped FeatureOperator (a pytree)
+    columns: Tuple[int, ...] = dataclasses.field(default=(0,), **_STATIC)
+    value: float = dataclasses.field(default=float("nan"), **_STATIC)
+    min_width: int = dataclasses.field(default=0, **_STATIC)
+
+    @property
+    def num_features(self) -> int:
+        return self.inner.num_features
+
+    @property
+    def shape(self) -> tuple:
+        return self.inner.shape
+
+    def phi_mv(self, x: jax.Array, w: jax.Array) -> jax.Array:
+        return _corrupt_columns(
+            self.inner.phi_mv(x, w), self.columns, self.value, self.min_width
+        )
+
+    def phi_t_mv(self, x: jax.Array, u: jax.Array) -> jax.Array:
+        return self.inner.phi_t_mv(x, u)
+
+    def __getattr__(self, name: str):
+        if name.startswith("__") or name in (
+            "inner", "columns", "value", "min_width"
+        ):
+            raise AttributeError(name)
+        return getattr(object.__getattribute__(self, "inner"), name)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DenseOperator(LinearOperator):
+    """A + σ²I for an explicit dense A — exact pathologies on demand.
+
+    CG breakdown: ``DenseOperator(a=jnp.diag(jnp.array([1., -1.])))`` with
+    b = [1, 1] hits pᵀAp = 0 on the very first iteration."""
+
+    a: jax.Array  # (n, n) the raw matrix (need not be PSD — that's the point)
+    sigma2: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.asarray(0.0)
+    )
+
+    @property
+    def shape(self) -> tuple:
+        return self.a.shape
+
+    @property
+    def noise(self) -> jax.Array:
+        return self.sigma2
+
+    def mv(self, v: jax.Array) -> jax.Array:
+        return self.a @ v + self.sigma2 * v
+
+    def diag_part(self) -> jax.Array:
+        return jnp.diag(self.a) + self.sigma2
+
+    def dense(self) -> jax.Array:
+        return self.a + self.sigma2 * jnp.eye(self.a.shape[0], dtype=self.a.dtype)
+
+
+def near_singular_problem(
+    n: int = 96,
+    s: int = 3,
+    *,
+    noise: float = 1e-8,
+    seed: int = 0,
+    d: int = 2,
+):
+    """The standard ill-conditioned setup: a Gram over inputs with duplicated
+    rows and vanishing noise — fp32 CG stagnates well above any honest
+    tolerance (flags ``FLAG_STAGNATION`` with ``stall_window`` ≈ 30).
+
+    Returns ``(op, b, params, x)``."""
+    key = jax.random.PRNGKey(seed)
+    kx, kb = jax.random.split(key)
+    half = jax.random.uniform(kx, (n // 2, d))
+    x = jnp.concatenate([half, half], axis=0)[:n]  # duplicated rows
+    params = make_params(kind="se", lengthscale=0.5, signal=1.0, noise=noise)
+    op = Gram(x=x, params=params)
+    b = jax.random.normal(kb, (n, s))
+    return op, b, params, x
+
+
+def nan_columns(b: jax.Array, columns: Tuple[int, ...]) -> jax.Array:
+    """Return ``b`` with the chosen columns replaced by NaN."""
+    b = jnp.asarray(b)
+    for c in columns:
+        b = b.at[:, c].set(jnp.nan)
+    return b

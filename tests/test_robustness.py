@@ -1,0 +1,442 @@
+"""Deterministic chaos suite: solver guardrails, the escalation ladder, and
+the serving engine's fault tolerance (docs/robustness.md).
+
+Layered like the machinery itself:
+
+* solver layer — every family detects per-column trouble *inside* its loop
+  (non-finite, CG breakdown, stagnation), freezes the bad columns, and leaves
+  healthy columns bit-identical to a fault-free run (the isolation contract);
+* ladder layer — ``solve_robust`` recovers what is recoverable (jitter /
+  precondition / family switch / dense fallback) and reports what is not as a
+  structured failure, never a silent NaN;
+* scheduler layer — deadline expiry and the max-skips starvation guard;
+* engine layer — poisoned requests are rescued solo or failed structurally,
+  repeat offenders are quarantined, overload sheds or degrades, raising
+  batches retry then fail structurally — and requests that shared a batch
+  with a poisoned one are served exactly as if the fault never happened.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    CG,
+    EscalationPolicy,
+    FLAG_BREAKDOWN,
+    FLAG_NONFINITE,
+    FLAG_STAGNATION,
+    FROZEN_FLAGS,
+    Gram,
+    IterativeGP,
+    SGD,
+    flag_names,
+    make_params,
+    solve,
+    solve_robust,
+)
+from repro.serve import EngineOverloaded, FIFOScheduler, GPEngine, Request
+from repro.testing import (
+    DenseOperator,
+    FaultyFeatureOperator,
+    FaultyOperator,
+    nan_columns,
+    near_singular_problem,
+)
+
+SPECS = {
+    "cg": dict(spec="cg", max_iters=40, tol=1e-5),
+    "sgd": dict(spec="sgd", num_steps=200, batch_size=32),
+    "sdd": dict(spec="sdd", num_steps=200, batch_size=32, step_size_times_n=1.0),
+    "ap": dict(spec="ap", num_steps=100, block_size=32),
+}
+
+
+@pytest.fixture(scope="module")
+def well_posed():
+    key = jax.random.PRNGKey(3)
+    kx, kb = jax.random.split(key)
+    x = jax.random.uniform(kx, (80, 2))
+    params = make_params("se", lengthscale=0.7, signal=1.0, noise=0.3)
+    op = Gram(x=x, params=params)
+    b = jax.random.normal(kb, (80, 3))
+    return op, b
+
+
+def _flags(res):
+    return np.atleast_1d(np.asarray(jax.device_get(res.flags))).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# solver layer: in-loop detection + isolation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", sorted(SPECS))
+def test_nan_rhs_flags_only_its_column(well_posed, family):
+    """A NaN RHS column is flagged non-finite and frozen; the other columns'
+    solutions are bit-identical to a fault-free solve (same key)."""
+    op, b = well_posed
+    kw = dict(SPECS[family])
+    spec = kw.pop("spec")
+    key = jax.random.PRNGKey(11)
+    clean = solve(op, b, spec, key=key, **kw)
+    dirty = solve(op, nan_columns(b, (1,)), spec, key=key, **kw)
+    fl = _flags(dirty)
+    assert fl[1] & FLAG_NONFINITE
+    assert not (fl[0] | fl[2]) & FLAG_NONFINITE
+    assert not bool(dirty.healthy)
+    assert bool(clean.healthy)
+    np.testing.assert_array_equal(
+        np.asarray(dirty.solution[:, 0]), np.asarray(clean.solution[:, 0])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(dirty.solution[:, 2]), np.asarray(clean.solution[:, 2])
+    )
+    # the poisoned column never reads converged
+    assert not bool(dirty.converged)
+
+
+def test_cg_breakdown_flag():
+    """pᵀAp ≤ 0 on an indefinite operator raises FLAG_BREAKDOWN in-loop."""
+    op = DenseOperator(a=jnp.diag(jnp.array([1.0, -1.0])))
+    res = solve(op, jnp.ones((2, 1)), "cg", max_iters=10, tol=1e-6)
+    assert _flags(res)[0] & FLAG_BREAKDOWN
+    assert not bool(res.converged)
+
+
+def test_cg_stagnation_flag_and_no_silent_nan():
+    """fp32 CG on a near-singular Gram stalls → advisory FLAG_STAGNATION;
+    and no family ever returns an unflagged non-finite column."""
+    op, b, _, _ = near_singular_problem(96, 3)
+    res = solve(op, b, "cg", max_iters=400, tol=1e-6, stall_window=30)
+    fl = _flags(res)
+    assert (fl & FLAG_STAGNATION).all()
+    # stagnation is advisory: nothing frozen, result stays finite
+    assert bool(res.healthy)
+    for family, kw in SPECS.items():
+        kw = dict(kw)
+        spec = kw.pop("spec")
+        r = solve(op, b, spec, key=jax.random.PRNGKey(0), **kw)
+        sol = np.asarray(jax.device_get(r.solution))
+        bad_cols = ~np.isfinite(sol).all(axis=0)
+        flagged = (_flags(r) & FROZEN_FLAGS) != 0
+        assert (~bad_cols | flagged).all(), (
+            f"{family}: non-finite column without a freezing flag"
+        )
+
+
+def test_faulty_operator_isolation(well_posed):
+    """A transient matvec fault in one column flags that column only, and the
+    fault vanishes below min_width (the solo re-run escape hatch)."""
+    op, b = well_posed
+    fop = FaultyOperator(op, columns=(1,), min_width=2)
+    clean = solve(op, b, "cg", max_iters=40, tol=1e-5)
+    dirty = solve(fop, b, "cg", max_iters=40, tol=1e-5)
+    fl = _flags(dirty)
+    assert fl[1] & FLAG_NONFINITE and not fl[0] and not fl[2]
+    np.testing.assert_array_equal(
+        np.asarray(dirty.solution[:, 0]), np.asarray(clean.solution[:, 0])
+    )
+    solo = solve(fop, b[:, :1], "cg", max_iters=40, tol=1e-5)
+    assert bool(solo.healthy)
+
+
+def test_facade_warns_with_flag_names():
+    gp = IterativeGP("se", noise=0.1, spec="cg")
+    y = jnp.zeros((16,)).at[3].set(jnp.nan)
+    gp.fit(jax.random.uniform(jax.random.PRNGKey(0), (16, 1)), y)
+    with pytest.warns(RuntimeWarning, match="nonfinite"):
+        gp.posterior(num_samples=4, num_features=64)
+
+
+# ---------------------------------------------------------------------------
+# ladder layer: solve_robust
+# ---------------------------------------------------------------------------
+
+
+def test_ladder_happy_path_is_free(well_posed):
+    """No flags → no rungs, and matvec spend identical to plain solve."""
+    op, b = well_posed
+    plain = solve(op, b, "cg", max_iters=40, tol=1e-5)
+    rep = solve_robust(op, b, "cg", max_iters=40, tol=1e-5)
+    assert not rep.escalated and rep.rungs == () and rep.recovered
+    assert int(rep.result.matvecs) == int(plain.matvecs)
+    np.testing.assert_array_equal(
+        np.asarray(rep.result.solution), np.asarray(plain.solution)
+    )
+
+
+def test_ladder_recovers_stagnation():
+    op, b, _, _ = near_singular_problem(96, 3)
+    rep = solve_robust(
+        op, b, "cg", max_iters=200, tol=1e-6, stall_window=30,
+        policy=EscalationPolicy(),
+    )
+    assert rep.escalated and rep.recovered and rep.failed_columns == ()
+    assert rep.ladder  # at least one rung taken
+    assert (_flags(rep.result) == 0).all()
+    assert np.isfinite(np.asarray(rep.result.solution)).all()
+
+
+def test_ladder_structured_failure_on_nan_rhs(well_posed):
+    """A NaN RHS is unrescuable: every rung declines, the report says which
+    columns failed, and the healthy columns keep their base payload."""
+    op, b = well_posed
+    base = solve(op, b, "cg", max_iters=40, tol=1e-5)
+    rep = solve_robust(op, nan_columns(b, (2,)), "cg", max_iters=40, tol=1e-5)
+    assert rep.escalated and not rep.recovered
+    assert rep.failed_columns == (2,)
+    assert _flags(rep.result)[2] & FLAG_NONFINITE
+    np.testing.assert_array_equal(
+        np.asarray(rep.result.solution[:, 0]), np.asarray(base.solution[:, 0])
+    )
+
+
+def test_ladder_switches_stochastic_family_to_cg(well_posed):
+    """A flagged SGD solve walks jitter rungs then the switch:cg rung."""
+    op, b = well_posed
+    rep = solve_robust(
+        op, nan_columns(b, (0,)), SGD(num_steps=40, batch_size=32),
+        key=jax.random.PRNGKey(0),
+        policy=EscalationPolicy(dense_fallback_max_n=0),
+    )
+    assert "switch:cg" in rep.ladder
+    assert rep.failed_columns == (0,)  # NaN b defeats every rung — structured
+
+
+def test_ladder_indefinite_unrescuable_is_structured():
+    """Genuinely indefinite A (zero trace): no PSD jitter exists, the dense
+    factorisation never holds — a structured failure, not an exception."""
+    op = DenseOperator(a=jnp.diag(jnp.array([1.0, -1.0])))
+    rep = solve_robust(op, jnp.ones((2, 1)), "cg", max_iters=10, tol=1e-6)
+    assert rep.escalated and not rep.recovered
+    assert rep.failed_columns == (0,)
+    for r in rep.rungs:
+        assert r.recovered == ()
+
+
+def test_rung_records_are_auditable():
+    op, b, _, _ = near_singular_problem(64, 2)
+    rep = solve_robust(
+        op, b, "cg", max_iters=100, tol=1e-6, stall_window=25,
+    )
+    assert rep.escalated
+    for rec in rep.rungs:
+        assert rec.columns  # every rung says what it attempted
+        assert len(rec.flags_before) == len(rec.columns)
+        assert all(
+            isinstance(names, tuple) for names in rec.flag_names_before
+        )
+    # the matvec bill includes the rungs
+    assert int(rep.result.matvecs) > 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler layer: starvation guard + deadline expiry
+# ---------------------------------------------------------------------------
+
+
+def _req(i, kind, *, t=0.0, num=2, deadline=None):
+    xs = jnp.zeros((4, 2)) if kind != "thompson_step" else None
+    return Request(
+        id=i, kind=kind, xs=xs, num_samples=num, seed=i, arrival=t,
+        deadline=deadline,
+    )
+
+
+def test_scheduler_starvation_guard_promotes_skipped_request():
+    """An over-skipped request is promoted to *be* the head — its group fixes
+    the batch even when the true head belongs to a different group."""
+    sched = FIFOScheduler(max_batch_requests=4, max_rhs_columns=8, max_skips=2)
+    sched.add(_req(0, "predict"))
+    starved = _req(1, "sample")
+    starved.skips = 2  # at the threshold (pure FIFO keeps skips monotone
+    # along the queue, so this state needs an external policy — the guard is
+    # the invariant that bounds deferral under ANY such policy)
+    sched.add(starved)
+    plan = sched.next_batch()
+    assert plan.group == "solve_cold"
+    assert [r.id for r in plan.requests] == [1]
+    # the passed-over predict kept its position and heads the next batch
+    plan2 = sched.next_batch()
+    assert plan2.group == "predict" and [r.id for r in plan2.requests] == [0]
+
+
+def test_scheduler_fifo_wait_is_bounded():
+    """Under pure FIFO evolution no request waits more than the queue length
+    ahead of it: a skipped request's position advances every batch because the
+    head is always consumed."""
+    sched = FIFOScheduler(max_batch_requests=1, max_skips=16)
+    sched.add(_req(0, "predict"))
+    sched.add(_req(1, "sample"))
+    sched.add(_req(2, "predict"))
+    groups = [sched.next_batch().group for _ in range(3)]
+    assert groups == ["predict", "solve_cold", "predict"]
+    assert len(sched) == 0
+
+
+def test_scheduler_expire_removes_past_deadline():
+    sched = FIFOScheduler()
+    sched.add(_req(0, "predict", deadline=1.0))
+    sched.add(_req(1, "predict", deadline=5.0))
+    sched.add(_req(2, "predict"))  # no deadline: never expires
+    gone = sched.expire(now=2.0)
+    assert [r.id for r in gone] == [0]
+    assert len(sched) == 2
+    assert sched.expire(now=2.0) == []
+
+
+# ---------------------------------------------------------------------------
+# engine layer: isolation, rescue, quarantine, shedding, retry
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def engine_problem():
+    key = jax.random.PRNGKey(5)
+    x = jax.random.uniform(key, (64, 2))
+    y = jnp.sin(3.0 * x[:, 0]) + 0.1 * jax.random.normal(key, (64,))
+    params = make_params("se", lengthscale=0.5, signal=1.0, noise=1e-2)
+    return params, x, y
+
+
+def _mk_engine(engine_problem, **kw):
+    params, x, y = engine_problem
+    kw.setdefault("spec", CG(max_iters=80, tol=1e-5))
+    kw.setdefault("num_features", 256)
+    kw.setdefault("num_samples", 8)
+    return GPEngine(params, x, y, **kw)
+
+
+def test_engine_rescues_transient_fault_and_isolates(engine_problem):
+    """Batch column 3 is poisoned by a width-gated matvec fault (it vanishes
+    on solo re-runs). The affected request is rescued through the ladder; the
+    *other* request's payload is bit-identical to a fault-free engine."""
+    faulty = _mk_engine(
+        engine_problem,
+        operator_transform=lambda op: FaultyOperator(
+            op, columns=(3,), min_width=5
+        ),
+    )
+    clean = _mk_engine(engine_problem)
+    hs_f = [faulty.sample(faulty.state.x[:6], num_samples=2, seed=s) for s in (1, 2)]
+    hs_c = [clean.sample(clean.state.x[:6], num_samples=2, seed=s) for s in (1, 2)]
+    faulty.run_until_idle()
+    clean.run_until_idle()
+    for h in hs_f:
+        assert h.result().ok
+    np.testing.assert_array_equal(  # bystander request: exact parity
+        np.asarray(hs_f[0].result().value["samples"]),
+        np.asarray(hs_c[0].result().value["samples"]),
+    )
+    assert np.isfinite(np.asarray(hs_f[1].result().value["samples"])).all()
+    st = faulty.stats()
+    assert st["escalations"] == 1 and st["failed"] == 0
+
+
+def test_engine_fails_structurally_without_escalation(engine_problem):
+    eng = _mk_engine(
+        engine_problem,
+        escalation=None,
+        operator_transform=lambda op: FaultyOperator(op, columns=(0,)),
+    )
+    h = eng.sample(eng.state.x[:4], num_samples=2, seed=1)
+    eng.run_until_idle()
+    res = h.result()
+    assert not res.ok and res.error["code"] == "solver_failure"
+    assert "nonfinite" in res.error["message"]
+    assert eng.stats()["escalations"] == 0
+
+
+def test_engine_quarantines_repeat_offender(engine_problem):
+    """A persistently poisoned RHS (faulty feature map) fails its rescue every
+    time; after quarantine_after strikes the (kind, seed) identity is refused
+    at submit, without touching another batch."""
+    import dataclasses
+
+    eng = _mk_engine(engine_problem, quarantine_after=2)
+    eng.state.post = dataclasses.replace(
+        eng.state.post, prior=FaultyFeatureOperator(eng.state.prior, columns=(0,))
+    )
+    for _ in range(2):
+        h = eng.sample(eng.state.x[:4], num_samples=2, seed=77)
+        eng.run_until_idle()
+        res = h.result()
+        assert not res.ok and res.error["code"] == "solver_failure"
+        assert res.error["rungs"]  # the ladder was tried and recorded
+    h3 = eng.sample(eng.state.x[:4], num_samples=2, seed=77)
+    res3 = h3.result()  # completed at submit — no step needed
+    assert not res3.ok and res3.error["code"] == "quarantined"
+    st = eng.stats()
+    assert st["quarantined"] == 1 and st["escalations"] == 2
+    assert st["failed"] == 3
+    # a fresh seed still hits the poisoned column 0 of its own batch, but it
+    # is NOT pre-quarantined: isolation is per-identity, not global
+    h4 = eng.sample(eng.state.x[:4], num_samples=2, seed=78)
+    eng.run_until_idle()
+    assert h4.result().error["code"] == "solver_failure"
+
+
+def test_engine_deadline_and_overload(engine_problem):
+    eng = _mk_engine(
+        engine_problem, max_queue_depth=2, overload_policy="degrade"
+    )
+    xs = eng.state.x[:4]
+    h_exp = eng.sample(xs, num_samples=2, deadline_s=-1.0)  # already late
+    eng.predict(xs)
+    hd = eng.sample(xs, num_samples=2)  # depth 2 hit → degraded to predict
+    assert hd.request.kind == "predict"
+    with pytest.raises(EngineOverloaded):
+        eng.thompson_step(num_samples=2)  # not degradable → shed
+    eng.run_until_idle()
+    assert h_exp.result().error["code"] == "deadline_exceeded"
+    assert hd.result().ok and hd.result().metrics["degraded"] is True
+    st = eng.stats()
+    assert st["deadline_misses"] == 1 and st["shed"] == 1 and st["degraded"] == 1
+
+
+def test_engine_reject_policy(engine_problem):
+    eng = _mk_engine(
+        engine_problem, max_queue_depth=1, overload_policy="reject"
+    )
+    eng.predict(eng.state.x[:4])
+    with pytest.raises(EngineOverloaded):
+        eng.predict(eng.state.x[:4])
+    eng.run_until_idle()
+    assert eng.stats()["shed"] == 1
+
+
+def test_engine_retries_then_fails_raising_batch(engine_problem):
+    """A batch whose execution *raises* is retried with backoff, then every
+    rider completes with exec_error — the engine loop survives."""
+    def boom(op):
+        raise RuntimeError("injected dispatch failure")
+
+    eng = _mk_engine(
+        engine_problem, operator_transform=boom,
+        max_exec_retries=1, retry_backoff_s=0.0,
+    )
+    h1 = eng.sample(eng.state.x[:4], num_samples=2, seed=1)
+    h2 = eng.sample(eng.state.x[:4], num_samples=2, seed=2)
+    eng.run_until_idle()
+    for h in (h1, h2):
+        res = h.result()
+        assert not res.ok and res.error["code"] == "exec_error"
+        assert "injected dispatch failure" in res.error["message"]
+    st = eng.stats()
+    assert st["retries"] == 1 and st["failed"] == 2
+    # the engine still serves afterwards (predicts bypass the solve transform)
+    hp = eng.predict(eng.state.x[:4])
+    eng.run_until_idle()
+    assert hp.result().ok
+
+
+def test_flag_names_roundtrip():
+    assert flag_names(0) == ()
+    assert flag_names(FLAG_NONFINITE | FLAG_STAGNATION) == (
+        "nonfinite", "stagnation",
+    )
+    assert "breakdown" in flag_names(FROZEN_FLAGS)
