@@ -29,13 +29,29 @@ still recover, and the measured wall overhead must stay under a loose
 anti-regression bound (the committed <2% number comes from ``bench_robust``
 itself; the CI bound is wider because container timing is noisy).
 
+Two further gates ride on the same smoke run:
+
+* **wall-clock per iteration** — bench_solvers times a 200-step stochastic
+  solve probe and reports ``us_per_iter`` for SGD/SDD per dataset; the gate
+  fails if a fresh probe exceeds the committed number by more than
+  ``--walltime-slack`` (default 1.0 → 2× headroom: container timing is noisy,
+  the gate only catches step-cost blowups like a de-fused pair step or a
+  re-scalarised covariance map, not percent-level drift). ``--skip-walltime``
+  for machines whose timing is incomparable to the committed baseline's.
+* **autotune-table freshness** — the committed ``results/AUTOTUNE_gram.json``
+  (the ``block="auto"`` lookup table, kernels/autotune.py) must cover exactly
+  the shape grid the resolver expects; growing the grid without re-running
+  ``bench_gram_kernel`` (which emits the artifact) fails here instead of
+  silently falling back to the heuristic for the new keys.
+
 Usage:
     PYTHONPATH=src python -m benchmarks.check_matvecs \
         [--baseline results/BENCH_bench_solvers.json] \
         [--mll-baseline results/BENCH_bench_mll.json | --skip-mll] \
         [--serve-baseline results/BENCH_bench_serve.json | --skip-serve] \
         [--robust-baseline results/BENCH_bench_robust.json | --skip-robust] \
-        [--slack 0.15]
+        [--autotune-table results/AUTOTUNE_gram.json | --skip-autotune] \
+        [--slack 0.15] [--walltime-slack 1.0 | --skip-walltime]
 
 ``--slack`` tolerates small cross-platform jitter (fp32 reduction order):
 measured > ceil(baseline · (1 + slack)) fails.
@@ -46,6 +62,8 @@ import argparse
 import json
 import math
 import sys
+
+from repro.kernels import autotune
 
 from . import bench_mll, bench_robust, bench_serve, bench_solvers
 from .common import Report
@@ -123,6 +141,25 @@ def main(argv=None) -> int:
         "--slack", type=float, default=0.15,
         help="fractional headroom over the baseline before failing",
     )
+    ap.add_argument(
+        "--walltime-slack", type=float, default=1.0,
+        help="fractional headroom on the per-iteration wall-clock gate "
+        "(default 1.0 → measured may be up to 2× the committed us_per_iter; "
+        "generous on purpose — the gate catches step-cost blowups, not noise)",
+    )
+    ap.add_argument(
+        "--skip-walltime", action="store_true",
+        help="skip the wall-clock-per-iteration gate (incomparable hardware)",
+    )
+    ap.add_argument(
+        "--autotune-table", default=autotune.DEFAULT_TABLE_PATH,
+        help="committed block-autotune table whose keys must match the "
+        "resolver's expected shape grid",
+    )
+    ap.add_argument(
+        "--skip-autotune", action="store_true",
+        help="skip the autotune-table freshness gate",
+    )
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
@@ -143,6 +180,46 @@ def main(argv=None) -> int:
         print("ERROR: no comparable matvec rows between baseline and smoke run",
               file=sys.stderr)
         return 2
+
+    if not args.skip_walltime:
+        with open(args.baseline) as f:
+            base_walltime = _metric_rows(json.load(f)["rows"], "us_per_iter")
+        if not base_walltime:
+            print(f"ERROR: no us_per_iter rows in {args.baseline} — regenerate "
+                  "it with benchmarks.run --only bench_solvers (or pass "
+                  "--skip-walltime)", file=sys.stderr)
+            return 2
+        c_wt, f_wt = _gate(
+            f"us_per_iter vs {args.baseline}",
+            base_walltime, _metric_rows(report.rows, "us_per_iter"),
+            args.walltime_slack,
+        )
+        if c_wt == 0:
+            print("ERROR: no comparable us_per_iter rows between baseline and "
+                  "smoke run", file=sys.stderr)
+            return 2
+        compared += c_wt
+        failures += f_wt
+
+    if not args.skip_autotune:
+        committed = set(autotune.load_table(args.autotune_table))
+        expected = autotune.expected_keys()
+        missing = sorted(expected - committed)
+        extra = sorted(committed - expected)
+        print(f"\nautotune freshness gate ({args.autotune_table}):")
+        print(f"  expected {len(expected)} keys, committed {len(committed)}  "
+              f"{'ok' if not (missing or extra) else 'STALE'}")
+        compared += 1
+        if missing or extra:
+            for k in missing[:8]:
+                print(f"  missing: {k}", file=sys.stderr)
+            for k in extra[:8]:
+                print(f"  extra:   {k}", file=sys.stderr)
+            print("  the committed table's shape grid drifted from "
+                  "kernels/autotune.py — re-run benchmarks.run --only "
+                  "bench_gram_kernel to regenerate it", file=sys.stderr)
+            failures.append((("autotune", "table", "keys"),
+                             len(expected), len(committed)))
 
     if not args.skip_mll:
         with open(args.mll_baseline) as f:

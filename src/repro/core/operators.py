@@ -26,6 +26,9 @@ optional capabilities (declared by *defining the method*; absence is detected by
     ``rows_mv(idx, u)``    — ``K[idx, :] @ u`` (SGD/SDD data-fit primitive);
     ``rows_t_mv(idx, u)``  — ``K[idx, :]ᵀ @ u`` (SGD regulariser pullback, AP
                              residual update);
+    ``rows_pair_mv(idx, look, b)`` — the fused pair step ``err = K[idx,:] @
+                             look − b``, ``g = K[idx,:]ᵀ @ err`` with the panel
+                             built once (SGD's fit gradient in one dispatch);
     ``block_at(idx)``      — ``K[idx, idx]`` principal block (AP's exact
                              sub-solve);
     ``precond_factor(rank, key=, method=)`` — an ``(n, m)`` low-rank factor L
@@ -63,7 +66,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from ..kernels.ops import gram_mv, gram_rows_matvec
+from ..kernels.ops import gram_mv, gram_rows_matvec, gram_rows_pair
 from .kernels_fn import KernelParams, gram, gram_diag, matvec
 
 if TYPE_CHECKING:  # runtime imports would cycle: kronecker → solvers.spec → here,
@@ -77,7 +80,12 @@ if TYPE_CHECKING:  # runtime imports would cycle: kronecker → solvers.spec →
 # ---------------------------------------------------------------------------
 
 #: Capabilities beyond the required ``mv``/``shape``/``diag_part``/``noise``.
-OPTIONAL_CAPABILITIES = ("rows_mv", "rows_t_mv", "block_at", "precond_factor")
+#: ``rows_pair_mv`` is the fused err/gradient pair step (one panel build for
+#: both contractions); SGD uses it when present and composes ``rows_mv``/
+#: ``rows_t_mv`` otherwise, so operators without it still run every spec.
+OPTIONAL_CAPABILITIES = (
+    "rows_mv", "rows_t_mv", "rows_pair_mv", "block_at", "precond_factor"
+)
 
 #: FeatureOperator capabilities beyond the required ``phi_mv``/``phi_t_mv``/
 #: ``num_features``/``shape``: ``features`` materialises Φ(x) (reference path,
@@ -203,6 +211,13 @@ class FeatureOperator:
     def phi_t_mv(self, x: jax.Array, u: jax.Array) -> jax.Array:
         raise NotImplementedError(f"{type(self).__name__} must define phi_t_mv")
 
+    def phi_pair_mv(self, x: jax.Array, u: jax.Array) -> jax.Array:
+        """Φ(x) (Φ(x)ᵀ u) — the SGD regulariser composition (Eq. 3.3) as one
+        primitive. Default: the two contractions in sequence; fused
+        implementations override with a single dispatch whose (F, s)
+        intermediate never leaves VMEM (``FourierFeatures``)."""
+        return self.phi_mv(x, self.phi_t_mv(x, u))
+
 
 # ---------------------------------------------------------------------------
 # Runtime (post-compilation) matvec counters, bumped via jax.debug.callback from
@@ -258,15 +273,20 @@ class Gram(_InstrumentedOp):
     ``backend`` selects the matvec implementation (see kernels/ops.py):
     ``"auto"`` (fused Pallas on TPU, chunked JAX elsewhere), ``"pallas"``,
     ``"chunked"``, or ``"dense"``. Solver specs can pin it per solve
-    (``CG(backend="pallas")``). ``instrument=True`` counts executed matvecs via
-    ``matvec_counts()`` (tests/benchmarks; adds a host callback per matvec).
+    (``CG(backend="pallas")``), and likewise ``precision`` — ``"fp32"``
+    (default) or ``"bf16"`` tile contractions with fp32 accumulation (see
+    kernels/ops.py PRECISIONS). ``block`` is the Pallas tile size; the
+    ``"auto"`` default resolves per shape at trace time (kernels/autotune.py).
+    ``instrument=True`` counts executed matvecs via ``matvec_counts()``
+    (tests/benchmarks; adds a host callback per matvec).
     """
 
     x: jax.Array  # (n, d) training inputs
     params: KernelParams
     row_chunk: int = dataclasses.field(default=2048, metadata=dict(static=True))
     backend: str = dataclasses.field(default="auto", metadata=dict(static=True))
-    block: int = dataclasses.field(default=256, metadata=dict(static=True))
+    block: "int | str" = dataclasses.field(default="auto", metadata=dict(static=True))
+    precision: str = dataclasses.field(default="fp32", metadata=dict(static=True))
     instrument: bool = dataclasses.field(default=False, metadata=dict(static=True))
 
     @property
@@ -285,7 +305,7 @@ class Gram(_InstrumentedOp):
         """(K + σ²I) @ v without materialising K. v: (n,) or (n,s)."""
         out = gram_mv(
             self.params, self.x, v, jitter=self.noise, backend=self.backend,
-            block=self.block, row_chunk=self.row_chunk,
+            block=self.block, row_chunk=self.row_chunk, precision=self.precision,
         )
         self._count(_bump_mv, out)
         return out
@@ -294,7 +314,7 @@ class Gram(_InstrumentedOp):
         """K @ v (no jitter)."""
         out = gram_mv(
             self.params, self.x, v, backend=self.backend, block=self.block,
-            row_chunk=self.row_chunk,
+            row_chunk=self.row_chunk, precision=self.precision,
         )
         self._count(_bump_mv, out)
         return out
@@ -311,7 +331,7 @@ class Gram(_InstrumentedOp):
         """
         out = gram_rows_matvec(
             self.params, self.x, idx, u, backend=self.backend, block=self.block,
-            row_chunk=self.row_chunk,
+            row_chunk=self.row_chunk, precision=self.precision,
         )
         self._count(_bump_rows, out)
         return out
@@ -321,10 +341,28 @@ class Gram(_InstrumentedOp):
         u: (|idx|,) or (|idx|, s) → (n, s-like)."""
         out = gram_rows_matvec(
             self.params, self.x, idx, u, transpose=True, backend=self.backend,
-            block=self.block, row_chunk=self.row_chunk,
+            block=self.block, row_chunk=self.row_chunk, precision=self.precision,
         )
         self._count(_bump_rows, out)
         return out
+
+    def rows_pair_mv(self, idx: jax.Array, look: jax.Array, b: jax.Array) -> tuple:
+        """The fused pair step: ``err = K[idx,:] @ look − b`` and
+        ``g = K[idx,:]ᵀ @ err`` with the kernel panel built ONCE.
+
+        SGD's fit gradient in a single dispatch — the unfused ``rows_mv`` +
+        ``rows_t_mv`` composition rebuilds the same |idx|×n panel twice per
+        step. Counts as two row-block matvecs (the work it replaces), keeping
+        ``matvec_counts()`` comparable across the fused and unfused paths.
+        look: (n, s); b: (|idx|, s) → ((|idx|, s), (n, s)).
+        """
+        err, g = gram_rows_pair(
+            self.params, self.x, idx, look, b, backend=self.backend,
+            block=self.block, precision=self.precision,
+        )
+        self._count(_bump_rows, err)
+        self._count(_bump_rows, g)
+        return err, g
 
     def block_at(self, idx: jax.Array) -> jax.Array:
         """K[idx, idx] — the |idx|×|idx| principal block (AP's exact sub-solve)."""
@@ -371,9 +409,11 @@ class RFFGram(_InstrumentedOp):
     x: jax.Array  # (n, d) training inputs
     ff: "FourierFeatures"  # the feature map (a FeatureOperator)
     sigma2: jax.Array  # () noise variance σ²
-    # feature-matvec backend override; None inherits ff.backend. A spec's
-    # ``backend`` field pins it through solve(), like Gram/ShardedGram.
+    # feature-matvec backend/precision overrides; None inherits the ff's own.
+    # A spec's ``backend``/``precision`` fields pin them through solve(), like
+    # Gram/ShardedGram.
     backend: Optional[str] = dataclasses.field(default=None, metadata=dict(static=True))
+    precision: Optional[str] = dataclasses.field(default=None, metadata=dict(static=True))
     instrument: bool = dataclasses.field(default=False, metadata=dict(static=True))
 
     @property
@@ -390,9 +430,10 @@ class RFFGram(_InstrumentedOp):
 
     def mv(self, v: jax.Array) -> jax.Array:
         """(ΦΦᵀ + σ²I) @ v = Φ(Φᵀv) + σ²v — two fused feature matvecs."""
-        bk = self.backend
+        bk, pr = self.backend, self.precision
         out = self.ff.phi_mv(
-            self.x, self.ff.phi_t_mv(self.x, v, backend=bk), backend=bk
+            self.x, self.ff.phi_t_mv(self.x, v, backend=bk, precision=pr),
+            backend=bk, precision=pr,
         ) + self.sigma2 * v
         self._count(_bump_mv, out)
         return out
@@ -586,7 +627,8 @@ class ShardedGram(_InstrumentedOp):
     data_axes: tuple = dataclasses.field(default=("data",), metadata=dict(static=True))
     row_chunk: int = dataclasses.field(default=2048, metadata=dict(static=True))
     backend: str = dataclasses.field(default="auto", metadata=dict(static=True))
-    block: int = dataclasses.field(default=256, metadata=dict(static=True))
+    block: "int | str" = dataclasses.field(default="auto", metadata=dict(static=True))
+    precision: str = dataclasses.field(default="fp32", metadata=dict(static=True))
     instrument: bool = dataclasses.field(default=False, metadata=dict(static=True))
     # replicated input panel, populated by prepare_for_solve() when gather_once
     x_full: Optional[jax.Array] = None
@@ -608,7 +650,7 @@ class ShardedGram(_InstrumentedOp):
         """K(x_local, x_other) @ v through the backend dispatch (no jitter)."""
         return gram_mv(
             self.params, x_local, v, z=x_other, backend=self.backend,
-            block=self.block, row_chunk=self.row_chunk,
+            block=self.block, row_chunk=self.row_chunk, precision=self.precision,
         )
 
     def prepare_for_solve(self) -> "ShardedGram":
@@ -721,6 +763,14 @@ class ShardedGram(_InstrumentedOp):
             )(self.x, idx, u2)
         self._count(_bump_rows, out)
         return out[:, 0] if squeeze else out
+
+    def rows_pair_mv(self, idx: jax.Array, look: jax.Array, b: jax.Array):
+        """err = K[idx,:] @ look − b, then g = K[idx,:]ᵀ @ err — composed from
+        the sharded row primitives. No VMEM fusion applies across the mesh
+        collectives, but exposing the capability keeps the operator drop-in for
+        the fused SGD step; the counters still record two row-block matvecs."""
+        err = self.rows_mv(idx, look) - b
+        return err, self.rows_t_mv(idx, err)
 
     def block_at(self, idx: jax.Array) -> jax.Array:
         """K[idx, idx] — gathered from the global (sharded) inputs; the |idx|×d

@@ -41,6 +41,11 @@ class FourierFeatures(FeatureOperator):
     (always materialise — reference path, any variant). The fused kernels only
     implement the paired sin/cos map; ``auto`` falls back to features for the
     cos-only variant, explicit ``pallas`` raises.
+
+    ``precision`` selects the tile precision of the feature contractions —
+    ``"fp32"`` (default) or ``"bf16"`` MXU operands with fp32 accumulation
+    (kernels/ops.py PRECISIONS); solver specs pin it per solve like
+    ``backend``. The sin/cos map itself always evaluates in fp32.
     """
 
     omega: jax.Array  # (m, d) frequencies
@@ -48,6 +53,7 @@ class FourierFeatures(FeatureOperator):
     signal: jax.Array  # σ_f² signal variance
     paired: bool = dataclasses.field(default=True, metadata=dict(static=True))
     backend: str = dataclasses.field(default="auto", metadata=dict(static=True))
+    precision: str = dataclasses.field(default="fp32", metadata=dict(static=True))
 
     @property
     def num_features(self) -> int:
@@ -75,8 +81,8 @@ class FourierFeatures(FeatureOperator):
         scale = jnp.sqrt(2.0 * self.signal / m)
         return scale * jnp.cos(proj + self.phase[None, :])
 
-    def phi_mv(self, x: jax.Array, w: jax.Array, *, backend: Optional[str] = None
-               ) -> jax.Array:
+    def phi_mv(self, x: jax.Array, w: jax.Array, *, backend: Optional[str] = None,
+               precision: Optional[str] = None) -> jax.Array:
         """Φ(x) @ w: (n, s-like). Differentiable on every backend."""
         from ..kernels.ops import FEATURE_TRACE_COUNTS, rff_mv  # deferred: pallas
 
@@ -85,10 +91,11 @@ class FourierFeatures(FeatureOperator):
             FEATURE_TRACE_COUNTS["features"] += 1  # materialises Φ below
             return self.features(x) @ w
         return rff_mv(x, self.omega, w, signal=self.signal,
-                      backend=self._resolve(backend))
+                      backend=self._resolve(backend),
+                      precision=precision or self.precision)
 
-    def phi_t_mv(self, x: jax.Array, u: jax.Array, *, backend: Optional[str] = None
-                 ) -> jax.Array:
+    def phi_t_mv(self, x: jax.Array, u: jax.Array, *, backend: Optional[str] = None,
+                 precision: Optional[str] = None) -> jax.Array:
         """Φ(x)ᵀ @ u: (num_features, s-like) — the SGD regulariser pullback."""
         from ..kernels.ops import FEATURE_TRACE_COUNTS, rff_t_mv  # deferred: pallas
 
@@ -97,7 +104,26 @@ class FourierFeatures(FeatureOperator):
             FEATURE_TRACE_COUNTS["features"] += 1  # materialises Φ below
             return self.features(x).T @ u
         return rff_t_mv(x, self.omega, u, signal=self.signal,
-                        backend=self._resolve(backend))
+                        backend=self._resolve(backend),
+                        precision=precision or self.precision)
+
+    def phi_pair_mv(self, x: jax.Array, u: jax.Array, *,
+                    backend: Optional[str] = None,
+                    precision: Optional[str] = None) -> jax.Array:
+        """Φ(x) (Φ(x)ᵀ u): (n, s-like) — the SGD regulariser composition in ONE
+        dispatch. On the ``features`` backend Φ(x) materialises once and serves
+        both contractions; on ``pallas`` the two-phase ``rff_pair`` kernel keeps
+        the (2m, s) intermediate in VMEM for its whole lifetime."""
+        from ..kernels.ops import FEATURE_TRACE_COUNTS, rff_pair_mv  # deferred
+
+        if not self.paired:
+            self._resolve(backend)
+            FEATURE_TRACE_COUNTS["features"] += 2  # materialises Φ below, used twice
+            feats = self.features(x)
+            return feats @ (feats.T @ u)
+        return rff_pair_mv(x, self.omega, u, signal=self.signal,
+                           backend=self._resolve(backend),
+                           precision=precision or self.precision)
 
 
 def make_fourier_features(
@@ -147,6 +173,9 @@ class PriorSamples(FeatureOperator):
 
     def phi_t_mv(self, x: jax.Array, u: jax.Array) -> jax.Array:
         return self.ff.phi_t_mv(x, u, backend=self.backend)
+
+    def phi_pair_mv(self, x: jax.Array, u: jax.Array) -> jax.Array:
+        return self.ff.phi_pair_mv(x, u, backend=self.backend)
 
     def __call__(self, x: jax.Array) -> jax.Array:
         return self.phi_mv(x, self.w)  # (n, s)

@@ -6,8 +6,11 @@ exactly, and updates the *maintained residual* incrementally:
 
     Δ = (K_II + σ² I_p)⁻¹ r_I ;   α_I += Δ ;   r −= (K_:I + σ² E_I) Δ
 
-O(n·p + p³) per step, one kernel row-block gather — the third solver family the
-Ch. 5 improvements (warm start, pathwise estimator) are demonstrated on.
+O(n·p + p³) per step, one kernel row-block gather (``rows_t_mv`` for the
+residual update plus the exact ``block_at`` sub-solve — like SDD there is no
+forward/transpose pair over one panel, so the SGD-style ``rows_pair_mv`` fusion
+does not apply) — the third solver family the Ch. 5 improvements (warm start,
+pathwise estimator) are demonstrated on.
 """
 from __future__ import annotations
 

@@ -11,8 +11,12 @@ proportional to ‖α − α*‖, so noise vanishes as the iterate converges (§
 the "Rao-Blackwellisation trap" — the *whole* gradient is subsampled, including the
 σ²α − b part). Nesterov momentum + *geometric* iterate averaging (§4.2.3).
 
-One kernel-row gather per step (vs two matvec-shaped terms for primal SGD) ⇒ ~30%
-faster per step than Ch. 3 SGD at equal batch size.
+One kernel-row gather per step (``rows_mv`` only — the dual gradient needs no
+transposed contraction, so there is nothing for the ``rows_pair_mv`` fusion SGD
+uses to pair it with) ⇒ faster per step than Ch. 3 SGD at equal batch size.
+Each step's panel is built tile-by-tile (Pallas) or in staged row chunks with a
+vectorised covariance map (CPU — see kernels_fn._stationary_apply), and the
+spec's ``precision`` field drops the panel contraction to bf16 tiles on request.
 """
 from __future__ import annotations
 

@@ -15,13 +15,17 @@ term + fresh random Fourier features each step for the regulariser:
 
     ĝ(v) = (n/p) Σ_{i∈I} k_i (k_iᵀ v − b_i)  +  σ² Φ (Φᵀ (v − δ))
 
-The regulariser runs through the :class:`~repro.core.operators.FeatureOperator`
-protocol — one ``phi_t_mv`` (Φᵀ(v − δ)) and one ``phi_mv`` per step, dispatched
-through the same backend as the operator's Gram matvecs — so on the Pallas
-backend Eq. 3.3 runs fused end to end and the (n × 2q) feature matrix is never
-materialised (fresh features every step made this the dominant non-row cost).
-Because the features are a pytree with step-independent shapes, the fused path
-stages once for the whole scan.
+Both terms run as *pair* primitives — one dispatch each per step instead of two.
+The data-fit term uses the operator's ``rows_pair_mv`` capability when present
+(``err = K[idx,:] @ look − b``, ``g = K[idx,:]ᵀ @ err`` off a single panel
+build; see kernels/ops.gram_rows_pair), falling back to the ``rows_mv`` +
+``rows_t_mv`` composition on operators without it (``ShardedGram``). The
+regulariser runs through ``phi_pair_mv`` — Φ(Φᵀ(v − δ)) as ONE fused kernel
+whose (2q, s) intermediate never leaves VMEM on the Pallas backend, and one
+materialise-once contraction pair elsewhere — dispatched through the same
+backend/precision as the operator's Gram matvecs (fresh features every step
+made this the dominant non-row cost). Because the features are a pytree with
+step-independent shapes, the fused path stages once for the whole scan.
 
 Uses Nesterov momentum + arithmetic tail (Polyak) averaging, per §3.3.
 """
@@ -35,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels_fn import spectral_sample
+from ..operators import supports
 from ..rff import FourierFeatures
 from .base import (
     FLAG_NONFINITE,
@@ -85,6 +90,8 @@ def solve_sgd(
         feat_backend = "features"
     else:
         feat_backend = getattr(op, "backend", "auto") or "auto"
+    feat_precision = getattr(op, "precision", "fp32") or "fp32"
+    fused_pair = supports(op, "rows_pair_mv")
 
     def step(carry, t):
         v, mom, avg, cnt, fl = carry
@@ -92,19 +99,25 @@ def solve_sgd(
         ki, kf = jax.random.split(kb)
         idx = jax.random.randint(ki, (batch_size,), 0, n)
         look = v + momentum * mom  # Nesterov lookahead
-        # fused row-block matvecs: the (p, n) panel K[idx, :] is never
-        # materialised — one forward and one transposed contraction per step
-        err = op.rows_mv(idx, look) - b2[idx]  # (p, s)
-        g_fit = (n / batch_size) * op.rows_t_mv(idx, err)
-        # fresh unbiased feature draw (ΦΦᵀ ≈ K): one transposed and one forward
-        # fused feature matvec — Φ (n, 2q) never materialised on pallas
+        # data-fit pair step: the (p, n) panel K[idx, :] is never materialised,
+        # and with rows_pair_mv it is built ONCE for both contractions
+        if fused_pair:
+            _, g_raw = op.rows_pair_mv(idx, look, b2[idx])
+        else:
+            err = op.rows_mv(idx, look) - b2[idx]  # (p, s)
+            g_raw = op.rows_t_mv(idx, err)
+        g_fit = (n / batch_size) * g_raw
+        # fresh unbiased feature draw (ΦΦᵀ ≈ K): ONE fused pair feature matvec
+        # (phi_pair_mv) — Φ (n, 2q) never materialised on pallas, and the
+        # (2q, s) intermediate t = Φᵀ(look − δ) never leaves VMEM
         ff = FourierFeatures(
             omega=spectral_sample(op.params, kf, num_features, d),
             phase=jnp.zeros((num_features,)),
             signal=op.params.signal,
             backend=feat_backend,
+            precision=feat_precision,
         )
-        g_reg = sigma2 * ff.phi_mv(op.x, ff.phi_t_mv(op.x, look - delta2))
+        g_reg = sigma2 * ff.phi_pair_mv(op.x, look - delta2)
         g = g_fit + g_reg
         gn = jnp.linalg.norm(g, axis=0, keepdims=True)
         # in-loop health check on an (s,)-sized reduction already computed for

@@ -42,7 +42,7 @@ import jax
 
 import jax.numpy as jnp
 
-from ...kernels.ops import BACKENDS, FEATURE_BACKENDS
+from ...kernels.ops import BACKENDS, FEATURE_BACKENDS, PRECISIONS
 from ..operators import require_capabilities
 from ..precond import jacobi_preconditioner, woodbury_from_factor
 from .ap import solve_ap
@@ -232,6 +232,14 @@ class SolverSpec(_JsonSpecMixin):
     ``backend`` field (``Gram``, ``ShardedGram``), so ``CG(backend="pallas")``
     runs every matvec of the solve through the fused differentiable Pallas
     kernel, including through the shards of a distributed solve.
+
+    ``precision`` pins the tile precision of the kernel contractions the same
+    way (``"fp32"``/``"bf16"``; ``None`` inherits the operator's setting —
+    fp32 everywhere by default). bf16 tiles halve MXU operand traffic while
+    accumulating in fp32; the stochastic solvers tolerate the extra tile noise
+    (it is dominated by mini-batch variance), so ``SGD(precision="bf16")`` is
+    the intended opt-in — exact CG convergence is precision-sensitive and
+    stays fp32 unless explicitly pinned. See docs/kernels.md.
     """
 
     name: ClassVar[str] = "?"
@@ -274,6 +282,7 @@ class CG(SolverSpec):
     tol: float = _static(1e-2)
     precond: Optional[PrecondLike] = _static(None)
     backend: Optional[str] = _static(None)
+    precision: Optional[str] = _static(None)
     # iterations without relative residual improvement before FLAG_STAGNATION
     # is raised on a column (advisory — see docs/robustness.md)
     stall_window: int = _static(100)
@@ -316,6 +325,7 @@ class SGD(SolverSpec):
     grad_clip: float = _static(0.1)
     tol: float = _static(1e-2)
     backend: Optional[str] = _static(None)
+    precision: Optional[str] = _static(None)
 
     def run(self, op, b, *, key=None, x0=None, delta=None) -> SolveResult:
         return solve_sgd(
@@ -344,6 +354,7 @@ class SDD(SolverSpec):
     averaging: Optional[float] = _static(None)
     tol: float = _static(1e-2)
     backend: Optional[str] = _static(None)
+    precision: Optional[str] = _static(None)
 
     def run(self, op, b, *, key=None, x0=None, delta=None) -> SolveResult:
         return solve_sdd(
@@ -367,6 +378,7 @@ class AP(SolverSpec):
     block_size: int = _static(512)
     tol: float = _static(1e-2)
     backend: Optional[str] = _static(None)
+    precision: Optional[str] = _static(None)
 
     def run(self, op, b, *, key=None, x0=None, delta=None) -> SolveResult:
         return solve_ap(
@@ -538,6 +550,18 @@ def solve(
         ):
             # the spec pins the kernel-matvec backend for this solve
             op = dataclasses.replace(op, backend=backend)
+    precision = getattr(s, "precision", None)
+    if precision is not None:
+        if precision not in PRECISIONS:
+            raise ValueError(
+                f"unknown precision {precision!r}; expected one of {PRECISIONS}"
+            )
+        if (
+            dataclasses.is_dataclass(op)
+            and getattr(op, "precision", precision) != precision
+        ):
+            # the spec pins the kernel tile precision for this solve
+            op = dataclasses.replace(op, precision=precision)
     if s.requires_key and key is None:
         raise ValueError(
             f"solver {s.name!r} is stochastic: solve(..., key=jax.random.PRNGKey(...))"

@@ -40,6 +40,46 @@ _SQRT5 = 2.23606797749979
 # kernel kinds the fused Pallas path supports (tanimoto has no distance form)
 PALLAS_KINDS = ("se", "matern12", "matern32", "matern52")
 
+#: Tile-operand precisions. ``"fp32"`` is the default everywhere; ``"bf16"``
+#: casts the MXU contraction operands (points, kernel tiles, RHS tiles) to
+#: bfloat16 on load while every accumulation stays fp32
+#: (``preferred_element_type``) and the elementwise covariance map runs on fp32
+#: squared distances. Halves tile memory traffic and doubles MXU throughput;
+#: the stochastic solvers opt in (their estimators are minibatch-noise
+#: dominated — see docs/kernels.md for accuracy guidance).
+TILE_PRECISIONS = ("fp32", "bf16")
+
+
+def _cast_mxu(a, precision: str):
+    """Cast an MXU contraction operand per the tile precision (no-op on fp32)."""
+    if precision == "bf16":
+        return a.astype(jnp.bfloat16)
+    if precision != "fp32":
+        raise ValueError(
+            f"unknown tile precision {precision!r}; expected one of {TILE_PRECISIONS}"
+        )
+    return a
+
+
+def _pair_dists(x, z, precision: str):
+    """Squared-distance tile via the matmul identity, honouring the precision.
+
+    The inner product runs on (possibly bf16-cast) MXU operands with fp32
+    accumulation; the norms are computed in fp32 *from the cast values* so the
+    three terms of ||x−z||² = ||x||² + ||z||² − 2x·z see the same rounding and
+    the cancellation stays consistent (d² ≥ 0 up to fp32 roundoff, as in fp32).
+    """
+    xc = _cast_mxu(x, precision)
+    zc = _cast_mxu(z, precision)
+    xf = xc.astype(jnp.float32)
+    zf = zc.astype(jnp.float32)
+    xn = jnp.sum(xf * xf, axis=-1)[:, None]
+    zn = jnp.sum(zf * zf, axis=-1)[None, :]
+    inner = jax.lax.dot_general(
+        xc, zc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    return xn + zn - 2.0 * inner
+
 
 def _cov_map(d2, kind: str):
     if kind == "se":
@@ -78,25 +118,21 @@ def _dcov_map(d2, kind: str):
     )
 
 
-def _gram_matvec_kernel(x_ref, z_ref, v_ref, o_ref, acc_ref, *, kind, signal, jitter, ncols):
+def _gram_matvec_kernel(
+    x_ref, z_ref, v_ref, o_ref, acc_ref, *, kind, signal, jitter, ncols, precision
+):
     i, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...]  # (bm, d)
-    z = z_ref[...]  # (bn, d)
     v = v_ref[...]  # (bn, s)
-    xn = jnp.sum(x * x, axis=-1)[:, None]
-    zn = jnp.sum(z * z, axis=-1)[None, :]
-    inner = jax.lax.dot_general(
-        x, z, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # MXU: (bm, bn)
-    d2 = jnp.maximum(xn + zn - 2.0 * inner, 0.0)
+    d2 = jnp.maximum(_pair_dists(x_ref[...], z_ref[...], precision), 0.0)
     k = signal * _cov_map(d2, kind)
     acc_ref[...] += jax.lax.dot_general(
-        k, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        _cast_mxu(k, precision), _cast_mxu(v, precision),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
     )
     if jitter:
         # square blocking (bm == bn): diagonal tiles contribute jitter·I @ v = jitter·v
@@ -111,7 +147,9 @@ def _gram_matvec_kernel(x_ref, z_ref, v_ref, o_ref, acc_ref, *, kind, signal, ji
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kind", "signal", "jitter", "block_m", "block_n", "interpret"),
+    static_argnames=(
+        "kind", "signal", "jitter", "block_m", "block_n", "interpret", "precision"
+    ),
 )
 def gram_matvec_pallas(
     x: jax.Array,
@@ -124,6 +162,7 @@ def gram_matvec_pallas(
     block_m: int = 256,
     block_n: int = 256,
     interpret: bool = False,
+    precision: str = "fp32",
 ) -> jax.Array:
     """x:(n,d) z:(m,d) v:(m,s) → (n,s). Inputs pre-scaled by 1/lengthscale.
 
@@ -143,6 +182,7 @@ def gram_matvec_pallas(
             signal=signal,
             jitter=jitter,
             ncols=ncols,
+            precision=precision,
         ),
         grid=grid,
         in_specs=[
@@ -158,7 +198,8 @@ def gram_matvec_pallas(
 
 
 def _gram_matvec_bwd_kernel(
-    x_ref, z_ref, rowv_ref, colv_ref, o_ref, acc_wz_ref, acc_ws_ref, *, kind, ncols
+    x_ref, z_ref, rowv_ref, colv_ref, o_ref, acc_wz_ref, acc_ws_ref,
+    *, kind, ncols, precision
 ):
     """Accumulates dx_i = 2 Σ_j W_ij (x_i − z_j) with W_ij = κ'(d²_ij)·(rowv_i·colv_j).
 
@@ -175,12 +216,7 @@ def _gram_matvec_bwd_kernel(
 
     x = x_ref[...]  # (bm, d)
     z = z_ref[...]  # (bn, d)
-    xn = jnp.sum(x * x, axis=-1)[:, None]
-    zn = jnp.sum(z * z, axis=-1)[None, :]
-    inner = jax.lax.dot_general(
-        x, z, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    raw = xn + zn - 2.0 * inner
+    raw = _pair_dists(x, z, precision)
     kp = _dcov_map(jnp.maximum(raw, 0.0), kind)
     if kind == "matern12":
         # Matérn-1/2 is non-differentiable at coincident points (κ' ~ 1/r → ∞);
@@ -192,13 +228,15 @@ def _gram_matvec_bwd_kernel(
         # replicate autodiff's max(·, 0) clamp convention: 1 above, ½ at, 0 below
         mask = jnp.where(raw > 0.0, 1.0, jnp.where(raw == 0.0, 0.5, 0.0))
     gv = jax.lax.dot_general(
-        rowv_ref[...], colv_ref[...], (((1,), (1,)), ((), ())),
+        _cast_mxu(rowv_ref[...], precision), _cast_mxu(colv_ref[...], precision),
+        (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )  # (bm, bn) = ḡ_i · v_j
     w = kp * mask * gv
     acc_ws_ref[...] += jnp.sum(w, axis=1, keepdims=True)
     acc_wz_ref[...] += jax.lax.dot_general(
-        w, z, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        _cast_mxu(w, precision), _cast_mxu(z, precision),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
     )
 
     @pl.when(j == ncols - 1)
@@ -207,7 +245,7 @@ def _gram_matvec_bwd_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("kind", "block_m", "block_n", "interpret")
+    jax.jit, static_argnames=("kind", "block_m", "block_n", "interpret", "precision")
 )
 def gram_matvec_bwd_pallas(
     x: jax.Array,
@@ -219,6 +257,7 @@ def gram_matvec_bwd_pallas(
     block_m: int = 256,
     block_n: int = 256,
     interpret: bool = False,
+    precision: str = "fp32",
 ) -> jax.Array:
     """Input cotangent dx (n,d) of v ↦ K̃(x,z)@v at rowv=ḡ (n,s), colv=v (m,s).
 
@@ -229,7 +268,9 @@ def gram_matvec_bwd_pallas(
     assert n % block_m == 0 and m % block_n == 0, (n, m, block_m, block_n)
     ncols = m // block_n
     return pl.pallas_call(
-        functools.partial(_gram_matvec_bwd_kernel, kind=kind, ncols=ncols),
+        functools.partial(
+            _gram_matvec_bwd_kernel, kind=kind, ncols=ncols, precision=precision
+        ),
         grid=(n // block_m, ncols),
         in_specs=[
             pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
@@ -253,8 +294,8 @@ def gram_matvec_bwd_pallas(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
-def gram_matvec_fused(kind, block_m, block_n, interpret, x, z, v):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def gram_matvec_fused(kind, block_m, block_n, interpret, precision, x, z, v):
     """K̃(x, z) @ v (unit signal, no jitter), differentiable w.r.t. x, z, v.
 
     x:(n,d) z:(m,d) v:(m,s), all pre-scaled by 1/lengthscale and pre-padded to
@@ -264,17 +305,18 @@ def gram_matvec_fused(kind, block_m, block_n, interpret, x, z, v):
     return gram_matvec_pallas(
         x, z, v, kind=kind, signal=1.0, jitter=0.0,
         block_m=block_m, block_n=block_n, interpret=interpret,
+        precision=precision,
     )
 
 
-def _gram_matvec_fused_fwd(kind, block_m, block_n, interpret, x, z, v):
-    out = gram_matvec_fused(kind, block_m, block_n, interpret, x, z, v)
+def _gram_matvec_fused_fwd(kind, block_m, block_n, interpret, precision, x, z, v):
+    out = gram_matvec_fused(kind, block_m, block_n, interpret, precision, x, z, v)
     return out, (x, z, v)
 
 
-def _gram_matvec_fused_bwd(kind, block_m, block_n, interpret, res, g):
+def _gram_matvec_fused_bwd(kind, block_m, block_n, interpret, precision, res, g):
     x, z, v = res
-    kw = dict(kind=kind, interpret=interpret)
+    kw = dict(kind=kind, interpret=interpret, precision=precision)
     # ∂v: the transposed fused matvec K̃(z, x) @ ḡ — note the swapped block sizes
     dv = gram_matvec_pallas(
         z, x, g, signal=1.0, jitter=0.0,
@@ -286,3 +328,165 @@ def _gram_matvec_fused_bwd(kind, block_m, block_n, interpret, res, g):
 
 
 gram_matvec_fused.defvjp(_gram_matvec_fused_fwd, _gram_matvec_fused_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused stochastic pair step: err = K̃(xi, x) @ look − b and g = K̃(xi, x)ᵀ @ err
+# in ONE kernel launch — the SGD fit-term primitive (Lin et al. 2024 run the
+# row-panel forward and its pullback as separate passes; fusing them keeps the
+# (p, s) error block in VMEM between the two contractions).
+# ---------------------------------------------------------------------------
+
+
+def _gram_rows_pair_kernel(
+    xi_ref, x_ref, look_ref, b_ref, err_ref, o_ref, acc_ref,
+    *, kind, ncols, p_true, precision
+):
+    """Two-phase grid (phase outermost, column tiles innermost).
+
+    Phase 0 sweeps the column tiles of the panel A = K̃(xi, x), accumulating
+    err = A @ look − b into a VMEM scratch that persists across the whole grid;
+    at the last column tile the rows belonging to row padding are zeroed
+    (padded xi rows are all-zero points, whose kernel values k(0, ·) ≠ 0 would
+    otherwise leak garbage into phase 1) and the finished error block is
+    emitted. Phase 1 revisits the same column tiles, rebuilding each A tile and
+    writing g_j = A_jᵀ @ err straight to the j-th output block — err never
+    round-trips HBM, and the launch (plus its operand DMAs) happens once
+    instead of twice. Output blocks mapped during phase 0 flush whatever the
+    buffer holds, which is dead: phase 1 fully overwrites every block.
+    """
+    ph, j = pl.program_id(0), pl.program_id(1)
+    d2 = jnp.maximum(_pair_dists(xi_ref[...], x_ref[...], precision), 0.0)
+    k = _cast_mxu(_cov_map(d2, kind), precision)  # (bp, bn) panel tile
+
+    @pl.when(ph == 0)
+    def _accumulate():
+        @pl.when(j == 0)
+        def _init():
+            acc_ref[...] = -b_ref[...].astype(jnp.float32)
+
+        acc_ref[...] += jax.lax.dot_general(
+            k, _cast_mxu(look_ref[...], precision),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+
+        @pl.when(j == ncols - 1)
+        def _finalize():
+            rows = jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 0)
+            acc_ref[...] = jnp.where(rows < p_true, acc_ref[...], 0.0)
+            err_ref[...] = acc_ref[...].astype(err_ref.dtype)
+
+    @pl.when(ph == 1)
+    def _contract():
+        o_ref[...] = jax.lax.dot_general(
+            k, _cast_mxu(acc_ref[...], precision),
+            (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "block_n", "interpret", "precision", "p_true")
+)
+def gram_rows_pair_pallas(
+    xi: jax.Array,
+    x: jax.Array,
+    look: jax.Array,
+    b: jax.Array,
+    *,
+    kind: str = "se",
+    block_n: int = 256,
+    interpret: bool = False,
+    precision: str = "fp32",
+    p_true: int | None = None,
+) -> tuple:
+    """err = K̃(xi, x) @ look − b, g = K̃(xi, x)ᵀ @ err — one fused launch.
+
+    xi:(p,d) x:(n,d) look:(n,s) b:(p,s) → (err:(p,s), g:(n,s)). Unit signal;
+    inputs pre-scaled by 1/lengthscale, n pre-padded to a block_n multiple and
+    p to a 128 multiple (the whole row block is one tile). ``p_true`` masks the
+    padded error rows (default: no padding).
+    """
+    p, d = xi.shape
+    n, s = look.shape
+    assert n % block_n == 0 and p % 128 == 0, (n, p, block_n)
+    assert b.shape == (p, s)
+    p_true = p if p_true is None else p_true
+    ncols = n // block_n
+    return pl.pallas_call(
+        functools.partial(
+            _gram_rows_pair_kernel,
+            kind=kind, ncols=ncols, p_true=p_true, precision=precision,
+        ),
+        grid=(2, ncols),
+        in_specs=[
+            pl.BlockSpec((p, d), lambda ph, j: (0, 0)),
+            pl.BlockSpec((block_n, d), lambda ph, j: (j, 0)),
+            pl.BlockSpec((block_n, s), lambda ph, j: (j, 0)),
+            pl.BlockSpec((p, s), lambda ph, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((p, s), lambda ph, j: (0, 0)),
+            pl.BlockSpec((block_n, s), lambda ph, j: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, s), look.dtype),
+            jax.ShapeDtypeStruct((n, s), look.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, s), jnp.float32)],
+        interpret=interpret,
+    )(xi, x, look, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def gram_rows_pair_fused(kind, block_n, interpret, precision, p_true, xi, x, look, b):
+    """Differentiable fused pair step (unit signal — ops.py folds σ_f² outside).
+
+    Returns (err, g) = (A@look − b, Aᵀ@err) for A = K̃(xi, x). The VJP is a
+    composition of the existing fused primitives: with ê = ē + A ḡ (masked to
+    the true rows), dlook = Aᵀ ê, db = −ê, and dA = ê lookᵀ + err ḡᵀ — a
+    rank-2s outer-product pair handled by ``gram_matvec_bwd_pallas`` on the
+    concatenated factors. No pass materialises the panel in HBM.
+    """
+    return gram_rows_pair_pallas(
+        xi, x, look, b, kind=kind, block_n=block_n, interpret=interpret,
+        precision=precision, p_true=p_true,
+    )
+
+
+def _gram_rows_pair_fused_fwd(kind, block_n, interpret, precision, p_true,
+                              xi, x, look, b):
+    err, g = gram_rows_pair_fused(
+        kind, block_n, interpret, precision, p_true, xi, x, look, b
+    )
+    return (err, g), (xi, x, look, b, err)
+
+
+def _gram_rows_pair_fused_bwd(kind, block_n, interpret, precision, p_true, res, cts):
+    xi, x, look, b = res[:4]
+    err = res[4]
+    e_bar, g_bar = cts
+    p = xi.shape[0]
+    kw = dict(kind=kind, interpret=interpret, precision=precision)
+    # ê = ē + A ḡ — cotangent of err through BOTH outputs (g = Aᵀ err depends
+    # on err); masked exactly like the forward masks the padded error rows
+    ag = gram_matvec_pallas(
+        xi, x, g_bar, signal=1.0, jitter=0.0,
+        block_m=p, block_n=block_n, **kw,
+    )
+    rows = jnp.arange(p)[:, None]
+    ehat = jnp.where(rows < p_true, e_bar + ag, 0.0)
+    dlook = gram_matvec_pallas(
+        x, xi, ehat, signal=1.0, jitter=0.0,
+        block_m=block_n, block_n=p, **kw,
+    )
+    db = -ehat
+    # dA = ê lookᵀ + err ḡᵀ: stack the rank-s factors and reuse the Gram
+    # backward kernel on the (·, 2s) concatenations
+    rowv = jnp.concatenate([ehat, err], axis=1)  # (p, 2s)
+    colv = jnp.concatenate([look, g_bar], axis=1)  # (n, 2s)
+    dxi = gram_matvec_bwd_pallas(xi, x, rowv, colv, block_m=p, block_n=block_n, **kw)
+    dx = gram_matvec_bwd_pallas(x, xi, colv, rowv, block_m=block_n, block_n=p, **kw)
+    return dxi, dx, dlook, db
+
+
+gram_rows_pair_fused.defvjp(_gram_rows_pair_fused_fwd, _gram_rows_pair_fused_bwd)

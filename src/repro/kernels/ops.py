@@ -37,11 +37,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .gram_matvec import PALLAS_KINDS, gram_matvec_fused
-from .rff_matvec import rff_matvec_fused, rff_t_matvec_fused
+from .autotune import resolve_block as _autotune_block
+from .gram_matvec import (
+    PALLAS_KINDS,
+    TILE_PRECISIONS,
+    gram_matvec_fused,
+    gram_rows_pair_fused,
+)
+from .rff_matvec import rff_matvec_fused, rff_pair_fused, rff_t_matvec_fused
 from .flash_attention import flash_attention_pallas
 
 BACKENDS = ("auto", "pallas", "chunked", "dense")
+
+#: Tile/contration precisions (re-exported from gram_matvec): ``"fp32"``
+#: everywhere by default; ``"bf16"`` casts contraction operands to bfloat16
+#: with fp32 accumulation. Threaded ``SolverSpec`` → ``solve()`` → operators →
+#: here, exactly like ``backend``. On the chunked/dense backends precision
+#: applies to the panel/feature *contractions* (the panel itself and the
+#: covariance map stay fp32); on Pallas it also covers the distance matmul.
+PRECISIONS = TILE_PRECISIONS
 
 #: Feature-map (RFF) backends: fused Pallas vs materialised features. ``auto``
 #: is pallas on TPU, features elsewhere; Gram backend names coerce (see
@@ -101,16 +115,51 @@ def _pad_rows(a: jax.Array, mult: int) -> jax.Array:
     return a if pad == 0 else jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
 
 
-def _pallas_gram_mv(params, x, v2, z, block, interpret):
+def _check_precision(precision: str) -> str:
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of {PRECISIONS}"
+        )
+    return precision
+
+
+def _resolve_block(block, family: str, n: int, d: int, precision: str) -> int:
+    """``"auto"`` → the autotuned/heuristic tile size; ints pass through.
+
+    Runs at trace time on static shapes, so the result is a plain Python int
+    and a repeated call with the same shapes re-traces nothing.
+    """
+    if block == "auto":
+        return _autotune_block(family, n, d, precision=precision)
+    return int(block)
+
+
+def _dot(a: jax.Array, b: jax.Array, precision: str) -> jax.Array:
+    """a @ b honouring the tile precision: bf16 operands, fp32 accumulation.
+
+    The fp32 path stays a plain ``@`` so existing results are bit-identical.
+    """
+    if precision == "bf16":
+        return jax.lax.dot_general(
+            a.astype(jnp.bfloat16), b.astype(jnp.bfloat16),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+    return a @ b
+
+
+def _pallas_gram_mv(params, x, v2, z, block, interpret, precision="fp32"):
     interpret = (not _on_tpu()) if interpret is None else interpret
     ls = params.lengthscale
     xs = x / ls
     zs = None if z is None else z / ls
     n = xs.shape[0]
+    block = _resolve_block(block, "gram", n, x.shape[1], precision)
     xp = _pad_rows(xs, block)
     zp = xp if zs is None else _pad_rows(zs, block)
     vp = _pad_rows(v2, block)
-    out = gram_matvec_fused(params.kind, block, block, bool(interpret), xp, zp, vp)
+    out = gram_matvec_fused(
+        params.kind, block, block, bool(interpret), precision, xp, zp, vp
+    )
     return params.signal * out[:n]
 
 
@@ -122,9 +171,10 @@ def gram_mv(
     *,
     jitter=None,
     backend: str = "auto",
-    block: int = 256,
+    block="auto",
     row_chunk: int = 2048,
     interpret=None,
+    precision: str = "fp32",
 ) -> jax.Array:
     """(σ_f² k(x, z) + jitter·I) @ v through the selected backend — THE Gram
     matvec entry point; differentiable w.r.t. ``params`` on every backend.
@@ -141,11 +191,12 @@ def gram_mv(
             "K(x, x) operator — drop jitter for cross-Gram matvecs (z given)"
         )
     bk = resolve_backend(backend, params.kind)
+    _check_precision(precision)
     MATVEC_TRACE_COUNTS[bk] += 1
     squeeze = v.ndim == 1
     v2 = v[:, None] if squeeze else v
     if bk == "pallas":
-        out = _pallas_gram_mv(params, x, v2, z, block, interpret)
+        out = _pallas_gram_mv(params, x, v2, z, block, interpret, precision)
     elif bk == "chunked":
         out = matvec(params, x, v2, z=z, row_chunk=row_chunk)
     else:
@@ -163,9 +214,10 @@ def gram_rows_matvec(
     *,
     transpose: bool = False,
     backend: str = "auto",
-    block: int = 256,
+    block="auto",
     row_chunk: int = 2048,
     interpret=None,
+    precision: str = "fp32",
 ) -> jax.Array:
     """Fused row-block matvec: K[idx, :] @ u, or K[idx, :]ᵀ @ u with ``transpose``.
 
@@ -180,22 +232,76 @@ def gram_rows_matvec(
     from ..core.kernels_fn import gram  # deferred: avoid core<->kernels cycle
 
     bk = resolve_backend(backend, params.kind)
+    _check_precision(precision)
     xi = x[idx]
     if bk == "pallas":
         if transpose:
             return gram_mv(
                 params, x, u, z=xi, backend="pallas", block=block,
-                interpret=interpret,
+                interpret=interpret, precision=precision,
             )
         return gram_mv(
-            params, xi, u, z=x, backend="pallas", block=block, interpret=interpret,
+            params, xi, u, z=x, backend="pallas", block=block,
+            interpret=interpret, precision=precision,
         )
     MATVEC_TRACE_COUNTS[bk] += 1
     panel = gram(params, xi, x)  # (|idx|, n)
-    return panel.T @ u if transpose else panel @ u
+    return _dot(panel.T, u, precision) if transpose else _dot(panel, u, precision)
 
 
-def gram_matvec(params, x, v, z=None, *, jitter=None, block=256, interpret=None):
+def gram_rows_pair(
+    params,
+    x: jax.Array,
+    idx: jax.Array,
+    look: jax.Array,
+    b: jax.Array,
+    *,
+    backend: str = "auto",
+    block="auto",
+    interpret=None,
+    precision: str = "fp32",
+) -> tuple:
+    """Fused stochastic pair step: err = K[idx,:] @ look − b and
+    g = K[idx,:]ᵀ @ err in one dispatch — the SGD fit-gradient primitive.
+
+    The unfused path launches two independent row-block matvecs that each
+    rebuild the same kernel panel from scratch; here the chunked/dense backends
+    build the panel ONCE and reuse it for both contractions, and the Pallas
+    backend runs the two-phase ``gram_rows_pair`` kernel (gram_matvec.py) whose
+    (|idx|, s) error block never leaves VMEM between the two passes. Counts as
+    TWO row-block matvecs — the work of the two calls it replaces — so the
+    solver-layer accounting is unchanged. look: (n, s); b: (|idx|, s).
+    Differentiable w.r.t. ``params`` on every backend.
+    """
+    from ..core.kernels_fn import gram  # deferred: avoid core<->kernels cycle
+
+    bk = resolve_backend(backend, params.kind)
+    _check_precision(precision)
+    MATVEC_TRACE_COUNTS[bk] += 2
+    xi = x[idx]
+    if bk == "pallas":
+        interpret = (not _on_tpu()) if interpret is None else interpret
+        ls = params.lengthscale
+        p, n = xi.shape[0], x.shape[0]
+        bn = _resolve_block(block, "gram", n, x.shape[1], precision)
+        xip = _pad_rows(xi / ls, 128)
+        xp = _pad_rows(x / ls, bn)
+        lookp = _pad_rows(look, bn)
+        # unit-signal core: err = σ_f²·err_u with err_u = A_u@look − b/σ_f²,
+        # and g = Aᵀ err = σ_f²·A_uᵀ·(σ_f²·err_u) = σ_f⁴·g_u — σ_f² gradients
+        # flow through the plain-JAX scaling, like every other fused core
+        bp = _pad_rows(b / params.signal, 128)
+        err_u, g_u = gram_rows_pair_fused(
+            params.kind, bn, bool(interpret), precision, p, xip, xp, lookp, bp
+        )
+        return params.signal * err_u[:p], (params.signal ** 2) * g_u[:n]
+    panel = gram(params, xi, x)  # (|idx|, n) — built once, used twice
+    err = _dot(panel, look, precision) - b
+    return err, _dot(panel.T, err, precision)
+
+
+def gram_matvec(params, x, v, z=None, *, jitter=None, block="auto", interpret=None,
+                precision: str = "fp32"):
     """(σ_f² k(x,z) + jitter I) @ v — Pallas fused Gram matvec (see gram_matvec.py).
 
     Thin ``backend="pallas"`` pin over :func:`gram_mv`, kept as the conventional
@@ -203,7 +309,7 @@ def gram_matvec(params, x, v, z=None, *, jitter=None, block=256, interpret=None)
     """
     return gram_mv(
         params, x, v, z=z, jitter=jitter, backend="pallas", block=block,
-        interpret=interpret,
+        interpret=interpret, precision=precision,
     )
 
 
@@ -251,7 +357,8 @@ def _pad_rff_operands(x, omega, halves, block):
     return _pad_rows(x, block), omega, halves, m_true + pad_f
 
 
-def rff_matvec(x, omega, w, *, signal=1.0, block=256, interpret=None):
+def rff_matvec(x, omega, w, *, signal=1.0, block="auto", interpret=None,
+               precision: str = "fp32"):
     """Φ(x) @ w (paired sin/cos RFF) — fused, feature matrix never in HBM;
     differentiable w.r.t. ``x``, ``omega``, ``w`` and ``signal`` (custom VJP,
     every pass a fused Pallas contraction — kernels/rff_matvec.py).
@@ -262,16 +369,20 @@ def rff_matvec(x, omega, w, *, signal=1.0, block=256, interpret=None):
     interpret = (not _on_tpu()) if interpret is None else interpret
     n = x.shape[0]
     m_true = omega.shape[0]
+    block = _resolve_block(block, "rff", n, x.shape[1], precision)
     xp, omega, (w_sin, w_cos), m_pad = _pad_rff_operands(
         x, omega, (w[:m_true], w[m_true:]), block
     )
     wp = jnp.concatenate([w_sin, w_cos], axis=0)
-    out = rff_matvec_fused(block, block, bool(interpret), xp, omega, wp)[:n]
+    out = rff_matvec_fused(
+        block, block, bool(interpret), precision, xp, omega, wp
+    )[:n]
     # kernel scale is sqrt(1/m_pad); rescale to sqrt(signal/m_true)
     return out * jnp.sqrt(signal * (m_pad / m_true))
 
 
-def rff_t_matvec(x, omega, u, *, signal=1.0, block=256, interpret=None):
+def rff_t_matvec(x, omega, u, *, signal=1.0, block="auto", interpret=None,
+                 precision: str = "fp32"):
     """Φ(x)ᵀ @ u (paired sin/cos RFF) → (2m, s) — the transposed fused matvec,
     sin/cos halves accumulated per feature tile; differentiable throughout.
 
@@ -280,9 +391,10 @@ def rff_t_matvec(x, omega, u, *, signal=1.0, block=256, interpret=None):
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     m_true = omega.shape[0]
+    block = _resolve_block(block, "rff", x.shape[0], x.shape[1], precision)
     xp, omega, _, m_pad = _pad_rff_operands(x, omega, (), block)
     up = _pad_rows(u, block)  # padded rows are zero ⇒ contribute nothing to Φᵀu
-    out = rff_t_matvec_fused(block, block, bool(interpret), xp, omega, up)
+    out = rff_t_matvec_fused(block, block, bool(interpret), precision, xp, omega, up)
     out = jnp.concatenate([out[:m_true], out[m_pad:m_pad + m_true]], axis=0)
     return out * jnp.sqrt(signal * (m_pad / m_true))
 
@@ -302,21 +414,23 @@ def rff_mv(
     *,
     signal=1.0,
     backend: str = "auto",
-    block: int = 256,
+    block="auto",
     interpret=None,
+    precision: str = "fp32",
 ) -> jax.Array:
     """Φ(x) @ w through the selected feature backend — THE feature matvec entry
     point (the ``FeatureOperator`` twin of :func:`gram_mv`); differentiable on
     every backend. x:(n,d) ω:(m,d) w:(2m,) or (2m,s) → (n, s-like)."""
     bk = resolve_feature_backend(backend)
+    _check_precision(precision)
     FEATURE_TRACE_COUNTS[bk] += 1
     squeeze = w.ndim == 1
     w2 = w[:, None] if squeeze else w
     if bk == "pallas":
         out = rff_matvec(x, omega, w2, signal=signal, block=block,
-                         interpret=interpret)
+                         interpret=interpret, precision=precision)
     else:
-        out = _materialised_features(x, omega, signal) @ w2
+        out = _dot(_materialised_features(x, omega, signal), w2, precision)
     return out[:, 0] if squeeze else out
 
 
@@ -327,20 +441,62 @@ def rff_t_mv(
     *,
     signal=1.0,
     backend: str = "auto",
-    block: int = 256,
+    block="auto",
     interpret=None,
+    precision: str = "fp32",
 ) -> jax.Array:
     """Φ(x)ᵀ @ u through the selected feature backend — the transposed feature
     matvec entry point. x:(n,d) ω:(m,d) u:(n,) or (n,s) → (2m, s-like)."""
     bk = resolve_feature_backend(backend)
+    _check_precision(precision)
     FEATURE_TRACE_COUNTS[bk] += 1
     squeeze = u.ndim == 1
     u2 = u[:, None] if squeeze else u
     if bk == "pallas":
         out = rff_t_matvec(x, omega, u2, signal=signal, block=block,
-                           interpret=interpret)
+                           interpret=interpret, precision=precision)
     else:
-        out = _materialised_features(x, omega, signal).T @ u2
+        out = _dot(_materialised_features(x, omega, signal).T, u2, precision)
+    return out[:, 0] if squeeze else out
+
+
+def rff_pair_mv(
+    x: jax.Array,
+    omega: jax.Array,
+    u: jax.Array,
+    *,
+    signal=1.0,
+    backend: str = "auto",
+    block="auto",
+    interpret=None,
+    precision: str = "fp32",
+) -> jax.Array:
+    """Φ(x) (Φ(x)ᵀ u) — the SGD regulariser composition (Eq. 3.3) in ONE
+    dispatch. On the features backend Φ is materialised once and reused for
+    both contractions; on Pallas the two-phase ``rff_pair`` kernel keeps the
+    (2m, s) intermediate in VMEM for its whole lifetime (rff_matvec.py).
+    Counts as TWO feature matvecs — the work of the Φᵀ/Φ pair it replaces.
+    x:(n,d) ω:(m,d) u:(n,) or (n,s) → (n, s-like); differentiable throughout.
+    """
+    bk = resolve_feature_backend(backend)
+    _check_precision(precision)
+    FEATURE_TRACE_COUNTS[bk] += 2
+    squeeze = u.ndim == 1
+    u2 = u[:, None] if squeeze else u
+    if bk == "pallas":
+        interpret = (not _on_tpu()) if interpret is None else interpret
+        n = x.shape[0]
+        m_true = omega.shape[0]
+        bm = _resolve_block(block, "rff", n, x.shape[1], precision)
+        xp = _pad_rows(x, bm)
+        om = _pad_rows(omega, 128)
+        up = _pad_rows(u2, bm)
+        raw = rff_pair_fused(bm, bool(interpret), precision, m_true, xp, om, up)
+        # core normalisation is 1/m_pad (both Φ̃ factors); want signal/m_true
+        out = raw[:n] * (signal * (om.shape[0] / m_true))
+    else:
+        feats = _materialised_features(x, omega, signal)  # built once, used twice
+        out = _dot(feats, _dot(feats.T, u2, precision), precision)
     return out[:, 0] if squeeze else out
 
 

@@ -34,23 +34,36 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .gram_matvec import _cast_mxu
 
-def _rff_kernel(x_ref, om_ref, wsin_ref, wcos_ref, o_ref, acc_ref, *, scale, nfeat):
+
+def _proj(x, om, precision):
+    """The (bm, bf) projection tile x Ωᵀ — MXU operands cast per the tile
+    precision, fp32 accumulation (see gram_matvec.TILE_PRECISIONS)."""
+    return jax.lax.dot_general(
+        _cast_mxu(x, precision), _cast_mxu(om, precision),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+
+
+def _rff_kernel(
+    x_ref, om_ref, wsin_ref, wcos_ref, o_ref, acc_ref, *, scale, nfeat, precision
+):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...]  # (bm, d)
-    om = om_ref[...]  # (bf, d)
-    proj = jax.lax.dot_general(
-        x, om, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (bm, bf)
+    proj = _proj(x_ref[...], om_ref[...], precision)  # (bm, bf)
+    wsin = _cast_mxu(wsin_ref[...], precision)
+    wcos = _cast_mxu(wcos_ref[...], precision)
     acc_ref[...] += scale * (
-        jax.lax.dot_general(jnp.sin(proj), wsin_ref[...], (((1,), (0,)), ((), ())),
+        jax.lax.dot_general(_cast_mxu(jnp.sin(proj), precision), wsin,
+                            (((1,), (0,)), ((), ())),
                             preferred_element_type=jnp.float32)
-        + jax.lax.dot_general(jnp.cos(proj), wcos_ref[...], (((1,), (0,)), ((), ())),
+        + jax.lax.dot_general(_cast_mxu(jnp.cos(proj), precision), wcos,
+                              (((1,), (0,)), ((), ())),
                               preferred_element_type=jnp.float32)
     )
 
@@ -60,7 +73,7 @@ def _rff_kernel(x_ref, om_ref, wsin_ref, wcos_ref, o_ref, acc_ref, *, scale, nfe
 
 
 @functools.partial(
-    jax.jit, static_argnames=("signal", "block_m", "block_f", "interpret")
+    jax.jit, static_argnames=("signal", "block_m", "block_f", "interpret", "precision")
 )
 def rff_matvec_pallas(
     x: jax.Array,
@@ -71,6 +84,7 @@ def rff_matvec_pallas(
     block_m: int = 256,
     block_f: int = 256,
     interpret: bool = False,
+    precision: str = "fp32",
 ) -> jax.Array:
     """x:(n,d) ω:(m,d) w:(2m,s) (sin rows then cos rows) → (n,s). Pre-padded."""
     n, d = x.shape
@@ -82,7 +96,9 @@ def rff_matvec_pallas(
     nfeat = m // block_f
     scale = (signal / m) ** 0.5
     return pl.pallas_call(
-        functools.partial(_rff_kernel, scale=scale, nfeat=nfeat),
+        functools.partial(
+            _rff_kernel, scale=scale, nfeat=nfeat, precision=precision
+        ),
         grid=(n // block_m, nfeat),
         in_specs=[
             pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
@@ -103,7 +119,8 @@ def rff_matvec_pallas(
 
 
 def _rff_t_kernel(
-    x_ref, om_ref, u_ref, osin_ref, ocos_ref, accs_ref, accc_ref, *, scale, nrows
+    x_ref, om_ref, u_ref, osin_ref, ocos_ref, accs_ref, accc_ref,
+    *, scale, nrows, precision
 ):
     i = pl.program_id(1)  # row tile (innermost: the feature-tile output stays
     # resident in VMEM across the full row accumulation)
@@ -113,18 +130,16 @@ def _rff_t_kernel(
         accs_ref[...] = jnp.zeros_like(accs_ref)
         accc_ref[...] = jnp.zeros_like(accc_ref)
 
-    x = x_ref[...]  # (bm, d)
-    om = om_ref[...]  # (bf, d)
-    u = u_ref[...]  # (bm, s)
-    proj = jax.lax.dot_general(
-        x, om, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (bm, bf)
+    proj = _proj(x_ref[...], om_ref[...], precision)  # (bm, bf)
+    u = _cast_mxu(u_ref[...], precision)  # (bm, s)
     # sin(proj)ᵀ @ u and cos(proj)ᵀ @ u — contract the row dimension on the MXU
     accs_ref[...] += scale * jax.lax.dot_general(
-        jnp.sin(proj), u, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        _cast_mxu(jnp.sin(proj), precision), u, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
     )  # (bf, s)
     accc_ref[...] += scale * jax.lax.dot_general(
-        jnp.cos(proj), u, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        _cast_mxu(jnp.cos(proj), precision), u, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
     )
 
     @pl.when(i == nrows - 1)
@@ -134,7 +149,7 @@ def _rff_t_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("signal", "block_m", "block_f", "interpret")
+    jax.jit, static_argnames=("signal", "block_m", "block_f", "interpret", "precision")
 )
 def rff_t_matvec_pallas(
     x: jax.Array,
@@ -145,6 +160,7 @@ def rff_t_matvec_pallas(
     block_m: int = 256,
     block_f: int = 256,
     interpret: bool = False,
+    precision: str = "fp32",
 ) -> jax.Array:
     """Φ(x)ᵀ @ u: x:(n,d) ω:(m,d) u:(n,s) → (2m,s) (sin rows then cos rows).
 
@@ -157,7 +173,9 @@ def rff_t_matvec_pallas(
     nrows = n // block_m
     scale = (signal / m) ** 0.5
     osin, ocos = pl.pallas_call(
-        functools.partial(_rff_t_kernel, scale=scale, nrows=nrows),
+        functools.partial(
+            _rff_t_kernel, scale=scale, nrows=nrows, precision=precision
+        ),
         grid=(m // block_f, nrows),
         in_specs=[
             pl.BlockSpec((block_m, d), lambda j, i: (i, 0)),
@@ -196,7 +214,8 @@ def rff_t_matvec_pallas(
 
 
 def _rff_bwd_kernel(
-    r_ref, c_ref, p1_ref, p2_ref, q1_ref, q2_ref, o_ref, acc_ref, *, scale, ncols
+    r_ref, c_ref, p1_ref, p2_ref, q1_ref, q2_ref, o_ref, acc_ref,
+    *, scale, ncols, precision
 ):
     j = pl.program_id(1)
 
@@ -204,22 +223,22 @@ def _rff_bwd_kernel(
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    r = r_ref[...]  # (bm, d)
     c = c_ref[...]  # (bn, d)
-    proj = jax.lax.dot_general(
-        r, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )  # (bm, bn)
+    proj = _proj(r_ref[...], c, precision)  # (bm, bn)
     a = jax.lax.dot_general(
-        p1_ref[...], q1_ref[...], (((1,), (1,)), ((), ())),
+        _cast_mxu(p1_ref[...], precision), _cast_mxu(q1_ref[...], precision),
+        (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )  # (bm, bn) = P₁_i · Q₁_j
     b = jax.lax.dot_general(
-        p2_ref[...], q2_ref[...], (((1,), (1,)), ((), ())),
+        _cast_mxu(p2_ref[...], precision), _cast_mxu(q2_ref[...], precision),
+        (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
     w = jnp.cos(proj) * a - jnp.sin(proj) * b
     acc_ref[...] += scale * jax.lax.dot_general(
-        w, c, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        _cast_mxu(w, precision), _cast_mxu(c, precision),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
     )  # (bm, d)
 
     @pl.when(j == ncols - 1)
@@ -228,7 +247,7 @@ def _rff_bwd_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("scale", "block_m", "block_n", "interpret")
+    jax.jit, static_argnames=("scale", "block_m", "block_n", "interpret", "precision")
 )
 def rff_bwd_pallas(
     r: jax.Array,
@@ -242,6 +261,7 @@ def rff_bwd_pallas(
     block_m: int = 256,
     block_n: int = 256,
     interpret: bool = False,
+    precision: str = "fp32",
 ) -> jax.Array:
     """dR = scale · (cos(RCᵀ)⊙(P₁Q₁ᵀ) − sin(RCᵀ)⊙(P₂Q₂ᵀ)) @ C — (rows, d)."""
     n, d = r.shape
@@ -250,7 +270,9 @@ def rff_bwd_pallas(
     ncols = m // block_n
     s = p1.shape[1]
     return pl.pallas_call(
-        functools.partial(_rff_bwd_kernel, scale=scale, ncols=ncols),
+        functools.partial(
+            _rff_bwd_kernel, scale=scale, ncols=ncols, precision=precision
+        ),
         grid=(n // block_m, ncols),
         in_specs=[
             pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
@@ -273,24 +295,24 @@ def rff_bwd_pallas(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def rff_matvec_fused(block_m, block_f, interpret, x, omega, w):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def rff_matvec_fused(block_m, block_f, interpret, precision, x, omega, w):
     """Φ̃(x) @ w with Φ̃ = sqrt(1/m)·[sin(xΩᵀ) | cos(xΩᵀ)], differentiable w.r.t.
     x, ω and w — every pass a fused Pallas kernel. Operands pre-padded to block
     multiples (ops.py pads; padded w/u rows are zero so cotangents vanish there
     and the surrounding ``jnp.pad`` transposes slice them off)."""
     return rff_matvec_pallas(
         x, omega, w, signal=1.0, block_m=block_m, block_f=block_f,
-        interpret=interpret,
+        interpret=interpret, precision=precision,
     )
 
 
-def _rff_matvec_fused_fwd(block_m, block_f, interpret, x, omega, w):
-    out = rff_matvec_fused(block_m, block_f, interpret, x, omega, w)
+def _rff_matvec_fused_fwd(block_m, block_f, interpret, precision, x, omega, w):
+    out = rff_matvec_fused(block_m, block_f, interpret, precision, x, omega, w)
     return out, (x, omega, w)
 
 
-def _rff_matvec_fused_bwd(block_m, block_f, interpret, res, g):
+def _rff_matvec_fused_bwd(block_m, block_f, interpret, precision, res, g):
     x, omega, w = res
     m = omega.shape[0]
     scale = (1.0 / m) ** 0.5
@@ -298,17 +320,17 @@ def _rff_matvec_fused_bwd(block_m, block_f, interpret, res, g):
     # ∂w = Φ̃ᵀ ḡ — the transposed fused matvec
     dw = rff_t_matvec_pallas(
         x, omega, g, signal=1.0, block_m=block_m, block_f=block_f,
-        interpret=interpret,
+        interpret=interpret, precision=precision,
     )
     # ∂x_i = Σ_j [cos(x_i·ω_j)(ḡ_i·ws_j) − sin(x_i·ω_j)(ḡ_i·wc_j)]·scale·ω_j
     dx = rff_bwd_pallas(
         x, omega, g, g, w_sin, w_cos, scale=scale, block_m=block_m,
-        block_n=block_f, interpret=interpret,
+        block_n=block_f, interpret=interpret, precision=precision,
     )
     # ∂ω_j — the same kernel with rows/cols and factor roles swapped (Wᵀ)
     dom = rff_bwd_pallas(
         omega, x, w_sin, w_cos, g, g, scale=scale, block_m=block_f,
-        block_n=block_m, interpret=interpret,
+        block_n=block_m, interpret=interpret, precision=precision,
     )
     return dx, dom, dw
 
@@ -316,21 +338,21 @@ def _rff_matvec_fused_bwd(block_m, block_f, interpret, res, g):
 rff_matvec_fused.defvjp(_rff_matvec_fused_fwd, _rff_matvec_fused_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def rff_t_matvec_fused(block_m, block_f, interpret, x, omega, u):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def rff_t_matvec_fused(block_m, block_f, interpret, precision, x, omega, u):
     """Φ̃(x)ᵀ @ u (unit signal), differentiable w.r.t. x, ω and u."""
     return rff_t_matvec_pallas(
         x, omega, u, signal=1.0, block_m=block_m, block_f=block_f,
-        interpret=interpret,
+        interpret=interpret, precision=precision,
     )
 
 
-def _rff_t_matvec_fused_fwd(block_m, block_f, interpret, x, omega, u):
-    out = rff_t_matvec_fused(block_m, block_f, interpret, x, omega, u)
+def _rff_t_matvec_fused_fwd(block_m, block_f, interpret, precision, x, omega, u):
+    out = rff_t_matvec_fused(block_m, block_f, interpret, precision, x, omega, u)
     return out, (x, omega, u)
 
 
-def _rff_t_matvec_fused_bwd(block_m, block_f, interpret, res, g):
+def _rff_t_matvec_fused_bwd(block_m, block_f, interpret, precision, res, g):
     x, omega, u = res
     m = omega.shape[0]
     scale = (1.0 / m) ** 0.5
@@ -338,18 +360,178 @@ def _rff_t_matvec_fused_bwd(block_m, block_f, interpret, res, g):
     # ∂u = Φ̃ ḡ — the forward fused matvec against the cotangent
     du = rff_matvec_pallas(
         x, omega, g, signal=1.0, block_m=block_m, block_f=block_f,
-        interpret=interpret,
+        interpret=interpret, precision=precision,
     )
     # L = Σ ḡ ⊙ (Φ̃ᵀu) = Σ u ⊙ (Φ̃ḡ): same projection cotangent with ḡ ↦ u
     dx = rff_bwd_pallas(
         x, omega, u, u, g_sin, g_cos, scale=scale, block_m=block_m,
-        block_n=block_f, interpret=interpret,
+        block_n=block_f, interpret=interpret, precision=precision,
     )
     dom = rff_bwd_pallas(
         omega, x, g_sin, g_cos, u, u, scale=scale, block_m=block_f,
-        block_n=block_m, interpret=interpret,
+        block_n=block_m, interpret=interpret, precision=precision,
     )
     return dx, dom, du
 
 
 rff_t_matvec_fused.defvjp(_rff_t_matvec_fused_fwd, _rff_t_matvec_fused_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused regulariser pair: Φ̃(x) (Φ̃(x)ᵀ u) in ONE launch — the SGD regulariser
+# (Eq. 3.3) composition. The (2m, s) intermediate t = Φ̃ᵀu lives in a VMEM
+# scratch spanning the whole (padded) feature axis and never touches HBM.
+# ---------------------------------------------------------------------------
+
+
+def _rff_pair_kernel(
+    x_ref, om_ref, u_ref, o_ref, ts_ref, tc_ref, *, scale, nrows, m_true, precision
+):
+    """Two-phase grid (phase outermost, row tiles innermost).
+
+    Phase 0 sweeps the row tiles, accumulating the sin/cos halves of
+    t = Φ̃ᵀu into VMEM scratches covering the full feature axis; at the last
+    row tile the rows belonging to feature padding are zeroed (padded ω rows
+    are zero frequencies, whose cos features are identically 1 — their tᵀu
+    accumulations are Σᵢuᵢ garbage, not zero). Phase 1 revisits the row tiles,
+    rebuilds each projection tile and writes o_i = Φ̃_i t straight out; blocks
+    flushed during phase 0 hold dead data that phase 1 fully overwrites.
+    """
+    ph, i = pl.program_id(0), pl.program_id(1)
+    proj = _proj(x_ref[...], om_ref[...], precision)  # (bm, m_pad)
+    sn, cs = jnp.sin(proj), jnp.cos(proj)
+
+    @pl.when(ph == 0)
+    def _accumulate():
+        @pl.when(i == 0)
+        def _init():
+            ts_ref[...] = jnp.zeros_like(ts_ref)
+            tc_ref[...] = jnp.zeros_like(tc_ref)
+
+        u = _cast_mxu(u_ref[...], precision)  # (bm, s)
+        ts_ref[...] += scale * jax.lax.dot_general(
+            _cast_mxu(sn, precision), u, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (m_pad, s)
+        tc_ref[...] += scale * jax.lax.dot_general(
+            _cast_mxu(cs, precision), u, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+        @pl.when(i == nrows - 1)
+        def _finalize():
+            rows = jax.lax.broadcasted_iota(jnp.int32, ts_ref.shape, 0)
+            keep = rows < m_true
+            ts_ref[...] = jnp.where(keep, ts_ref[...], 0.0)
+            tc_ref[...] = jnp.where(keep, tc_ref[...], 0.0)
+
+    @pl.when(ph == 1)
+    def _apply():
+        o_ref[...] = (
+            scale * (
+                jax.lax.dot_general(
+                    _cast_mxu(sn, precision), _cast_mxu(ts_ref[...], precision),
+                    (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+                )
+                + jax.lax.dot_general(
+                    _cast_mxu(cs, precision), _cast_mxu(tc_ref[...], precision),
+                    (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+                )
+            )
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "interpret", "precision", "m_true")
+)
+def rff_pair_pallas(
+    x: jax.Array,
+    omega: jax.Array,
+    u: jax.Array,
+    *,
+    block_m: int = 256,
+    interpret: bool = False,
+    precision: str = "fp32",
+    m_true: int | None = None,
+) -> jax.Array:
+    """Φ̃(x) (Φ̃(x)ᵀ u) with Φ̃ = sqrt(1/m)·[sin|cos] — x:(n,d) ω:(m,d) u:(n,s)
+    → (n,s), pre-padded (n to block_m, m to 128 multiples; padded u rows zero).
+    The feature axis is NOT tiled: both (m, s) halves of the intermediate stay
+    resident in VMEM across the whole grid. ``m_true`` masks feature padding.
+    """
+    n, d = x.shape
+    m = omega.shape[0]
+    s = u.shape[1]
+    assert n % block_m == 0 and m % 128 == 0, (n, m, block_m)
+    m_true = m if m_true is None else m_true
+    nrows = n // block_m
+    scale = (1.0 / m) ** 0.5
+    return pl.pallas_call(
+        functools.partial(
+            _rff_pair_kernel, scale=scale, nrows=nrows, m_true=m_true,
+            precision=precision,
+        ),
+        grid=(2, nrows),
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda ph, i: (i, 0)),
+            pl.BlockSpec((m, d), lambda ph, i: (0, 0)),
+            pl.BlockSpec((block_m, s), lambda ph, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, s), lambda ph, i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, s), u.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((m, s), jnp.float32),
+            pltpu.VMEM((m, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, omega, u)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def rff_pair_fused(block_m, interpret, precision, m_true, x, omega, u):
+    """Differentiable fused pair Φ̃(Φ̃ᵀu) (unit signal; ops.py folds σ_f²·m_pad/m
+    outside). The VJP composes existing fused primitives: du is the pair itself
+    (the operator is symmetric PSD), and dx/dω run through ``rff_bwd_pallas``
+    on the concatenated factors of dΦ̃ = ō tᵀ + u t̃ᵀ (t = Φ̃ᵀu, t̃ = Φ̃ᵀō)."""
+    return rff_pair_pallas(
+        x, omega, u, block_m=block_m, interpret=interpret, precision=precision,
+        m_true=m_true,
+    )
+
+
+def _rff_pair_fused_fwd(block_m, interpret, precision, m_true, x, omega, u):
+    out = rff_pair_fused(block_m, interpret, precision, m_true, x, omega, u)
+    return out, (x, omega, u)
+
+
+def _rff_pair_fused_bwd(block_m, interpret, precision, m_true, res, g):
+    x, omega, u = res
+    m = omega.shape[0]
+    scale = (1.0 / m) ** 0.5
+    kw = dict(block_m=block_m, block_f=min(128, m), interpret=interpret,
+              precision=precision)
+    # ∂u = Φ̃ Φ̃ᵀ ḡ — the pair itself (symmetric operator)
+    du = rff_pair_fused(block_m, interpret, precision, m_true, x, omega, g)
+    # t = Φ̃ᵀu and t̃ = Φ̃ᵀḡ, masked to the true feature rows exactly like the
+    # forward masks its VMEM intermediate
+    keep = (jnp.arange(m) < m_true)[:, None]
+    t = rff_t_matvec_pallas(x, omega, u, signal=1.0, **kw)
+    tt = rff_t_matvec_pallas(x, omega, g, signal=1.0, **kw)
+    t_s, t_c = jnp.where(keep, t[:m], 0.0), jnp.where(keep, t[m:], 0.0)
+    tt_s, tt_c = jnp.where(keep, tt[:m], 0.0), jnp.where(keep, tt[m:], 0.0)
+    # dL/dΦ̃ = ḡ tᵀ + u t̃ᵀ — rank-2s factors for the projection cotangent
+    pp = jnp.concatenate([g, u], axis=1)  # (n, 2s)
+    q1 = jnp.concatenate([t_s, tt_s], axis=1)  # (m, 2s)
+    q2 = jnp.concatenate([t_c, tt_c], axis=1)
+    dx = rff_bwd_pallas(
+        x, omega, pp, pp, q1, q2, scale=scale, block_m=block_m,
+        block_n=min(128, m), interpret=interpret, precision=precision,
+    )
+    dom = rff_bwd_pallas(
+        omega, x, q1, q2, pp, pp, scale=scale, block_m=min(128, m),
+        block_n=block_m, interpret=interpret, precision=precision,
+    )
+    return dx, dom, du
+
+
+rff_pair_fused.defvjp(_rff_pair_fused_fwd, _rff_pair_fused_bwd)

@@ -1,0 +1,226 @@
+"""Fused pair primitives (gram_rows_pair / rff_pair_mv) and tile precision.
+
+Three contracts:
+
+* **pair parity** — the fused pair step equals its two-call composition on
+  every backend, for values AND gradients (the Pallas pair kernels carry
+  composition custom VJPs; a drift here silently corrupts SGD training);
+* **precision parity** — bf16 tile contractions with fp32 accumulation stay
+  within loose tolerance of fp32 (the opt-in is for stochastic solvers whose
+  mini-batch variance dominates tile noise);
+* **fp32 default** — nothing opts into bf16 unless asked: operator fields,
+  spec fields and op-level defaults all say fp32/None.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kernels_fn import gram, make_params
+from repro.core.operators import Gram, supports
+from repro.core.rff import make_fourier_features
+from repro.core.solvers.spec import CG, SGD, solve
+from repro.kernels.ops import (
+    PRECISIONS,
+    gram_rows_pair,
+    rff_mv,
+    rff_pair_mv,
+    rff_t_mv,
+)
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _pair_problem(n=200, d=3, p=40, s=3, seed=0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, d))
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (p,), 0, n)
+    look = jax.random.normal(jax.random.fold_in(key, 2), (n, s))
+    b = jax.random.normal(jax.random.fold_in(key, 3), (p, s))
+    params = make_params("matern32", lengthscale=0.9, signal=1.3, d=d, noise=0.1)
+    return params, x, idx, look, b
+
+
+def _pair_ref(params, x, idx, look, b):
+    panel = gram(params, x[idx], x)
+    err = panel @ look - b
+    return err, panel.T @ err
+
+
+# ---------------------------------------------------------------------------
+# gram_rows_pair: fused vs unfused parity, values and grads
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["chunked", "pallas"])
+@pytest.mark.parametrize("kind", ["se", "matern32"])
+@pytest.mark.parametrize(
+    "n,p,s", [(200, 40, 3), (128, 32, 1), (130, 17, 2)]  # incl. non-block shapes
+)
+def test_gram_rows_pair_matches_composition(backend, kind, n, p, s):
+    params, x, idx, look, b = _pair_problem(n=n, p=p, s=s)
+    params = dataclasses.replace(
+        params, kind=kind, log_lengthscale=params.log_lengthscale
+    )
+    err, g = gram_rows_pair(params, x, idx, look, b, backend=backend)
+    err_ref, g_ref = _pair_ref(params, x, idx, look, b)
+    assert err.shape == (p, s) and g.shape == (n, s)
+    np.testing.assert_allclose(err, err_ref, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(g, g_ref, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("backend", ["chunked", "pallas"])
+def test_gram_rows_pair_grads_match_composition(backend):
+    params, x, idx, look, b = _pair_problem(n=150, p=24, s=2)
+
+    def loss_fused(x_, look_, b_, log_ls):
+        p_ = dataclasses.replace(params, log_lengthscale=log_ls)
+        err, g = gram_rows_pair(p_, x_, idx, look_, b_, backend=backend)
+        return jnp.sum(err ** 2) + jnp.sum(jnp.sin(g))
+
+    def loss_ref(x_, look_, b_, log_ls):
+        p_ = dataclasses.replace(params, log_lengthscale=log_ls)
+        err, g = _pair_ref(p_, x_, idx, look_, b_)
+        return jnp.sum(err ** 2) + jnp.sum(jnp.sin(g))
+
+    args = (x, look, b, params.log_lengthscale)
+    grads = jax.grad(loss_fused, argnums=(0, 1, 2, 3))(*args)
+    grads_ref = jax.grad(loss_ref, argnums=(0, 1, 2, 3))(*args)
+    for got, ref in zip(grads, grads_ref):
+        np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_gram_rows_pair_operator_capability(toy_regression):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    assert supports(op, "rows_pair_mv")
+    idx = jnp.arange(16)
+    look = jnp.ones((op.n, 2))
+    b = jnp.zeros((16, 2))
+    err, g = op.rows_pair_mv(idx, look, b)
+    err_ref = op.rows_mv(idx, look) - b
+    g_ref = op.rows_t_mv(idx, err_ref)
+    np.testing.assert_allclose(err, err_ref, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(g, g_ref, rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# rff_pair_mv: fused vs unfused parity, values and grads
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["features", "pallas"])
+@pytest.mark.parametrize("n,m,s", [(128, 64, 2), (130, 48, 1), (96, 128, 3)])
+def test_rff_pair_matches_composition(backend, n, m, s):
+    key = jax.random.PRNGKey(n + m)
+    x = jax.random.normal(key, (n, 4))
+    omega = jax.random.normal(jax.random.fold_in(key, 1), (m, 4))
+    u = jax.random.normal(jax.random.fold_in(key, 2), (n, s))
+    out = rff_pair_mv(x, omega, u, signal=1.2, backend=backend)
+    ref = rff_mv(x, omega,
+                 rff_t_mv(x, omega, u, signal=1.2, backend="features"),
+                 signal=1.2, backend="features")
+    # composition applies √signal twice — same total scaling as the pair
+    assert out.shape == (n, s)
+    np.testing.assert_allclose(out, ref, rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("backend", ["features", "pallas"])
+def test_rff_pair_grads_match_composition(backend):
+    key = jax.random.PRNGKey(11)
+    n, m, s = 96, 48, 2
+    x = jax.random.normal(key, (n, 3))
+    omega = jax.random.normal(jax.random.fold_in(key, 1), (m, 3))
+    u = jax.random.normal(jax.random.fold_in(key, 2), (n, s))
+
+    def loss_fused(x_, om_, u_):
+        return jnp.sum(jnp.cos(rff_pair_mv(x_, om_, u_, backend=backend)))
+
+    def loss_ref(x_, om_, u_):
+        t = rff_t_mv(x_, om_, u_, backend="features")
+        return jnp.sum(jnp.cos(rff_mv(x_, om_, t, backend="features")))
+
+    grads = jax.grad(loss_fused, argnums=(0, 1, 2))(x, omega, u)
+    grads_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(x, omega, u)
+    for got, ref in zip(grads, grads_ref):
+        np.testing.assert_allclose(got, ref, rtol=2e-3, atol=2e-3)
+
+
+def test_feature_operator_pair_threads_backend():
+    p = make_params("se", lengthscale=1.0, d=3)
+    ff = make_fourier_features(p, KEY, 32, 3)
+    x = jax.random.normal(KEY, (64, 3))
+    u = jax.random.normal(jax.random.fold_in(KEY, 1), (64, 2))
+    out = ff.phi_pair_mv(x, u)
+    ref = ff.phi_mv(x, ff.phi_t_mv(x, u))
+    np.testing.assert_allclose(out, ref, rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Mixed precision: bf16 tiles track fp32 within loose tolerance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["chunked", "pallas"])
+def test_gram_pair_bf16_tracks_fp32(backend):
+    params, x, idx, look, b = _pair_problem(n=150, p=24, s=2)
+    err32, g32 = gram_rows_pair(params, x, idx, look, b, backend=backend)
+    err16, g16 = gram_rows_pair(params, x, idx, look, b, backend=backend,
+                                precision="bf16")
+    scale = float(jnp.max(jnp.abs(g32)))
+    np.testing.assert_allclose(err16, err32, atol=5e-2 * max(scale, 1.0))
+    np.testing.assert_allclose(g16, g32, atol=5e-2 * max(scale, 1.0))
+
+
+@pytest.mark.parametrize("backend", ["features", "pallas"])
+def test_rff_pair_bf16_tracks_fp32(backend):
+    key = jax.random.PRNGKey(5)
+    x = jax.random.normal(key, (128, 3))
+    omega = jax.random.normal(jax.random.fold_in(key, 1), (64, 3))
+    u = jax.random.normal(jax.random.fold_in(key, 2), (128, 2))
+    out32 = rff_pair_mv(x, omega, u, backend=backend)
+    out16 = rff_pair_mv(x, omega, u, backend=backend, precision="bf16")
+    scale = float(jnp.max(jnp.abs(out32)))
+    np.testing.assert_allclose(out16, out32, atol=5e-2 * max(scale, 1.0))
+
+
+def test_unknown_precision_rejected():
+    params, x, idx, look, b = _pair_problem(n=128, p=16, s=1)
+    with pytest.raises(ValueError, match="precision"):
+        gram_rows_pair(params, x, idx, look, b, precision="fp16")
+
+
+# ---------------------------------------------------------------------------
+# fp32 is the default everywhere; specs pin precision like backend
+# ---------------------------------------------------------------------------
+
+
+def test_fp32_defaults():
+    assert PRECISIONS[0] == "fp32"
+    params = make_params("se", d=2)
+    op = Gram(x=jnp.zeros((4, 2)), params=params)
+    assert op.precision == "fp32"
+    assert CG().precision is None  # inherits the operator's fp32
+    assert SGD().precision is None
+
+
+def test_spec_pins_precision_through_solve(toy_regression):
+    t = toy_regression
+    op = Gram(x=t["x"], params=t["params"])
+    res32 = solve(op, t["y"], SGD(num_steps=150, batch_size=32,
+                                  num_features=16), key=KEY)
+    res16 = solve(op, t["y"], SGD(num_steps=150, batch_size=32,
+                                  num_features=16, precision="bf16"), key=KEY)
+    scale = float(jnp.max(jnp.abs(res32.solution)))
+    np.testing.assert_allclose(res16.solution, res32.solution,
+                               atol=8e-2 * max(scale, 1.0))
+    with pytest.raises(ValueError, match="precision"):
+        solve(op, t["y"], CG(precision="tf32"))
+
+
+def test_spec_precision_serializes():
+    spec = SGD(num_steps=10, precision="bf16")
+    d = spec.to_json()
+    assert SGD.from_json(d) == spec
