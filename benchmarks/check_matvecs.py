@@ -29,6 +29,15 @@ still recover, and the measured wall overhead must stay under a loose
 anti-regression bound (the committed <2% number comes from ``bench_robust``
 itself; the CI bound is wider because container timing is noisy).
 
+The distributed gate (``bench_distributed``) guards the comm-strategy work
+(``docs/distributed.md``): solver matvec counts per comm strategy are gated
+*exactly* (they are budget-determined — CG pinned below convergence, SGD's one
+finalize residual, AP's zero), the per-matvec collective schedule counted in
+the jaxpr must not exceed the committed baseline, the ring matvec must stage
+zero ``all_gather``, and distributed SGD must trace zero materialised-feature
+dispatches (the (n, 2q) matrix never exists). The measurements run in a forced
+4-device subprocess so the mesh doesn't leak into this process's jax.
+
 Two further gates ride on the same smoke run:
 
 * **wall-clock per iteration** — bench_solvers times a 200-step stochastic
@@ -50,6 +59,7 @@ Usage:
         [--mll-baseline results/BENCH_bench_mll.json | --skip-mll] \
         [--serve-baseline results/BENCH_bench_serve.json | --skip-serve] \
         [--robust-baseline results/BENCH_bench_robust.json | --skip-robust] \
+        [--distributed-baseline results/BENCH_bench_distributed.json | --skip-distributed] \
         [--autotune-table results/AUTOTUNE_gram.json | --skip-autotune] \
         [--slack 0.15] [--walltime-slack 1.0 | --skip-walltime]
 
@@ -65,7 +75,7 @@ import sys
 
 from repro.kernels import autotune
 
-from . import bench_mll, bench_robust, bench_serve, bench_solvers
+from . import bench_distributed, bench_mll, bench_robust, bench_serve, bench_solvers
 from .common import Report
 
 
@@ -136,6 +146,20 @@ def main(argv=None) -> int:
         "--robust-overhead-pct", type=float, default=10.0,
         help="max measured happy-path wall overhead of solve_robust (loose "
         "CI bound; the committed <2%% number lives in bench_robust itself)",
+    )
+    ap.add_argument(
+        "--distributed-baseline",
+        default="results/BENCH_bench_distributed.json",
+        help="committed bench_distributed JSON: solver matvec counts per comm "
+        "strategy are gated EXACTLY (zero slack — they are budget-determined), "
+        "collectives-per-matvec must not exceed the baseline, and the fresh "
+        "run must show zero all_gather on the ring path and zero "
+        "materialised-feature traces in distributed SGD",
+    )
+    ap.add_argument(
+        "--skip-distributed", action="store_true",
+        help="skip the distributed comm-strategy gate (spawns a forced "
+        "4-device subprocess)",
     )
     ap.add_argument(
         "--slack", type=float, default=0.15,
@@ -329,6 +353,66 @@ def main(argv=None) -> int:
                 if not rec:
                     failures.append((("robust_recovery", r.method,
                                       "recovered"), 1, 0))
+
+    if not args.skip_distributed:
+        with open(args.distributed_baseline) as f:
+            dist_rows = json.load(f)["rows"]
+        base_dist_mv = {
+            k: v for k, v in _metric_rows(dist_rows, "matvecs").items()
+            if k[0] == "dist_solve"
+        }
+        base_dist_coll = {
+            k: v for k, v in _metric_rows(dist_rows, "collectives").items()
+            if k[0] == "dist_collectives"
+        }
+        if not base_dist_mv or not base_dist_coll:
+            print(f"ERROR: no dist_solve/dist_collectives rows in "
+                  f"{args.distributed_baseline}", file=sys.stderr)
+            return 2
+        dist_report = Report()
+        bench_distributed.run(dist_report, full=False, smoke=True)
+        # matvec counts per comm strategy are budget-determined (CG pinned
+        # below convergence, SGD's single finalize residual, AP's zero) —
+        # exact, zero slack
+        c5, f5 = _gate(
+            f"distributed matvecs vs {args.distributed_baseline}",
+            base_dist_mv, _metric_rows(dist_report.rows, "matvecs"), 0.0,
+        )
+        # the collective schedule may only shrink: a refactor that sneaks an
+        # extra gather/psum into the matvec shows up here
+        c6, f6 = _gate(
+            f"distributed collectives/matvec vs {args.distributed_baseline}",
+            base_dist_coll, _metric_rows(dist_report.rows, "collectives"), 0.0,
+        )
+        if c5 == 0 or c6 == 0:
+            print("ERROR: no comparable distributed rows between baseline and "
+                  "fresh run", file=sys.stderr)
+            return 2
+        compared += c5 + c6
+        failures += f5 + f6
+        # structural gates on the fresh run itself (baseline-independent): the
+        # ring matvec stages ZERO all_gather, and distributed SGD never
+        # materialises the (n, 2q) feature matrix on either comm path
+        print("\ndistributed structural gate:")
+        for r in dist_report.rows:
+            m = r.metrics
+            if r.table == "dist_collectives" and r.method == "mv_ring":
+                ag = int(m.get("all_gather", -1))
+                print(f"  ring all_gather/mv={ag}  "
+                      f"{'ok' if ag == 0 else 'REGRESSION'}")
+                compared += 1
+                if ag != 0:
+                    failures.append(((r.table, r.method, "all_gather"), 0, ag))
+            if r.table == "dist_solve" and r.method.startswith("sgd_"):
+                mat = int(m.get("feature_traces_materialised", -1))
+                fused = int(m.get("feature_traces_fused", 0))
+                ok_feat = mat == 0 and fused > 0
+                print(f"  {r.method} materialised_feature_traces={mat} "
+                      f"fused={fused}  {'ok' if ok_feat else 'REGRESSION'}")
+                compared += 1
+                if not ok_feat:
+                    failures.append(((r.table, r.method,
+                                      "feature_traces_materialised"), 0, mat))
 
     if failures:
         print(f"\n{len(failures)} count regression(s):", file=sys.stderr)

@@ -27,6 +27,7 @@ BENCHES = [
     "bench_thompson",  # Figures 3.7 / 4.4
     "bench_serve",  # serving engine: continuous batching + warm starts
     "bench_robust",  # guardrail overhead + escalation-ladder recovery
+    "bench_distributed",  # ring vs gather comm strategies (4-device subprocess)
     "bench_molecules",  # Table 4.2
     "bench_gram_kernel",  # Pallas tile sweep
     "bench_roofline",  # §Roofline (reads dry-run JSONL)

@@ -6,14 +6,24 @@ multi-pod) — a block-row distribution of K, wrapped as the
 its K-block matvec without materialising the block through the same backend
 dispatch as the single-host path (fused Pallas kernel on TPU, chunked JAX
 elsewhere — ``pallas``/``chunked``/``dense`` threaded through the shards), and
-the solver's reductions become ``psum``/``all_gather`` collectives over the data
-axes.
+the solver's reductions become mesh collectives over the data axes.
+
+``comm`` selects the collective schedule (docs/distributed.md): ``"gather"``
+all-gathers the sharded inputs around each matvec (communication strictly
+precedes compute; vectors replicated), ``"ring"`` pipelines ``ppermute`` shard
+rotations against the per-shard fused contraction — communication overlaps
+compute, the O(n·d) replicated panel never exists, zero per-matvec
+``all_gather``, and solver iterates stay row-sharded through the CG loop (psum
+inner products, sharded axpys: O(n·s/P) vector memory per device) — and
+``"auto"`` picks ring once the replicated panel exceeds a per-device byte
+budget.
 
 Because ShardedGram implements the full capability set — including the sharded
-row-gather primitives ``rows_mv``/``rows_t_mv``/``block_at`` — ANY SolverSpec
-runs distributed: CG (with Nyström/pivoted-Cholesky preconditioning via
-``precond_factor``), SGD, SDD and AP, all with warm starts, the δ channel and
-matvec accounting. Memory per device: O(n_local · chunk) — the paper's
+row-gather primitives ``rows_mv``/``rows_t_mv``/``block_at`` and the
+``wrap_features`` mesh-awareness hook SGD's regulariser consumes — ANY
+SolverSpec runs distributed: CG (with Nyström/pivoted-Cholesky preconditioning
+via ``precond_factor``), SGD, SDD and AP, all with warm starts, the δ channel
+and matvec accounting. Memory per device: O(n_local · chunk) — the paper's
 linear-memory claim, per device. CG iterations are bulk-synchronous; SGD/SDD
 steps tolerate stale coordinates and back the straggler-tolerant mode.
 """
@@ -25,9 +35,9 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .kernels_fn import KernelParams
-from .operators import ShardedGram
+from .operators import COMM_STRATEGIES, ShardedGram
 from .solvers.base import SolveResult
-from .solvers.spec import SpecLike, solve
+from .solvers.spec import SpecLike, as_spec, solve
 
 
 def shard_training_rows(mesh: Mesh, x: jax.Array, data_axes=("data",)) -> jax.Array:
@@ -48,24 +58,54 @@ def distributed_solve(
     backend: str = "auto",
     row_chunk: int = 2048,
     gather_once: bool = False,
+    comm: str = "gather",
+    comm_budget_bytes: Optional[int] = None,
 ) -> SolveResult:
     """Spec-driven front door for sharded solves — ``solve(ShardedGram, …)``.
 
     ``x`` should be row-sharded over ``data_axes`` (see
-    :func:`shard_training_rows`); ``b`` (and ``x0``/``delta``) are replicated.
-    Any registered SolverSpec works — stochastic specs need ``key=`` exactly as
-    in the single-host ``solve()`` — and the spec's ``backend`` field pins the
-    per-shard kernel backend. ``gather_once=True`` replicates the sharded
-    inputs once per solve (``solve()`` calls the operator's
-    ``prepare_for_solve`` hook outside the solver loop) instead of
-    all-gathering them on every matvec — an O(n·d) per-device memory cost that
-    removes one collective per solver iteration; use when the replicated input
-    panel fits. Returns the full :class:`SolveResult` (solution, residuals,
-    iteration and matvec counts).
+    :func:`shard_training_rows`); ``b`` (and ``x0``/``delta``) are replicated
+    or row-sharded. Any registered SolverSpec works — stochastic specs need
+    ``key=`` exactly as in the single-host ``solve()`` — and the spec's
+    ``backend`` field pins the per-shard kernel backend.
+
+    ``comm`` picks the collective schedule (``"gather"``/``"ring"``/``"auto"``,
+    see :class:`~repro.core.operators.ShardedGram`). Under ``ring``, matvec-only
+    specs (the CG family) get their RHS and warm start re-sharded over
+    ``data_axes`` so every solver iterate stays row-sharded through the loop.
+    ``gather_once=True`` replicates the sharded inputs once per solve
+    (``solve()`` calls the operator's ``prepare_for_solve`` hook outside the
+    solver loop) instead of all-gathering them on every matvec — an O(n·d)
+    per-device memory cost that removes one collective per solver iteration;
+    use when the replicated input panel fits. It is the opposite trade to
+    ``ring``, so combining them raises ``ValueError``. Returns the full
+    :class:`SolveResult` (solution, residuals, iteration and matvec counts).
     """
+    if comm not in COMM_STRATEGIES:
+        raise ValueError(
+            f"unknown comm strategy {comm!r}; expected one of {COMM_STRATEGIES}"
+        )
+    if comm == "ring" and gather_once:
+        raise ValueError(
+            "gather_once=True pre-replicates the O(n·d) input panel that "
+            "comm='ring' exists to avoid — drop one of them (comm='auto' "
+            "resolves to gather when gather_once is set)"
+        )
     axes = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+    kwargs = {} if comm_budget_bytes is None else dict(
+        comm_budget_bytes=comm_budget_bytes
+    )
     op = ShardedGram(
         x=x, params=params, mesh=mesh, data_axes=axes, backend=backend,
-        row_chunk=row_chunk, gather_once=gather_once,
+        row_chunk=row_chunk, gather_once=gather_once, comm=comm, **kwargs,
     )
+    if op._resolve_comm() == "ring" and not as_spec(spec).needs:
+        # matvec-only (CG-family) spec: shard the RHS/warm start so the ring
+        # mv's sharded outputs and the while_loop carries agree from step one —
+        # per-device vector memory O(n·s/P) instead of replicated
+        shard = lambda v: (
+            None if v is None
+            else jax.device_put(v, NamedSharding(mesh, P(axes, *([None] * (v.ndim - 1)))))
+        )
+        b, x0, delta = shard(b), shard(x0), shard(delta)
     return solve(op, b, spec, key=key, x0=x0, delta=delta)

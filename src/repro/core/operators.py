@@ -59,6 +59,7 @@ reused), while meshes, backends and chunk sizes are static fields.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import TYPE_CHECKING, Optional
 
 import jax
@@ -589,6 +590,30 @@ class LatentKroneckerOp(_InstrumentedOp):
 # ShardedGram — mesh-aware block-row Gram operator
 # ---------------------------------------------------------------------------
 
+#: Communication strategies for :class:`ShardedGram` (docs/distributed.md).
+#: ``gather`` all-gathers the sharded inputs (or vectors) around each matvec;
+#: ``ring`` pipelines ``ppermute`` shard rotations against the per-shard fused
+#: contraction so the O(n·d) replicated panel never exists and no per-matvec
+#: ``all_gather`` is staged; ``auto`` picks ring once the replicated panel
+#: would exceed the operator's per-device byte budget.
+COMM_STRATEGIES = ("gather", "ring", "auto")
+
+
+def _psum_row_gather(x_local, idx, axes):
+    """``x_full[idx]`` without replicating x: every device contributes the
+    ``idx`` rows that live in its shard (others zeroed) and a psum reduces.
+
+    The collective moves O(|idx|·d) bytes instead of the O(n·d) ``all_gather``
+    the gather strategy pays to index the global inputs. Assumes the canonical
+    block-row layout (device i holds rows [i·n_local, (i+1)·n_local))."""
+    i = jax.lax.axis_index(axes)
+    n_local = x_local.shape[0]
+    rel = idx - i * n_local
+    mask = (rel >= 0) & (rel < n_local)
+    safe = jnp.clip(rel, 0, n_local - 1)
+    part = jnp.where(mask[:, None], x_local[safe], jnp.zeros((1, 1), x_local.dtype))
+    return jax.lax.psum(part, axes)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -599,14 +624,39 @@ class ShardedGram(_InstrumentedOp):
     without materialising the block — the local contraction runs through the
     same backend dispatch as :class:`Gram` (``pallas``/``chunked``/``dense``),
     so the fused Pallas kernel is threaded through the shards — and results are
-    combined with ``all_gather``/``psum`` collectives. Vectors (RHS batches,
-    iterates) are replicated.
+    combined with mesh collectives.
+
+    ``comm`` selects the collective schedule (see :data:`COMM_STRATEGIES` and
+    docs/distributed.md):
+
+    * ``"gather"`` (default) — every ``mv`` all-gathers the sharded inputs
+      before contracting its block row; vectors (RHS batches, iterates) are
+      replicated. The O(n·d) input panel transits the interconnect per matvec
+      (or is cached by ``gather_once``), and communication strictly precedes
+      compute.
+    * ``"ring"`` — the collective-matmul idiom: ``(K+σ²I)v`` decomposes into P
+      pipeline stages, each device contracting K(x_local, x_peer) @ v_peer
+      against the shard pair it currently holds while ``jax.lax.ppermute``
+      rotates the next (x_peer, v_peer) around the ring — the stage-t+1
+      permute overlaps the stage-t contraction under XLA's latency-hiding
+      scheduler, the replicated panel never exists, and no per-matvec
+      ``all_gather`` is staged. Inputs AND vectors stay row-sharded end to
+      end (``mv`` maps sharded → sharded), so solver iterates threaded through
+      it keep per-device O(n·s/P) footprint; row gathers go through an
+      O(|idx|·d) masked psum instead of replicating x.
+    * ``"auto"`` — ring once the replicated (n, d) panel exceeds
+      ``comm_budget_bytes`` per device, gather otherwise.
 
     Implements the full capability set, including the *sharded row-gather*
     primitives that let SGD/SDD/AP specs run distributed: ``rows_mv`` psum-
     reduces per-device column-block contributions K(x[idx], x_local) @ u_local,
-    ``rows_t_mv`` all-gathers per-device row blocks, and ``block_at`` gathers
-    the |idx|×|idx| principal block from the global (sharded) inputs.
+    ``rows_t_mv`` computes per-device row blocks (all-gathered under ``gather``,
+    left row-sharded under ``ring``), and ``block_at`` gathers the |idx|×|idx|
+    principal block from the global (sharded) inputs. ``wrap_features`` is the
+    mesh-awareness capability the SGD regulariser consumes: it shard_map-wraps
+    a :class:`FeatureOperator` over this operator's mesh so the fused RFF pair
+    step runs distributed without materialising the (n, 2q) feature matrix
+    (see :class:`~repro.core.rff.ShardedFourierFeatures`).
 
     ``gather_once=True`` trades memory for collectives: instead of all-gathering
     the sharded inputs on *every* matvec (an O(n·d) collective per solver
@@ -614,11 +664,13 @@ class ShardedGram(_InstrumentedOp):
     outside the solver's while_loop/scan — replicates them into ``x_full``, and
     every subsequent ``mv``/``rows_mv``/``rows_t_mv`` reads the cached panel.
     Use it when the replicated (n, d) panel fits device memory (d is small; the
-    K blocks still never materialise). Default off: the per-matvec gather keeps
-    the strict per-device O(n_local·d) input footprint.
+    K blocks still never materialise). Incompatible with ``comm="ring"`` (whose
+    whole point is that the replicated panel never exists) — the combination
+    raises ``ValueError``; ``comm="auto"`` + ``gather_once`` resolves to gather.
 
     Memory per device: O(n_local · chunk) — the paper's linear-memory claim,
-    per device (plus O(n·d) with ``gather_once``).
+    per device (plus O(n·d) with ``gather_once``; O(n·s/P) solver vectors
+    under ``ring`` vs O(n·s) replicated under ``gather``).
     """
 
     x: jax.Array  # (n, d) training inputs, row-sharded over data_axes
@@ -633,6 +685,25 @@ class ShardedGram(_InstrumentedOp):
     # replicated input panel, populated by prepare_for_solve() when gather_once
     x_full: Optional[jax.Array] = None
     gather_once: bool = dataclasses.field(default=False, metadata=dict(static=True))
+    comm: str = dataclasses.field(default="gather", metadata=dict(static=True))
+    # "auto" switches to ring when the replicated (n, d) panel exceeds this
+    comm_budget_bytes: int = dataclasses.field(
+        default=128 * 2**20, metadata=dict(static=True)
+    )
+
+    def __post_init__(self):
+        if self.comm not in COMM_STRATEGIES:
+            raise ValueError(
+                f"unknown comm strategy {self.comm!r}; expected one of "
+                f"{COMM_STRATEGIES}"
+            )
+        if self.comm == "ring" and self.gather_once:
+            raise ValueError(
+                "gather_once=True replicates the O(n·d) input panel that "
+                "comm='ring' exists to avoid — pick one: gather_once with "
+                "comm='gather', or comm='ring' alone (comm='auto' resolves "
+                "to gather when gather_once is set)"
+            )
 
     @property
     def n(self) -> int:
@@ -653,6 +724,37 @@ class ShardedGram(_InstrumentedOp):
             block=self.block, row_chunk=self.row_chunk, precision=self.precision,
         )
 
+    def _mesh_size(self) -> int:
+        """Number of shards along ``data_axes`` (the ring's pipeline depth P)."""
+        return math.prod(self.mesh.shape[a] for a in self.data_axes)
+
+    def _resolve_comm(self) -> str:
+        """The effective strategy: ``auto`` → ring once the replicated (n, d)
+        panel would exceed ``comm_budget_bytes`` per device (with ``gather_once``
+        the user already asked for the panel, so auto resolves to gather)."""
+        if self.comm != "auto":
+            return self.comm
+        if self.gather_once or self._mesh_size() == 1:
+            return "gather"
+        panel_bytes = self.x.shape[0] * self.x.shape[1] * self.x.dtype.itemsize
+        return "ring" if panel_bytes > self.comm_budget_bytes else "gather"
+
+    def _gather_rows(self, idx: jax.Array) -> jax.Array:
+        """x[idx] as a replicated (|idx|, d) panel without replicating x: a
+        masked psum over the canonical block-row layout (ring strategy), the
+        cached ``x_full`` (gather_once), or a plain take (gather, where the
+        partitioner stages its own gather of the small panel)."""
+        if self.x_full is not None:
+            return jnp.take(self.x_full, idx, axis=0)
+        if self._resolve_comm() != "ring":
+            return jnp.take(self.x, idx, axis=0)
+        axes = self.data_axes
+        return shard_map(
+            lambda x_local, idx_rep: _psum_row_gather(x_local, idx_rep, axes),
+            mesh=self.mesh, in_specs=(P(axes, None), P(None)),
+            out_specs=P(None, None), check_rep=False,
+        )(self.x, idx)
+
     def prepare_for_solve(self) -> "ShardedGram":
         """Per-solve setup hook (called once by ``solve()``, outside the solver
         loop): with ``gather_once``, replicate the sharded inputs into
@@ -665,12 +767,44 @@ class ShardedGram(_InstrumentedOp):
         return dataclasses.replace(self, x_full=x_full)
 
     def mv(self, v: jax.Array) -> jax.Array:
-        """(K + σ²I) @ v: per-device block-row matvec + all_gather of the
-        result. v replicated; the input panel comes from ``x_full`` when
-        pre-gathered, else a per-matvec all_gather."""
+        """(K + σ²I) @ v under the resolved comm strategy.
+
+        gather: per-device block-row matvec + all_gather of the result. v
+        replicated; the input panel comes from ``x_full`` when pre-gathered,
+        else a per-matvec all_gather. ring: P pipeline stages of
+        K(x_local, x_peer) @ v_peer with ``ppermute`` rotating the next shard
+        pair while the current one contracts — zero ``all_gather`` in the
+        jaxpr, and the result stays row-sharded."""
         axes = self.data_axes
         squeeze = v.ndim == 1
         v2 = v[:, None] if squeeze else v
+
+        if self._resolve_comm() == "ring":
+            p_size = self._mesh_size()
+            perm = [((j + 1) % p_size, j) for j in range(p_size)]
+
+            def ring_body(x_local, v_local):
+                # Stage t contracts the shard pair this device holds while the
+                # permute for stage t+1 is already in flight — issuing the
+                # ppermute *before* the contraction lets XLA's latency-hiding
+                # scheduler overlap the rotation with the fused block matvec.
+                acc = self.params.noise * v_local
+                x_peer, v_peer = x_local, v_local
+                for t in range(p_size):
+                    if t + 1 < p_size:
+                        nxt = jax.lax.ppermute((x_peer, v_peer), axes, perm)
+                    acc = acc + self._local_mv(x_local, x_peer, v_peer)
+                    if t + 1 < p_size:
+                        x_peer, v_peer = nxt
+                return acc
+
+            out = shard_map(
+                ring_body, mesh=self.mesh,
+                in_specs=(P(axes, None), P(axes, None)),
+                out_specs=P(axes, None), check_rep=False,
+            )(self.x, v2)
+            self._count(_bump_mv, out)
+            return out[:, 0] if squeeze else out
 
         def block_row(x_local, x_all, v_all):
             i = jax.lax.axis_index(axes)
@@ -701,7 +835,9 @@ class ShardedGram(_InstrumentedOp):
     def rows_mv(self, idx: jax.Array, u: jax.Array) -> jax.Array:
         """K[idx, :] @ u — sharded row-gather: each device contracts its column
         block K(x[idx], x_local) @ u_local; a psum over the data axes reduces.
-        idx and u are replicated; output is replicated (|idx|, s-like)."""
+        idx is replicated; output is replicated (|idx|, s-like). Under ring the
+        idx panel comes from an O(|idx|·d) masked psum instead of an all_gather
+        of x, and u may arrive row-sharded (SGD iterates)."""
         axes = self.data_axes
         squeeze = u.ndim == 1
         u2 = u[:, None] if squeeze else u
@@ -720,6 +856,17 @@ class ShardedGram(_InstrumentedOp):
                 in_specs=(P(axes, None), P(None, None), P(None, None)),
                 out_specs=P(None, None), check_rep=False,
             )(self.x, xi, u2)
+        elif self._resolve_comm() == "ring":
+            def body_ring(x_local, idx_rep, u_local):
+                xi = _psum_row_gather(x_local, idx_rep, axes)
+                part = self._local_mv(xi, x_local, u_local)
+                return jax.lax.psum(part, axes)
+
+            out = shard_map(
+                body_ring, mesh=self.mesh,
+                in_specs=(P(axes, None), P(None), P(axes, None)),
+                out_specs=P(None, None), check_rep=False,
+            )(self.x, idx, u2)
         else:
             def body(x_local, idx_rep, u_all):
                 x_all = jax.lax.all_gather(x_local, axes, tiled=True)
@@ -735,7 +882,11 @@ class ShardedGram(_InstrumentedOp):
 
     def rows_t_mv(self, idx: jax.Array, u: jax.Array) -> jax.Array:
         """K[idx, :]ᵀ @ u = K[:, idx] @ u — each device computes its row block
-        K(x_local, x[idx]) @ u and the blocks are all-gathered. → (n, s-like)."""
+        K(x_local, x[idx]) @ u. Under gather the blocks are all-gathered to a
+        replicated (n, s-like); under ring the idx panel comes from the masked
+        psum and the output *stays row-sharded* — the all_gather this
+        primitive used to pay per SGD step is gone, and downstream axpys on
+        the iterate run shard-local."""
         axes = self.data_axes
         squeeze = u.ndim == 1
         u2 = u[:, None] if squeeze else u
@@ -751,6 +902,16 @@ class ShardedGram(_InstrumentedOp):
                 in_specs=(P(axes, None), P(None, None), P(None, None)),
                 out_specs=P(None, None), check_rep=False,
             )(self.x, xi, u2)
+        elif self._resolve_comm() == "ring":
+            def body_ring(x_local, idx_rep, u_rep):
+                xi = _psum_row_gather(x_local, idx_rep, axes)
+                return self._local_mv(x_local, xi, u_rep)
+
+            out = shard_map(
+                body_ring, mesh=self.mesh,
+                in_specs=(P(axes, None), P(None), P(None, None)),
+                out_specs=P(axes, None), check_rep=False,
+            )(self.x, idx, u2)
         else:
             def body(x_local, idx_rep, u_rep):
                 x_all = jax.lax.all_gather(x_local, axes, tiled=True)
@@ -774,9 +935,23 @@ class ShardedGram(_InstrumentedOp):
 
     def block_at(self, idx: jax.Array) -> jax.Array:
         """K[idx, idx] — gathered from the global (sharded) inputs; the |idx|×d
-        gather and |idx|² block are small and land replicated."""
-        xi = jnp.take(self.x_full if self.x_full is not None else self.x, idx, axis=0)
+        panel and |idx|² block are small and land replicated. Under ring the
+        panel comes from the masked psum (no all_gather of x)."""
+        xi = self._gather_rows(idx)
         return gram(self.params, xi, xi)
+
+    def wrap_features(self, ff: "FourierFeatures"):
+        """Mesh-awareness capability (``supports(op, "wrap_features")``): wrap a
+        feature operator so its phi_mv/phi_t_mv/phi_pair_mv run shard_map-ped
+        over this operator's mesh — row-sharded x, psum-reduced transposes, the
+        fused per-shard kernels (and their custom VJPs) intact, and the (n, 2q)
+        feature matrix never materialised. SGD's regulariser consumes this to
+        run its Eq. 3.3 pair step distributed."""
+        from .rff import ShardedFourierFeatures  # deferred: rff imports this module
+
+        return ShardedFourierFeatures(
+            inner=ff, mesh=self.mesh, data_axes=self.data_axes
+        )
 
     def diag_part(self) -> jax.Array:
         return gram_diag(self.params, self.x) + self.noise

@@ -126,6 +126,106 @@ class FourierFeatures(FeatureOperator):
                            precision=precision or self.precision)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedFourierFeatures(FeatureOperator):
+    """A :class:`FourierFeatures` shard_map-ped over a device mesh — the
+    distributed SGD regulariser path (ROADMAP item 2a, closed).
+
+    ``x`` arrives row-sharded over ``data_axes`` and every contraction runs the
+    *fused* per-shard kernels — custom VJPs intact, so the regulariser gradient
+    differentiates through the sharded path exactly like the single-device one:
+
+    * ``phi_mv``      — embarrassingly parallel: Φ(x_local) @ w per shard with
+      ``w`` replicated; the (n, s) result stays row-sharded, zero collectives;
+    * ``phi_t_mv``    — Φ(x_local)ᵀ @ u_local per shard, one psum reduces the
+      (F, s) partials (the transpose's only collective);
+    * ``phi_pair_mv`` — the Eq. 3.3 composition: per-shard pullback, psum of
+      the small (F, s) intermediate, per-shard push-forward — row-sharded out.
+
+    The (n, 2q) feature matrix never materialises (per-shard the fused kernels
+    keep features in VMEM; the ``features`` capability is deliberately absent),
+    and the only data crossing the interconnect is the (F, s) intermediate.
+    Constructed by ``ShardedGram.wrap_features`` — the mesh-awareness
+    capability SGD discovers via ``supports(op, "wrap_features")``.
+    """
+
+    inner: FourierFeatures
+    mesh: jax.sharding.Mesh = dataclasses.field(metadata=dict(static=True))
+    data_axes: tuple = dataclasses.field(default=("data",), metadata=dict(static=True))
+
+    @property
+    def num_features(self) -> int:
+        return self.inner.num_features
+
+    def _shard_map(self, body, in_specs, out_specs):
+        from jax.experimental.shard_map import shard_map  # local: keeps rff importable early
+        from jax.sharding import PartitionSpec as P
+
+        return shard_map(
+            body, mesh=self.mesh,
+            in_specs=tuple(P(*s) for s in in_specs),
+            out_specs=P(*out_specs), check_rep=False,
+        )
+
+    def phi_mv(self, x: jax.Array, w: jax.Array, *, backend: Optional[str] = None,
+               precision: Optional[str] = None) -> jax.Array:
+        """Φ(x) @ w with x row-sharded, w replicated → row-sharded (n, s-like).
+        No collective: each shard evaluates its own feature rows."""
+        axes = self.data_axes
+        squeeze = w.ndim == 1
+        w2 = w[:, None] if squeeze else w
+
+        def body(x_local, w_rep):
+            return self.inner.phi_mv(x_local, w_rep, backend=backend,
+                                     precision=precision)
+
+        out = self._shard_map(
+            body, in_specs=((axes, None), (None, None)), out_specs=(axes, None)
+        )(x, w2)
+        return out[:, 0] if squeeze else out
+
+    def phi_t_mv(self, x: jax.Array, u: jax.Array, *, backend: Optional[str] = None,
+                 precision: Optional[str] = None) -> jax.Array:
+        """Φ(x)ᵀ @ u → replicated (F, s-like): per-shard fused pullback on the
+        local rows, psum-reduced over the data axes."""
+        axes = self.data_axes
+        squeeze = u.ndim == 1
+        u2 = u[:, None] if squeeze else u
+
+        def body(x_local, u_local):
+            t = self.inner.phi_t_mv(x_local, u_local, backend=backend,
+                                    precision=precision)
+            return jax.lax.psum(t, axes)
+
+        out = self._shard_map(
+            body, in_specs=((axes, None), (axes, None)), out_specs=(None, None)
+        )(x, u2)
+        return out[:, 0] if squeeze else out
+
+    def phi_pair_mv(self, x: jax.Array, u: jax.Array, *,
+                    backend: Optional[str] = None,
+                    precision: Optional[str] = None) -> jax.Array:
+        """Φ(x) (Φ(x)ᵀ u) in one shard_map: fused pullback, psum of the (F, s)
+        intermediate — the only bytes on the wire — fused push-forward.
+        Row-sharded in, row-sharded out."""
+        axes = self.data_axes
+        squeeze = u.ndim == 1
+        u2 = u[:, None] if squeeze else u
+
+        def body(x_local, u_local):
+            t = self.inner.phi_t_mv(x_local, u_local, backend=backend,
+                                    precision=precision)
+            t = jax.lax.psum(t, axes)
+            return self.inner.phi_mv(x_local, t, backend=backend,
+                                     precision=precision)
+
+        out = self._shard_map(
+            body, in_specs=((axes, None), (axes, None)), out_specs=(axes, None)
+        )(x, u2)
+        return out[:, 0] if squeeze else out
+
+
 def make_fourier_features(
     params: KernelParams, key: jax.Array, num_features: int, d: int, paired: bool = True
 ) -> FourierFeatures:

@@ -19,13 +19,17 @@ Both terms run as *pair* primitives — one dispatch each per step instead of tw
 The data-fit term uses the operator's ``rows_pair_mv`` capability when present
 (``err = K[idx,:] @ look − b``, ``g = K[idx,:]ᵀ @ err`` off a single panel
 build; see kernels/ops.gram_rows_pair), falling back to the ``rows_mv`` +
-``rows_t_mv`` composition on operators without it (``ShardedGram``). The
-regulariser runs through ``phi_pair_mv`` — Φ(Φᵀ(v − δ)) as ONE fused kernel
-whose (2q, s) intermediate never leaves VMEM on the Pallas backend, and one
-materialise-once contraction pair elsewhere — dispatched through the same
-backend/precision as the operator's Gram matvecs (fresh features every step
-made this the dominant non-row cost). Because the features are a pytree with
-step-independent shapes, the fused path stages once for the whole scan.
+``rows_t_mv`` composition on operators without it. The regulariser runs through
+``phi_pair_mv`` — Φ(Φᵀ(v − δ)) as ONE fused kernel whose (2q, s) intermediate
+never leaves VMEM on the Pallas backend, and one materialise-once contraction
+pair elsewhere — dispatched through the same backend/precision as the
+operator's Gram matvecs (fresh features every step made this the dominant
+non-row cost). Mesh-sharded operators declare ``wrap_features`` and the fresh
+draw is shard_map-wrapped over the mesh (ShardedFourierFeatures): the fused
+pair step runs per shard with a psum-reduced transpose — the (n, 2q) feature
+matrix never materialises, distributed included. Because the features are a
+pytree with step-independent shapes, the fused path stages once for the whole
+scan.
 
 Uses Nesterov momentum + arithmetic tail (Polyak) averaging, per §3.3.
 """
@@ -82,16 +86,15 @@ def solve_sgd(
     lr = step_size_times_n / n
     tail_start = int(num_steps * (1.0 - average_tail))
     # the regulariser's feature matvecs follow the operator's backend (pinned by
-    # the spec through solve(), like the Gram matvecs) — EXCEPT on mesh-sharded
-    # operators: pallas_call does not partition a row-sharded x under GSPMD, so
-    # the distributed path keeps the materialised-feature contraction (plain ops,
-    # partitionable) until the fused kernel is shard_map-wrapped (ROADMAP).
-    if hasattr(op, "mesh"):
-        feat_backend = "features"
-    else:
-        feat_backend = getattr(op, "backend", "auto") or "auto"
+    # the spec through solve(), like the Gram matvecs). Mesh-sharded operators
+    # declare the ``wrap_features`` capability: the fresh feature draw is
+    # shard_map-wrapped over the operator's mesh so the fused pair step runs
+    # per shard (psum-reduced transpose, custom VJPs intact) — same fused path,
+    # distributed, no materialised-feature fallback.
+    feat_backend = getattr(op, "backend", "auto") or "auto"
     feat_precision = getattr(op, "precision", "fp32") or "fp32"
     fused_pair = supports(op, "rows_pair_mv")
+    wrap = op.wrap_features if supports(op, "wrap_features") else (lambda ff: ff)
 
     def step(carry, t):
         v, mom, avg, cnt, fl = carry
@@ -110,13 +113,13 @@ def solve_sgd(
         # fresh unbiased feature draw (ΦΦᵀ ≈ K): ONE fused pair feature matvec
         # (phi_pair_mv) — Φ (n, 2q) never materialised on pallas, and the
         # (2q, s) intermediate t = Φᵀ(look − δ) never leaves VMEM
-        ff = FourierFeatures(
+        ff = wrap(FourierFeatures(
             omega=spectral_sample(op.params, kf, num_features, d),
             phase=jnp.zeros((num_features,)),
             signal=op.params.signal,
             backend=feat_backend,
             precision=feat_precision,
-        )
+        ))
         g_reg = sigma2 * ff.phi_pair_mv(op.x, look - delta2)
         g = g_fit + g_reg
         gn = jnp.linalg.norm(g, axis=0, keepdims=True)

@@ -1,0 +1,265 @@
+"""Ring-overlapped sharded matvecs (core/operators.py ShardedGram comm="ring").
+
+Four-device subprocess tests (forced CPU host platform, so the mesh doesn't
+leak into the main test process): ring-vs-gather parity on every primitive,
+zero ``all_gather`` in the ring jaxpr, solver matvec accounting unchanged
+across comm strategies, and the trace-counter proof that distributed SGD runs
+the fused feature pair step without materialising the (n, 2q) feature matrix.
+Validation of the comm flag surface runs in-process on a 1-device mesh.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+def _run_on_devices(code: str, devices: int = 4) -> None:
+    header = (
+        "import os\n"
+        f'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"\n'
+        'os.environ["JAX_PLATFORMS"] = "cpu"\n'
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", header + textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=600,
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+    )
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-4000:])
+    assert "OK" in r.stdout
+
+
+def test_ring_parity_and_zero_all_gather():
+    """comm="ring" matches comm="gather" on every primitive (≤1e-5) with zero
+    ``all_gather`` in the jaxpr — the collective is P-1 ``ppermute`` stages —
+    and the ring mv's output stays row-sharded (O(n·s/P) per device)."""
+    _run_on_devices("""
+        import re
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import ShardedGram, make_params
+        from repro.core.distributed import shard_training_rows
+
+        mesh = jax.make_mesh((4,), ("data",))
+        n, d, s = 128, 3, 2
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (n, d))
+        v = jax.random.normal(jax.random.fold_in(key, 1), (n, s))
+        p = make_params("se", lengthscale=0.9, noise=0.3, d=d)
+        xs = shard_training_rows(mesh, x)
+        op_g = ShardedGram(x=xs, params=p, mesh=mesh)
+        op_r = ShardedGram(x=xs, params=p, mesh=mesh, comm="ring")
+
+        # mv parity (the acceptance bound) and sharded output
+        mg, mr = op_g.mv(v), op_r.mv(v)
+        np.testing.assert_allclose(np.asarray(mr), np.asarray(mg),
+                                   atol=1e-5, rtol=1e-5)
+        assert not mr.sharding.is_fully_replicated, mr.sharding
+        assert mg.sharding.is_fully_replicated, mg.sharding
+
+        # row primitives and the principal block
+        idx = jax.random.randint(jax.random.fold_in(key, 2), (16,), 0, n)
+        u = jax.random.normal(jax.random.fold_in(key, 3), (16, s))
+        np.testing.assert_allclose(np.asarray(op_r.rows_mv(idx, v)),
+                                   np.asarray(op_g.rows_mv(idx, v)),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(op_r.rows_t_mv(idx, u)),
+                                   np.asarray(op_g.rows_t_mv(idx, u)),
+                                   atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(op_r.block_at(idx)),
+                                   np.asarray(op_g.block_at(idx)),
+                                   atol=1e-5, rtol=1e-5)
+
+        # the collective schedule: zero all_gather anywhere on the ring path,
+        # P-1 ppermute stages (each rotating the (x_peer, v_peer) pair)
+        for fn, a in ((lambda w: op_r.mv(w), (v,)),
+                      (lambda i, w: op_r.rows_mv(i, w), (idx, v)),
+                      (lambda i, w: op_r.rows_t_mv(i, w), (idx, u)),
+                      (lambda i: op_r.block_at(i), (idx,))):
+            txt = str(jax.make_jaxpr(fn)(*a))
+            assert not re.findall(r"\\ball_gather\\b", txt), txt[:2000]
+        mv_txt = str(jax.make_jaxpr(lambda w: op_r.mv(w))(v))
+        assert len(re.findall(r"\\bppermute\\b", mv_txt)) == 2 * (4 - 1)  # x+v pairs
+        # the gather path, by contrast, stages its all_gather
+        g_txt = str(jax.make_jaxpr(lambda w: op_g.mv(w))(v))
+        assert re.findall(r"\\ball_gather\\b", g_txt)
+        print("OK")
+    """)
+
+
+def test_ring_solver_counts_and_solutions():
+    """Matvec accounting is comm-invariant: cold CG = exactly its iteration
+    count on both paths (equal at a fixed budget), SGD = 1 (the finalize
+    residual), AP = 0 — and the ring solves match the dense reference. CG
+    iterates stay row-sharded through the while_loop."""
+    _run_on_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import make_params, CG, SGD, AP
+        from repro.core.distributed import distributed_solve, shard_training_rows
+        from repro.core.kernels_fn import gram
+
+        mesh = jax.make_mesh((4,), ("data",))
+        n, d = 128, 3
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (n, d))
+        y = jnp.sin(x.sum(-1))
+        p = make_params("se", lengthscale=1.0, noise=0.2, d=d)
+        xs = shard_training_rows(mesh, x)
+        dense = gram(p, x) + p.noise * jnp.eye(n)
+        ref = jnp.linalg.solve(dense, y)
+
+        # CG at a fixed iteration budget pinned below the convergence/breakdown
+        # region (so the count is budget-determined, not fp-ordering-determined):
+        # identical exact counts on both comm paths
+        cg18 = CG(max_iters=18, tol=1e-12)
+        res_r18 = distributed_solve(p, xs, y, mesh, cg18, comm="ring")
+        res_g18 = distributed_solve(p, xs, y, mesh, cg18, comm="gather")
+        assert int(res_r18.matvecs) == int(res_r18.iterations), (
+            int(res_r18.matvecs), int(res_r18.iterations))
+        assert int(res_r18.matvecs) == int(res_g18.matvecs) == 18
+
+        # converged CG: the ring path lands on the dense reference (iteration
+        # counts at a tolerance boundary may differ by the fp ordering of the
+        # psum'd inner products; cold-start accounting holds on both paths)
+        cg = CG(max_iters=300, tol=1e-8)
+        res_r = distributed_solve(p, xs, y, mesh, cg, comm="ring")
+        res_g = distributed_solve(p, xs, y, mesh, cg, comm="gather")
+        for res in (res_r, res_g):
+            assert int(res.matvecs) == int(res.iterations), (
+                int(res.matvecs), int(res.iterations))
+        np.testing.assert_allclose(np.asarray(res_r.solution), np.asarray(ref),
+                                   atol=1e-3)
+        assert not res_r.solution.sharding.is_fully_replicated, (
+            res_r.solution.sharding)
+
+        # SGD: one full matvec total (the exact finalize residual), ring == gather
+        sgd = SGD(num_steps=2000, batch_size=32, step_size_times_n=0.5,
+                  num_features=64)
+        res_rs = distributed_solve(p, xs, y, mesh, sgd, comm="ring", key=key)
+        res_gs = distributed_solve(p, xs, y, mesh, sgd, comm="gather", key=key)
+        assert int(res_rs.matvecs) == int(res_gs.matvecs) == 1
+        pred_err = float(jnp.max(jnp.abs(dense @ (
+            jnp.asarray(res_rs.solution) - ref))))
+        assert pred_err < 0.2, pred_err
+
+        # AP: exact block sub-solves, zero full matvecs cold-started
+        ap = AP(num_steps=150, block_size=32)
+        res_ra = distributed_solve(p, xs, y, mesh, ap, comm="ring", key=key)
+        assert int(res_ra.matvecs) == 0
+        np.testing.assert_allclose(np.asarray(res_ra.solution), np.asarray(ref),
+                                   atol=2e-2)
+        print("OK")
+    """)
+
+
+def test_distributed_sgd_fused_no_feature_materialisation():
+    """The ROADMAP 2a closure: distributed SGD's regulariser runs the fused
+    feature pair step through ShardedFourierFeatures — FEATURE_TRACE_COUNTS
+    proves the (n, 2q) feature matrix is never materialised (features == 0),
+    on the gather AND ring comm paths — and the sharded feature primitives
+    match their materialised single-host references."""
+    _run_on_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import ShardedGram, solve, SGD, make_params
+        from repro.core.distributed import shard_training_rows
+        from repro.core.operators import supports
+        from repro.core.rff import FourierFeatures, ShardedFourierFeatures
+        from repro.kernels.ops import FEATURE_TRACE_COUNTS, reset_feature_trace_counts
+
+        mesh = jax.make_mesh((4,), ("data",))
+        n, d, s, m = 128, 3, 2, 16
+        key = jax.random.PRNGKey(0)
+        x = jax.random.normal(key, (n, d))
+        xs = shard_training_rows(mesh, x)
+        p = make_params("se", lengthscale=0.9, noise=0.3, d=d)
+
+        # sharded feature primitives vs the materialised reference
+        ff = FourierFeatures(omega=jax.random.normal(jax.random.fold_in(key, 1),
+                                                     (m, d)),
+                             phase=jnp.zeros((m,)), signal=p.signal,
+                             backend="pallas")
+        op = ShardedGram(x=xs, params=p, mesh=mesh, comm="ring", backend="pallas")
+        assert supports(op, "wrap_features")
+        sff = op.wrap_features(ff)
+        assert isinstance(sff, ShardedFourierFeatures)
+        assert sff.num_features == ff.num_features
+        assert not supports(sff, "features")  # materialisation: deliberately absent
+        w = jax.random.normal(jax.random.fold_in(key, 2), (2 * m, s))
+        u = jax.random.normal(jax.random.fold_in(key, 3), (n, s))
+        feats = ff.features(x)
+        np.testing.assert_allclose(np.asarray(sff.phi_mv(xs, w)),
+                                   np.asarray(feats @ w), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sff.phi_t_mv(xs, u)),
+                                   np.asarray(feats.T @ u), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sff.phi_pair_mv(xs, u)),
+                                   np.asarray(feats @ (feats.T @ u)), atol=1e-5)
+
+        # trace counters: distributed SGD stages ONLY fused feature kernels —
+        # phi_t_mv + phi_mv per scan trace, zero materialised-feature dispatches
+        sgd = SGD(num_steps=60, batch_size=32, num_features=16)
+        for comm in ("ring", "gather"):
+            reset_feature_trace_counts()
+            op_c = ShardedGram(x=xs, params=p, mesh=mesh, comm=comm,
+                               backend="pallas")
+            y = jnp.sin(x.sum(-1))
+            solve(op_c, y, sgd, key=key)
+            assert FEATURE_TRACE_COUNTS["features"] == 0, dict(FEATURE_TRACE_COUNTS)
+            assert FEATURE_TRACE_COUNTS["pallas"] > 0, dict(FEATURE_TRACE_COUNTS)
+        print("OK")
+    """)
+
+
+def test_comm_flag_validation():
+    """The flag surface needs no multi-device mesh: unknown names and the
+    gather_once/ring conflict raise up front, auto resolves against the
+    byte budget (and to gather under gather_once or a 1-device mesh)."""
+    from repro.core import ShardedGram, make_params
+    from repro.core.distributed import distributed_solve
+
+    mesh = jax.make_mesh((1,), ("data",))
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 3))
+    p = make_params("se", lengthscale=1.0, noise=0.2, d=3)
+
+    with pytest.raises(ValueError, match="comm strategy"):
+        ShardedGram(x=x, params=p, mesh=mesh, comm="bogus")
+    with pytest.raises(ValueError, match="gather_once"):
+        ShardedGram(x=x, params=p, mesh=mesh, comm="ring", gather_once=True)
+    with pytest.raises(ValueError, match="comm strategy"):
+        distributed_solve(p, x, jnp.zeros(16), mesh, "cg", comm="bogus")
+    with pytest.raises(ValueError, match="gather_once"):
+        distributed_solve(p, x, jnp.zeros(16), mesh, "cg", comm="ring",
+                          gather_once=True)
+
+    # auto: panel over budget → ring; under → gather; gather_once wins;
+    # a 1-device mesh has no ring to run
+    op = ShardedGram(x=x, params=p, mesh=mesh, comm="auto")
+    assert op._resolve_comm() == "gather"  # 1-device mesh
+    big = ShardedGram(x=x, params=p, mesh=mesh, comm="auto", comm_budget_bytes=8)
+    assert big._resolve_comm() == "gather"  # still 1-device
+    once = ShardedGram(x=x, params=p, mesh=mesh, comm="auto", gather_once=True,
+                       comm_budget_bytes=8)
+    assert once._resolve_comm() == "gather"
+    # explicit comm pins regardless of budget
+    pinned = ShardedGram(x=x, params=p, mesh=mesh, comm="gather",
+                         comm_budget_bytes=0)
+    assert pinned._resolve_comm() == "gather"
+
+
+def test_auto_resolves_ring_on_multi_device():
+    _run_on_devices("""
+        import jax
+        from repro.core import ShardedGram, make_params
+        from repro.core.distributed import shard_training_rows
+
+        mesh = jax.make_mesh((4,), ("data",))
+        x = jax.random.normal(jax.random.PRNGKey(0), (128, 3))
+        p = make_params("se", lengthscale=1.0, noise=0.2, d=3)
+        xs = shard_training_rows(mesh, x)
+        small = ShardedGram(x=xs, params=p, mesh=mesh, comm="auto")
+        assert small._resolve_comm() == "gather"  # 1.5 KiB panel, default budget
+        big = ShardedGram(x=xs, params=p, mesh=mesh, comm="auto",
+                          comm_budget_bytes=8)
+        assert big._resolve_comm() == "ring"
+        print("OK")
+    """)
