@@ -18,7 +18,12 @@ its batched-solve matvec count must stay within the committed baseline (the
 whole point of coalescing D requests is ONE solve's worth of matvecs), and the
 warm resubmission row must use strictly fewer solver iterations than the cold
 row — a broken warm-start cache (stale keying, dropped x0) shows up here as
-warm == cold.
+warm == cold. With ``--refit`` it also gates the write-heavy rows: the rank-k
+incremental update (``update_state_lowrank``) must spend strictly fewer
+column-matvecs than the warm full refit at k ≪ n, with certified drift and
+posterior mean/variance parity vs the full refit both under the 1e-4 serving
+bound — a regression that re-solves the world on ``add_observations`` (or
+breaks the bordered algebra) fails here.
 
 The robust gate (``bench_robust``) closes the loop on the guardrail work
 (``docs/robustness.md``): ``solve_robust`` on a healthy system must spend
@@ -58,6 +63,7 @@ Usage:
         [--baseline results/BENCH_bench_solvers.json] \
         [--mll-baseline results/BENCH_bench_mll.json | --skip-mll] \
         [--serve-baseline results/BENCH_bench_serve.json | --skip-serve] \
+        [--refit] \
         [--robust-baseline results/BENCH_bench_robust.json | --skip-robust] \
         [--distributed-baseline results/BENCH_bench_distributed.json | --skip-distributed] \
         [--autotune-table results/AUTOTUNE_gram.json | --skip-autotune] \
@@ -135,6 +141,14 @@ def main(argv=None) -> int:
         help="skip the serving-engine gate",
     )
     ap.add_argument(
+        "--refit", action="store_true",
+        help="also gate the write-heavy serve_refit rows: the rank-k "
+        "incremental update's column-matvec spend vs the committed baseline, "
+        "strictly below the full warm refit on the fresh run, with certified "
+        "drift and lowrank-vs-full posterior parity under the 1e-4 serving "
+        "bound (requires the serve gate)",
+    )
+    ap.add_argument(
         "--robust-baseline", default="results/BENCH_bench_robust.json",
         help="committed bench_robust JSON to gate guardrail matvecs against",
     )
@@ -185,6 +199,10 @@ def main(argv=None) -> int:
         help="skip the autotune-table freshness gate",
     )
     args = ap.parse_args(argv)
+    if args.refit and args.skip_serve:
+        print("ERROR: --refit gates bench_serve rows and cannot be combined "
+              "with --skip-serve", file=sys.stderr)
+        return 2
 
     with open(args.baseline) as f:
         base_matvecs = _metric_rows(json.load(f)["rows"], "matvecs")
@@ -302,6 +320,62 @@ def main(argv=None) -> int:
             compared += 1
             if status != "ok":
                 failures.append(((t, "warm", d), base, got))
+
+        if args.refit:
+            # committed-baseline gate on the write-heavy rows: the rank-k
+            # update's column-matvec spend (k solve columns at the old n + one
+            # certification pass) must not drift above the committed numbers
+            base_refit = {
+                k: v
+                for k, v in _metric_rows(serve_rows, "matvec_columns").items()
+                if k[0] == "serve_refit"
+            }
+            if not base_refit:
+                print(f"ERROR: no serve_refit matvec_columns rows in "
+                      f"{args.serve_baseline} — regenerate it with "
+                      "benchmarks.run --only bench_serve", file=sys.stderr)
+                return 2
+            c_r, f_r = _gate(
+                f"serve refit matvec_columns vs {args.serve_baseline}",
+                base_refit,
+                _metric_rows(serve_report.rows, "matvec_columns"), args.slack,
+            )
+            if c_r == 0:
+                print("ERROR: no comparable serve_refit rows between baseline "
+                      "and smoke run", file=sys.stderr)
+                return 2
+            compared += c_r
+            failures += f_r
+            # structural gates on the fresh run itself: for k ≪ n the rank-k
+            # path must spend strictly fewer column-matvecs than the full warm
+            # refit (its spend is s-independent; the refit pays 1+s columns
+            # every iteration), its certified drift against the extended
+            # operator must stay under the 1e-4 serving bound, and its
+            # posterior must match the full refit to the same bound
+            fresh = {r.method: r.metrics for r in serve_report.rows
+                     if r.table == "serve_refit"}
+            lo_m, fu_m = fresh.get("lowrank"), fresh.get("full-warm")
+            if lo_m is None or fu_m is None:
+                print("ERROR: fresh run missing serve_refit lowrank/full-warm "
+                      "rows", file=sys.stderr)
+                return 2
+            print("\nserve refit structural gate:")
+            for name, got, ok in (
+                ("lowrank_below_full_matvec_columns",
+                 int(lo_m["matvec_columns"]),
+                 int(lo_m["matvec_columns"]) < int(fu_m["matvec_columns"])),
+                ("certified_drift", float(lo_m["rel_residual"]),
+                 float(lo_m["rel_residual"]) <= 1e-4),
+                ("posterior_mean_parity", float(lo_m["mean_err"]),
+                 float(lo_m["mean_err"]) <= 1e-4),
+                ("posterior_var_parity", float(lo_m["var_err"]),
+                 float(lo_m["var_err"]) <= 1e-4),
+            ):
+                print(f"  {name}={got:g}  {'ok' if ok else 'REGRESSION'}")
+                compared += 1
+                if not ok:
+                    failures.append((("serve_refit", "lowrank", name), 0,
+                                     int(got) if got >= 1 else 1))
 
     if not args.skip_robust:
         with open(args.robust_baseline) as f:

@@ -107,6 +107,29 @@ class PosteriorFunctions:
         )
 
 
+def pathwise_target_rows(
+    noise,
+    y_rows: jax.Array,
+    f_rows: jax.Array,
+    key: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pathwise target rows for ONE row block, in ``solve()``'s (b, δ) convention.
+
+    Returns (data (m, 1+s), delta (m, 1+s), eps (m, s)) with data =
+    [y | f_X^1 .. f_X^s] and δ = [0 | ε_1/σ² .. ε_s/σ²]; ε is drawn fresh from
+    ``key``. Because the targets are row-local (each row only needs its own
+    prior-path value and noise draw), appending k observations appends k target
+    rows: ``fit_state`` builds the whole system from one call over all n rows,
+    while ``extend_state``/``update_state_lowrank`` call it on just the k new
+    rows and keep the old rows' stored draws — which is exactly what makes the
+    old solution a valid warm start / low-rank-correctable solution.
+    """
+    eps = jnp.sqrt(noise) * jax.random.normal(key, f_rows.shape, dtype=f_rows.dtype)
+    data = jnp.concatenate([y_rows[:, None], f_rows], axis=1)
+    delta = jnp.concatenate([jnp.zeros_like(y_rows)[:, None], eps / noise], axis=1)
+    return data, delta, eps
+
+
 def pathwise_targets(
     op: Gram,
     y: jax.Array,
@@ -122,9 +145,7 @@ def pathwise_targets(
     """
     # prior defaults to backend="auto": fused RFF matvec on TPU, features on CPU
     f_x = prior(op.x)  # (n, s)
-    eps = jnp.sqrt(op.noise) * jax.random.normal(key, f_x.shape, dtype=f_x.dtype)
-    data = jnp.concatenate([y[:, None], f_x], axis=1)
-    delta = jnp.concatenate([jnp.zeros_like(y)[:, None], eps / op.noise], axis=1)
+    data, delta, _ = pathwise_target_rows(op.noise, y, f_x, key)
     return data, delta
 
 

@@ -41,6 +41,7 @@ from typing import Any, Callable, ClassVar, Dict, Optional, Tuple, Type, Union
 import jax
 
 import jax.numpy as jnp
+from jax.scipy.linalg import cho_factor, cho_solve
 
 from ...kernels.ops import BACKENDS, FEATURE_BACKENDS, PRECISIONS
 from ..operators import require_capabilities
@@ -693,3 +694,89 @@ def solve_batched(
             )
         )
     return out
+
+
+# ---------------------------------------------------------------------------
+# Bordered-system (rank-k) extension on top of solve_batched — the serving
+# engine's incremental-update primitive
+# ---------------------------------------------------------------------------
+
+
+def solve_bordered(
+    op,
+    b_cols: jax.Array,
+    c_new: jax.Array,
+    rhs_new: jax.Array,
+    sol_old: jax.Array,
+    spec: SpecLike = "cg",
+    *,
+    key: Optional[jax.Array] = None,
+    x0: Optional[jax.Array] = None,
+    **overrides: Any,
+) -> Tuple[jax.Array, SolveResult]:
+    """Extend a solved system by k rows via the bordered-system identity.
+
+    Given ``sol_old`` with (A = K_old + σ²I)·sol_old ≈ rhs_old already solved,
+    and k appended inputs with cross-covariance block B = K(X_old, X_new)
+    (``b_cols``, (n, k)), new-block covariance C = K(X_new, X_new) (``c_new``,
+    (k, k), WITHOUT noise — σ²I is added here, from ``op.noise``), and bottom
+    RHS rows ``rhs_new`` ((k, m)), the extended system
+
+        [ A   B ] [u]   [rhs_old]
+        [ Bᵀ  C+σ²I ] [w] = [rhs_new]
+
+    is solved without ever touching the (n+k)-operator:
+
+        Z = A⁻¹ B                       (ONE multi-RHS solve, k columns, old n)
+        S = (C + σ²I) − Bᵀ Z            (k×k Schur complement, Cholesky)
+        w = S⁻¹ (rhs_new − Bᵀ sol_old)  (closed-form back-substitution)
+        u = sol_old − Z w
+
+    so the iterative cost is k correction columns against the OLD operator —
+    independent of how many RHS columns m ride the update (they all share Z) —
+    instead of a fresh m-column solve at n+k. The Z solve goes through
+    :func:`solve_batched`, so it is warm-startable (``x0``, e.g. the Z of a
+    previous update at nearby hyperparameters) and its iteration/matvec
+    accounting comes back as a standard per-block :class:`SolveResult`.
+
+    Exactness: with Z and sol_old exact, the returned solution satisfies the
+    extended system exactly (the identity is algebra, not approximation); with
+    iterative Z/sol_old, the top-block residual is r_old − (B − AZ)·w, so
+    accumulated drift is observable with ONE extended-operator matvec — see
+    ``serve.state.update_state_lowrank``, which certifies exactly that way.
+
+    Returns ``(solution (n+k, m), z_result)`` where ``z_result`` is the
+    correction solve's :class:`SolveResult` (its per-column ``flags``/
+    ``rel_residual`` refer to the k Z columns).
+    """
+    s = as_spec(spec, **overrides)
+    b_cols = jnp.asarray(b_cols)
+    if b_cols.ndim != 2:
+        raise ValueError(f"b_cols must be (n, k); got shape {jnp.shape(b_cols)}")
+    n, k = b_cols.shape
+    c_new = jnp.asarray(c_new)
+    if c_new.shape != (k, k):
+        raise ValueError(
+            f"c_new must be ({k}, {k}) to match b_cols' {k} columns; got "
+            f"{c_new.shape}"
+        )
+    sol_old, _ = as_matrix_rhs(jnp.asarray(sol_old))
+    rhs_new, _ = as_matrix_rhs(jnp.asarray(rhs_new))
+    if sol_old.shape[0] != n or rhs_new.shape[0] != k:
+        raise ValueError(
+            f"sol_old rows ({sol_old.shape[0]}) must match the old n ({n}) and "
+            f"rhs_new rows ({rhs_new.shape[0]}) the k new rows ({k})"
+        )
+    (z_result,) = solve_batched(
+        op, [b_cols], s, key=key,
+        x0_blocks=None if x0 is None else [x0],
+    )
+    z = z_result.solution  # (n, k) = A⁻¹ B
+    schur = c_new + op.noise * jnp.eye(k, dtype=b_cols.dtype) - b_cols.T @ z
+    # symmetrise the fp drift from the iterative Z before factorizing — S is
+    # S.P.D. by the Schur-complement theorem whenever the extended Gram is
+    schur = 0.5 * (schur + schur.T)
+    cho = cho_factor(schur, lower=True)
+    w = cho_solve(cho, rhs_new - b_cols.T @ sol_old)  # (k, m)
+    u = sol_old - z @ w  # (n, m)
+    return jnp.concatenate([u, w], axis=0), z_result

@@ -10,6 +10,14 @@ drains, and print throughput plus the engine's cumulative counter snapshot.
 exercises the warm-start cache (repeat solves re-enter CG at their cached
 solution and finish in a couple of iterations).
 
+Write-traffic knobs (docs/serving.md): ``--write-every K`` interleaves an
+``engine.add_observations`` call after every K completed read requests,
+appending ``--write-batch`` fresh rows from a held-out pool; ``--update``
+picks the refit policy (``auto`` takes the rank-k incremental path and
+compacts when certified drift exceeds the budget, ``lowrank``/``full`` force
+one path). The summary then reports the write-side counters
+(``refits``/``lowrank_updates``/``compactions``/``cache_purged``/…).
+
 Fault-tolerance knobs (docs/robustness.md): ``--deadline-ms`` stamps a
 relative deadline on every request (expired requests complete with a
 structured ``deadline_exceeded`` error instead of queueing); ``--fault-rate``
@@ -60,10 +68,20 @@ def request_stream(num, mix, d, key, num_rows, num_samples):
                 yield kind, dict(xs=xs, num_samples=num_samples, seed=i)
 
 
-def drive(engine: GPEngine, stream, depth: int):
-    """Closed loop: keep `depth` requests outstanding until the stream drains."""
+def drive(engine: GPEngine, stream, depth: int, *, writes=(), write_every=0,
+          update="auto"):
+    """Closed loop: keep `depth` requests outstanding until the stream drains.
+
+    With ``write_every > 0``, pop one ``(x_new, y_new)`` batch off ``writes``
+    after every ``write_every`` completions and apply it via
+    ``engine.add_observations``. A write drains the in-flight queue against
+    the pre-update posterior before mutating it, so outstanding has to be
+    recounted from the handles afterwards rather than decremented.
+    """
     handles = []
     outstanding = 0
+    writes_done = 0
+    writes = list(writes)
     t0 = time.perf_counter()
     stream = iter(stream)
     exhausted = False
@@ -81,6 +99,13 @@ def drive(engine: GPEngine, stream, depth: int):
             if not h.done:  # quarantined submits complete immediately
                 outstanding += 1
         outstanding -= len(engine.step())
+        if write_every > 0 and writes:
+            completed = sum(1 for h in handles if h.done)
+            if completed // write_every > writes_done:
+                xb, yb = writes.pop(0)
+                engine.add_observations(xb, yb, update=update)
+                writes_done += 1
+                outstanding = sum(1 for h in handles if not h.done)
     return handles, time.perf_counter() - t0
 
 
@@ -101,6 +126,16 @@ def main(argv=None):
     ap.add_argument("--repeat", type=float, default=0.25,
                     help="fraction of the stream replayed with repeat seeds "
                     "(exercises the warm-start cache)")
+    ap.add_argument("--write-every", type=int, default=0,
+                    help="append a batch of fresh observations after every "
+                    "K completed requests (0 = read-only stream)")
+    ap.add_argument("--write-batch", type=int, default=4,
+                    help="rows per add_observations call")
+    ap.add_argument("--update", choices=("auto", "lowrank", "full"),
+                    default="auto",
+                    help="refit policy for interleaved writes: auto certifies "
+                    "the rank-k incremental update and falls back to a full "
+                    "warm refit when drift exceeds the compaction budget")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="relative deadline stamped on every request; "
                     "requests still queued past it complete with a "
@@ -120,7 +155,21 @@ def main(argv=None):
             raise SystemExit(f"unknown kind {kind!r} in --mix")
         mix[kind] = int(weight or 1)
 
-    x, y = synthetic_dataset(args.n, args.d, args.seed)
+    total_reads = args.requests + int(args.requests * args.repeat)
+    num_writes = (
+        total_reads // args.write_every if args.write_every > 0 else 0
+    )
+    # one synthetic draw covers the training set plus the write pool, so the
+    # appended rows come from the same function as the fit data
+    x_all, y_all = synthetic_dataset(
+        args.n + num_writes * args.write_batch, args.d, args.seed
+    )
+    x, y = x_all[:args.n], y_all[:args.n]
+    writes = [
+        (x_all[args.n + i * args.write_batch:args.n + (i + 1) * args.write_batch],
+         y_all[args.n + i * args.write_batch:args.n + (i + 1) * args.write_batch])
+        for i in range(num_writes)
+    ]
     params = make_params("matern32", lengthscale=0.5, signal=1.0, noise=0.1,
                          d=args.d)
     print(f"[serve_gp] fitting posterior state: n={args.n} d={args.d} "
@@ -163,7 +212,8 @@ def main(argv=None):
     nrep = int(len(stream) * args.repeat)
     stream = stream + stream[:nrep]  # repeat seeds → warm-start cache hits
 
-    handles, wall = drive(engine, stream, args.depth)
+    handles, wall = drive(engine, stream, args.depth, writes=writes,
+                          write_every=args.write_every, update=args.update)
     snap = engine.stats()
     served = snap["requests_served"]
     if args.json:
@@ -181,6 +231,14 @@ def main(argv=None):
         print(f"[serve_gp] latency p50={snap['total_latency_p50_s']*1e3:.1f}ms "
               f"p99={snap['total_latency_p99_s']*1e3:.1f}ms "
               f"queue p50={snap['queue_latency_p50_s']*1e3:.1f}ms")
+        if snap["refits"]:
+            print(f"[serve_gp] writes: refits={snap['refits']} "
+                  f"lowrank_updates={snap['lowrank_updates']} "
+                  f"(+{snap['lowrank_rows']} rows) "
+                  f"compactions={snap['compactions']} "
+                  f"refit_iters={snap['refit_iterations']} "
+                  f"(saved {snap['refit_iterations_saved']}) "
+                  f"cache_purged={snap['cache_purged']} n={snap['n']}")
         faults = {k: snap[k] for k in (
             "failed", "escalations", "deadline_misses", "quarantined",
             "retries", "shed", "degraded",

@@ -19,4 +19,5 @@ from .state import (  # noqa: F401
     extend_state,
     fit_state,
     hypers_fingerprint,
+    update_state_lowrank,
 )

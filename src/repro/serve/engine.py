@@ -22,8 +22,12 @@ fingerprint, request kind, request seed); repeat queries re-enter the solver
 with their previous solution as ``x0`` and converge in a couple of iterations
 — the scheduler never mixes warm and cold requests in one batch, so the win is
 visible in per-request latency, not just matvec counts. New observations go
-through ``add_observations``: a warm-started incremental refit that extends
-the same pathwise systems row-wise (see serve/state.py).
+through ``add_observations``: by default a rank-k bordered-system correction
+of the existing solution (k solve columns at the OLD n — pathwise conditioning
+makes appending rows a low-rank update of the sampled paths), certified
+against the extended operator and compacted to a full warm row-extension refit
+when accumulated drift exceeds the tolerance budget (see serve/state.py and
+docs/serving.md).
 
 Synchronous and host-driven by design (``step()`` is the vLLM idiom —
 async frontends wrap it in a task loop; ``submit`` never blocks). All device
@@ -64,7 +68,13 @@ from .scheduler import (
     GROUP_SOLVE_WARM,
     bucket,
 )
-from .state import PosteriorState, WarmStartCache, extend_state, fit_state
+from .state import (
+    PosteriorState,
+    WarmStartCache,
+    extend_state,
+    fit_state,
+    update_state_lowrank,
+)
 
 
 class EngineOverloaded(RuntimeError):
@@ -111,6 +121,14 @@ class GPEngine:
         operator_transform: optional hook wrapping the solve operator each
             batch (fault injection in tests/benchmarks; must preserve the
             LinearOperator protocol).
+
+    Incremental updates (docs/serving.md):
+        update_policy: the default ``add_observations`` path — ``"lowrank"``
+            (rank-k bordered correction), ``"full"`` (row-extension refit), or
+            ``"auto"`` (lowrank with residual-drift compaction; the default).
+        compaction_tol_factor: the auto policy's drift budget — fall back to a
+            full warm refit when a low-rank update's certified residual against
+            the extended operator exceeds this factor × the spec tolerance.
     """
 
     def __init__(
@@ -140,12 +158,21 @@ class GPEngine:
         quarantine_after: int = 2,
         escalation: Optional[EscalationPolicy] = EscalationPolicy(),
         operator_transform: Optional[Callable] = None,
+        update_policy: str = "auto",
+        compaction_tol_factor: float = 4.0,
     ):
         if overload_policy not in ("degrade", "reject"):
             raise ValueError(
                 f"overload_policy must be 'degrade' or 'reject', got "
                 f"{overload_policy!r}"
             )
+        if update_policy not in ("lowrank", "full", "auto"):
+            raise ValueError(
+                f"update_policy must be 'lowrank', 'full' or 'auto', got "
+                f"{update_policy!r}"
+            )
+        self.update_policy = update_policy
+        self.compaction_tol_factor = float(compaction_tol_factor)
         self.spec = as_spec(spec)
         self._clock = clock
         self.row_bucket_min = int(row_bucket_min)
@@ -181,7 +208,11 @@ class GPEngine:
         self._quarantine: set = set()
         # warm-start savings are reported against the most recent cold solve
         self._last_cold_iters: Optional[int] = None
-        self._cold_fit_iters = int(self.state.fit_result.iterations)
+        # refit-savings baseline: the most recent COLD solve of the fit system
+        # (EngineStats docstring has the exact semantics); re-baselined by any
+        # warm=False full refit
+        self._stats.refit_baseline_n = self.state.n
+        self._stats.refit_baseline_iters = int(self.state.fit_result.iterations)
 
     # ------------------------------------------------------------------ submit
 
@@ -679,20 +710,89 @@ class GPEngine:
 
     # ------------------------------------------------------------------- state
 
-    def add_observations(self, x_new, y_new, *, warm: bool = True) -> None:
-        """Append observations and refit incrementally (warm-started by
-        default). Drains the queue first so every pending request is served
-        against the state it was submitted under."""
+    def add_observations(
+        self, x_new, y_new, *, warm: bool = True, update: Optional[str] = None
+    ) -> None:
+        """Append observations and update the posterior state incrementally.
+
+        Drains the queue first so every pending request is served against the
+        state it was submitted under. ``update`` picks the path (defaults to
+        the engine's ``update_policy``):
+
+        * ``"lowrank"`` — rank-k bordered correction
+          (:func:`~repro.serve.state.update_state_lowrank`): k correction
+          columns solved against the OLD n-operator plus a k×k Schur
+          factorization; cost scales with k, not n+k, and is independent of
+          the posterior sample count. Applied unconditionally (the certified
+          residual is still recorded — check ``last_refit_rel_residual``).
+        * ``"full"`` — row-extension refit
+          (:func:`~repro.serve.state.extend_state`), warm-started when
+          ``warm`` (the pre-update solution zero-padded to the new n).
+        * ``"auto"`` — lowrank first, compacted to a full warm refit when the
+          corrected solution's TRUE residual against the extended operator
+          exceeds ``compaction_tol_factor × spec.tol`` (or the correction
+          solve raised a freezing flag). Successive low-rank updates
+          accumulate solve drift; the certification matvec makes that drift
+          observable, so the solver — not the cache — certifies freshness.
+
+        Every path re-keys ``hypers_key`` (it covers n), purges the now
+        unreachable warm-cache entries (counted in ``cache_purged``) and
+        resets the warm-batch cold-iteration reference.
+        """
+        update = self.update_policy if update is None else update
+        if update not in ("lowrank", "full", "auto"):
+            raise ValueError(
+                f"update must be 'lowrank', 'full' or 'auto', got {update!r}"
+            )
         self.run_until_idle()
         skey = jax.random.fold_in(self._solver_key, 10_000_000 + self._stats.refits)
+        if update == "full":
+            self._refit_full(x_new, y_new, skey, warm=warm)
+        else:
+            cand = update_state_lowrank(self.state, x_new, y_new, skey)
+            drift = float(jnp.max(cand.fit_result.rel_residual))
+            tol = float(getattr(self.spec, "tol", 1e-2))
+            accept = update == "lowrank" or (
+                bool(cand.fit_result.healthy)
+                and drift <= self.compaction_tol_factor * tol
+            )
+            if accept:
+                k = int(cand.n) - int(self.state.n)
+                self.state = cand
+                self._stats.lowrank_updates += 1
+                self._stats.lowrank_rows += k
+                self._stats.lowrank_iterations += int(cand.fit_result.iterations)
+                self._stats.lowrank_matvecs += int(cand.fit_result.matvecs)
+                self._stats.last_refit_rel_residual = drift
+            else:
+                # compaction: the correction drifted past the certifiable
+                # budget (or its solve flagged) — re-solve the extended system
+                # in full, warm-started from the PRE-update state
+                self._stats.compactions += 1
+                self._refit_full(x_new, y_new, skey, warm=True)
+        self._stats.refits += 1
+        # a new operator shape: cold-iteration reference resets with it, and
+        # warm-cache entries under the superseded hypers_key are unreachable
+        self._last_cold_iters = None
+        self._stats.cache_purged += self.cache.purge(self.state.hypers_key)
+
+    def _refit_full(self, x_new, y_new, skey, *, warm: bool) -> None:
+        """Full row-extension refit + its iteration/savings accounting."""
         self.state = extend_state(self.state, x_new, y_new, skey, warm=warm)
         iters = int(self.state.fit_result.iterations)
-        self._stats.refits += 1
         self._stats.refit_iterations += iters
+        self._stats.last_refit_rel_residual = float(
+            jnp.max(self.state.fit_result.rel_residual)
+        )
         if warm:
-            self._stats.refit_iterations_saved += max(0, self._cold_fit_iters - iters)
-        # a new operator shape: cold-iteration reference resets with it
-        self._last_cold_iters = None
+            self._stats.refit_iterations_saved += max(
+                0, self._stats.refit_baseline_iters - iters
+            )
+        else:
+            # a cold solve of the fit system at the CURRENT n: re-baseline,
+            # so later warm refits are credited against a fresh reference
+            self._stats.refit_baseline_n = self.state.n
+            self._stats.refit_baseline_iters = iters
 
     # ------------------------------------------------------------------- stats
 

@@ -18,6 +18,7 @@ import pytest
 
 from repro.core.kernels_fn import make_params
 from repro.core.operators import Gram
+from repro.core.rff import PriorSamples
 from repro.core.solvers.spec import AP, CG, SDD, SGD, solve, solve_batched
 from repro.serve import (
     FIFOScheduler,
@@ -26,6 +27,8 @@ from repro.serve import (
     bucket,
     extend_state,
     fit_state,
+    percentile,
+    update_state_lowrank,
 )
 
 
@@ -358,3 +361,270 @@ def test_add_observations_warm_refit_saves_iterations(small_problem):
     repeat = eng.sample(small_problem["x"][:2], num_samples=2, seed=1)
     assert not repeat.request.warm  # cache is keyed by (hypers, n): re-keyed
     eng.run_until_idle()
+
+# ---------------------------------------------------------------------------
+# percentile: nearest-rank definition (regression for round-half-even bias)
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_nearest_rank():
+    assert percentile([], 50) == 0.0
+    # N=1: every quantile is the single value
+    for q in (0, 50, 99, 100):
+        assert percentile([5.0], q) == 5.0
+    # N=2: p50 is the 1st order statistic (⌈1.0⌉), anything above picks the 2nd
+    assert percentile([2.0, 1.0], 0) == 1.0
+    assert percentile([2.0, 1.0], 50) == 1.0
+    assert percentile([2.0, 1.0], 51) == 2.0
+    assert percentile([2.0, 1.0], 99) == 2.0
+    # N=4: p50 is the 2nd smallest — int(round(...)) used to pick the 3rd
+    assert percentile([4.0, 1.0, 3.0, 2.0], 50) == 2.0
+    assert percentile([4.0, 1.0, 3.0, 2.0], 100) == 4.0
+    # N=100: p50 is the 50th order statistic — the old rounding picked the 51st
+    xs = [float(i) for i in range(1, 101)]
+    assert percentile(xs, 0) == 1.0
+    assert percentile(xs, 50) == 50.0
+    assert percentile(xs, 99) == 99.0
+    assert percentile(xs, 100) == 100.0
+
+
+# ---------------------------------------------------------------------------
+# rank-k incremental updates: parity, cost accounting, prior-row economy,
+# engine policies, compaction, interleaved writes
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def update_problem():
+    key = jax.random.PRNGKey(21)
+    n, k, d = 64, 5, 2
+    x = jax.random.uniform(key, (n + k, d))
+    y = jnp.sin(4.0 * x[:, 0]) + 0.5 * jnp.cos(3.0 * x[:, 1])
+    params = make_params("matern32", lengthscale=0.5, signal=1.0, noise=0.5, d=d)
+    xt = jax.random.uniform(jax.random.PRNGKey(22), (20, d))
+    return dict(x=x, y=y, params=params, n=n, k=k, xt=xt)
+
+
+@pytest.mark.parametrize(
+    "spec,parity_tol",
+    [
+        (CG(max_iters=400, tol=1e-6), 1e-4),
+        (SGD(num_steps=2000, batch_size=32, num_features=64), 5e-2),
+    ],
+    ids=["cg", "sgd"],
+)
+def test_lowrank_update_matches_full_refit(update_problem, spec, parity_tol):
+    """The bordered correction and the full row-extension refit extend the SAME
+    linear system at matching seeds (shared draw convention), so their
+    posteriors agree to solver accuracy. CG converges, so parity meets the
+    1e-4 incremental-update budget outright. SGD sits at its stochastic
+    optimisation floor (~0.1 relative residual — constant-step gradient noise,
+    cf. test_sgd_variance_reduced_objective's documented atol): there the
+    guarantees are that the bordered algebra does not AMPLIFY the solver's own
+    error, and that the certification matvec reports the drift honestly
+    (converged=False), which is exactly what the engine's auto policy uses to
+    compact instead of silently serving a drifted posterior."""
+    t = update_problem
+    n = t["n"]
+    st = fit_state(
+        t["params"], t["x"][:n], t["y"][:n], jax.random.PRNGKey(2),
+        spec=spec, num_samples=4, num_features=128,
+    )
+    ukey = jax.random.PRNGKey(3)
+    lo = update_state_lowrank(st, t["x"][n:], t["y"][n:], ukey)
+    fu = extend_state(st, t["x"][n:], t["y"][n:], ukey, warm=True)
+    ml, vl = lo.post.sample_mean_and_var(t["xt"])
+    mf, vf = fu.post.sample_mean_and_var(t["xt"])
+    np.testing.assert_allclose(np.asarray(ml), np.asarray(mf), atol=parity_tol)
+    np.testing.assert_allclose(np.asarray(vl), np.asarray(vf), atol=parity_tol)
+    np.testing.assert_allclose(
+        np.asarray(lo.post.mean(t["xt"])), np.asarray(fu.post.mean(t["xt"])),
+        atol=parity_tol,
+    )
+    drift = float(jnp.max(lo.fit_result.rel_residual))
+    assert bool(lo.fit_result.healthy)
+    if isinstance(spec, CG):
+        assert drift <= 1e-4  # certified against the extended operator
+    else:
+        assert drift <= 2.0 * float(jnp.max(fu.fit_result.rel_residual))
+        assert not bool(lo.fit_result.converged)  # auto policy sees the floor
+
+
+def test_lowrank_update_solves_only_k_columns(small_problem):
+    """Cost accounting: the rank-k path spends its iterations on k correction
+    columns against the OLD n-operator plus exactly ONE certification matvec
+    of the extended operator — strictly below the warm full refit's spend on
+    the same update, which re-solves all 1+s columns at n+k."""
+    st = fit_state(
+        small_problem["params"], small_problem["x"], small_problem["y"],
+        jax.random.PRNGKey(9), spec=CG(max_iters=300, tol=1e-4),
+        num_samples=4, num_features=128,
+    )
+    x_new = small_problem["x"][:6] + 0.02
+    y_new = small_problem["y"][:6]
+    ukey = jax.random.PRNGKey(10)
+    lo = update_state_lowrank(st, x_new, y_new, ukey)
+    fu = extend_state(st, x_new, y_new, ukey, warm=True)
+    # CG: matvecs == iterations, + the one certification matvec
+    assert int(lo.fit_result.matvecs) == int(lo.fit_result.iterations) + 1
+    assert int(lo.fit_result.iterations) < int(fu.fit_result.iterations)
+    assert int(lo.fit_result.matvecs) < int(fu.fit_result.matvecs)
+    assert lo.n == st.n + 6
+    # certified drift lands inside the engine's default auto budget (4× tol)
+    assert float(jnp.max(lo.fit_result.rel_residual)) <= 4.0 * 1e-4
+
+
+def test_incremental_updates_evaluate_prior_on_new_rows_only(
+    small_problem, monkeypatch
+):
+    """Both incremental paths reuse the cached ``f_x`` rows: the prior paths
+    are evaluated on the k NEW rows only, never re-run over all n old rows
+    (the fused feature pass is the other O(n) cost a rank-k update avoids)."""
+    st = fit_state(
+        small_problem["params"], small_problem["x"], small_problem["y"],
+        jax.random.PRNGKey(9), spec=CG(max_iters=300, tol=1e-4),
+        num_samples=4, num_features=128,
+    )
+    x_new = small_problem["x"][:6] + 0.02
+    y_new = small_problem["y"][:6]
+    rows_seen = []
+    orig_call = PriorSamples.__call__
+
+    def spy(self, xs):
+        rows_seen.append(int(jnp.asarray(xs).shape[0]))
+        return orig_call(self, xs)
+
+    monkeypatch.setattr(PriorSamples, "__call__", spy)
+    lo = update_state_lowrank(st, x_new, y_new, jax.random.PRNGKey(10))
+    fu = extend_state(st, x_new, y_new, jax.random.PRNGKey(10), warm=True)
+    assert rows_seen and max(rows_seen) == 6, rows_seen
+    # the cached rows carried over bit-exactly; only the tail is fresh
+    np.testing.assert_array_equal(np.asarray(lo.f_x[:96]), np.asarray(st.f_x))
+    np.testing.assert_array_equal(np.asarray(fu.f_x[:96]), np.asarray(st.f_x))
+
+
+def test_engine_update_policies_and_cache_purge(small_problem):
+    x_new = small_problem["x"][:6] + 0.02
+    y_new = small_problem["y"][:6]
+    with pytest.raises(ValueError, match="update_policy"):
+        _engine(small_problem, update_policy="bogus")
+
+    eng = _engine(small_problem)  # default auto
+    with pytest.raises(ValueError, match="update must be"):
+        eng.add_observations(x_new, y_new, update="bogus")
+    eng.sample(small_problem["x"][:2], num_samples=2, seed=1)
+    eng.run_until_idle()
+    assert eng.stats()["warm_cache_entries"] == 1
+    eng.add_observations(x_new, y_new)  # auto: drift within budget → lowrank
+    snap = eng.stats()
+    assert snap["refits"] == 1
+    assert snap["lowrank_updates"] == 1
+    assert snap["lowrank_rows"] == 6
+    assert snap["compactions"] == 0
+    assert snap["refit_iterations"] == 0  # no full solve ran
+    assert snap["lowrank_matvecs"] == snap["lowrank_iterations"] + 1
+    assert 0.0 < snap["last_refit_rel_residual"] <= 4.0 * 1e-4
+    assert snap["n"] == small_problem["n"] + 6
+    # the re-key made the old cache entry unreachable — it was purged, and the
+    # post-update engine still serves correctly-shaped, finite payloads
+    assert snap["cache_purged"] == 1
+    assert snap["warm_cache_entries"] == 0
+    h = eng.predict(small_problem["x"][:3])
+    eng.run_until_idle()
+    assert np.isfinite(np.asarray(h.result().value["mean"])).all()
+
+    # update="full" on an auto engine forces the refit path for one call
+    eng2 = _engine(small_problem)
+    eng2.add_observations(x_new, y_new, update="full")
+    snap2 = eng2.stats()
+    assert snap2["refits"] == 1
+    assert snap2["lowrank_updates"] == 0
+    assert snap2["refit_iterations"] > 0
+
+
+def test_engine_compaction_trigger(small_problem):
+    """A drift budget below the lowrank path's per-update certified residual
+    forces the auto fallback: the engine re-solves in full (compaction), and
+    the resulting state is certified at the spec tolerance."""
+    x_new = small_problem["x"][:6] + 0.02
+    y_new = small_problem["y"][:6]
+    eng = _engine(small_problem, compaction_tol_factor=1.0)
+    eng.add_observations(x_new, y_new)  # certified drift ~1.5× tol > 1× tol
+    snap = eng.stats()
+    assert snap["compactions"] == 1
+    assert snap["lowrank_updates"] == 0
+    assert snap["refits"] == 1
+    assert snap["refit_iterations"] > 0  # the fallback full refit ran
+    assert snap["last_refit_rel_residual"] <= 1e-4
+    assert bool(eng.state.fit_result.converged)
+    assert eng.state.n == small_problem["n"] + 6
+
+
+def test_interleaved_writes_fifo_and_bystanders(small_problem):
+    """Write-heavy interleaving: ``add_observations`` drains the queue first,
+    so a request submitted before the write is served against the state it was
+    submitted under — bit-exact with a write-free engine — and post-write
+    requests preserve FIFO semantics against the updated state."""
+    xs = small_problem["x"][:3]
+    x_new = small_problem["x"][:4] + 0.03
+    y_new = small_problem["y"][:4]
+
+    writer = _engine(small_problem)
+    bystander = _engine(small_problem)
+    hw = writer.sample(xs, num_samples=2, seed=11)
+    hb = bystander.sample(xs, num_samples=2, seed=11)
+    writer.add_observations(x_new, y_new)  # drains hw against pre-write state
+    bystander.run_until_idle()
+    np.testing.assert_array_equal(
+        np.asarray(hw.result().value["samples"]),
+        np.asarray(hb.result().value["samples"]),
+    )
+
+    # post-write: FIFO coalescing still holds on the updated state
+    ids = [
+        writer.sample(xs, num_samples=2, seed=21).request.id,
+        writer.predict(xs).request.id,
+        writer.sample(xs, num_samples=2, seed=22).request.id,
+    ]
+    first = writer.step()
+    assert [c.request_id for c in first] == [ids[0], ids[2]]
+    second = writer.step()
+    assert [c.request_id for c in second] == [ids[1]]
+    for comp in (*first, *second):
+        assert comp.ok
+        assert all(
+            np.isfinite(np.asarray(v)).all() for v in comp.value.values()
+        )
+    # a second write interleaves just as well (alternating write/read traffic)
+    writer.add_observations(x_new + 0.05, y_new)
+    h2 = writer.sample(xs, num_samples=2, seed=21)
+    writer.run_until_idle()
+    assert not h2.request.warm  # both writes re-keyed the cache
+    assert writer.state.n == small_problem["n"] + 8
+    assert np.isfinite(np.asarray(h2.result().value["samples"])).all()
+
+
+def test_refit_savings_rebaseline(small_problem):
+    """``refit_iterations_saved`` credits warm refits against the most recent
+    COLD fit-system solve; a ``warm=False`` refit re-baselines (n and
+    iterations), so savings are never measured against a stale smaller-n
+    reference."""
+    eng = _engine(small_problem)
+    snap0 = eng.stats()
+    assert snap0["refit_baseline_n"] == small_problem["n"]
+    assert snap0["refit_baseline_iters"] == int(eng.state.fit_result.iterations)
+
+    x1 = small_problem["x"][:4] + 0.02
+    y1 = small_problem["y"][:4]
+    eng.add_observations(x1, y1, update="full", warm=False)
+    snap1 = eng.stats()
+    cold_iters = int(eng.state.fit_result.iterations)
+    assert snap1["refit_baseline_n"] == small_problem["n"] + 4
+    assert snap1["refit_baseline_iters"] == cold_iters
+    assert snap1["refit_iterations_saved"] == 0  # cold refits never credit
+
+    eng.add_observations(x1 + 0.05, y1, update="full", warm=True)
+    snap2 = eng.stats()
+    warm_iters = snap2["refit_iterations"] - cold_iters
+    assert snap2["refit_baseline_n"] == small_problem["n"] + 4  # unchanged
+    assert snap2["refit_iterations_saved"] == max(0, cold_iters - warm_iters)
